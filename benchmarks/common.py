@@ -1,0 +1,38 @@
+"""Shared benchmark substrate: reduced paper corpora + timing helpers.
+
+PubMed/NYT are not shipped offline; all benchmarks run on the UC-faithful
+synthetic corpora from configs/pubmed8m.py::reduced() (DESIGN.md §7) and
+validate the paper's *relative* claims (speedups, CPR curves, filter
+exactness), not absolute wall-times.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.configs.pubmed8m import reduced as pubmed_reduced
+from repro.configs.nyt1m import reduced as nyt_reduced
+from repro.data import make_corpus
+
+
+@functools.lru_cache(maxsize=4)
+def corpus(dataset: str = "pubmed", seed: int = 0):
+    job = pubmed_reduced(seed) if dataset == "pubmed" else nyt_reduced(seed)
+    docs, df, perm, topics = make_corpus(job.corpus)
+    return job, docs, df, perm, topics
+
+
+def time_call(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,58 @@
+"""Paper Figs. 10/12 — Mult before/after ES filtering vs threshold v_th.
+
+Curve (a): cost of *constructing* the filter (Region-1/2 exact partials) —
+falls as v_th rises (fewer Region-2 entries).  Curve (b): cost of verifying
+survivors — rises as v_th rises (looser bound, more survivors).  The
+EstParams pick should sit near the joint minimum (vertical dashed line in
+the paper); we report the measured curves and the distance of the EstParams
+pick from the empirical argmin.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import corpus, csv_row
+from repro.core import SphericalKMeans, StructuralParams
+from repro.core.assignment import assignment_step
+from repro.core.estparams import estimate_params
+
+
+def run():
+    job, docs, df, perm, topics = corpus("pubmed")
+    warm = SphericalKMeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
+                           seed=0).fit(docs, df=df)
+    state = warm.state
+    est, aux = estimate_params(docs, df, state.index.means_t, state.rho_self,
+                               k=job.k)
+
+    sub = docs.slice_rows(0, 4096)
+    t_th = jnp.asarray(0, jnp.int32)   # paper Fig. 10 isolates v_th at t_th=0
+    v_grid = np.quantile(np.asarray(state.index.means_t[state.index.means_t > 0]),
+                         np.linspace(0.3, 0.995, 12))
+    before, after = [], []
+    for v in v_grid:
+        idx = state.index.with_params(StructuralParams(
+            t_th=t_th, v_th=jnp.asarray(v, jnp.float32)))
+        r = assignment_step("es", sub, idx, state.assign[:4096],
+                            state.rho_self[:4096],
+                            jnp.zeros((4096,), bool))
+        ntail = jnp.sum(sub.row_mask(), axis=1).astype(jnp.float32)
+        verify = float(jnp.sum(r.n_candidates * ntail))
+        before.append(float(r.mult) - verify)
+        after.append(verify)
+    total = np.array(before) + np.array(after)
+    best_v = float(v_grid[int(np.argmin(total))])
+    rows = [
+        csv_row("fig10/curves", 0,
+                ";".join(f"v={v:.3f}:pre={b:.3g}:post={a:.3g}"
+                         for v, b, a in zip(v_grid[::3], before[::3], after[::3]))),
+        csv_row("fig10/empirical_best_v", 0, f"v={best_v:.4f}"),
+        csv_row("fig10/estparams_pick", 0,
+                f"v={float(est.v_th):.4f};t={int(est.t_th)}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

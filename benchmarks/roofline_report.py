@@ -1,0 +1,57 @@
+"""EXPERIMENTS.md §Roofline table generator — reads results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_table(records: list[dict], mesh: str = "pod16x16",
+              variant: str = "baseline") -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+           "| 6ND/HLO | fit 16G |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in records:
+        if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
+            continue
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped ({r.get('reason','')[:40]}) | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.3e} | "
+            f"{t['t_memory_s']:.3e} | {t['t_collective_s']:.3e} | "
+            f"{t['bottleneck']} | {r.get('useful_flops_ratio', 0):.2f} | "
+            f"{'y' if r.get('fits_hbm_16g') else 'N'} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load_records()
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    err = sum(1 for r in recs if r["status"] == "error")
+    skip = sum(1 for r in recs if r["status"] == "skip")
+    return [f"roofline/cells,0,ok={ok};skip={skip};err={err}"]
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### {mesh}\n")
+        print(fmt_table(recs, mesh))

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run everything:
+
+    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only table4,fig7
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig2", "benchmarks.fig2_ucs"),
+    ("fig4", "benchmarks.fig4_cps"),
+    ("table2", "benchmarks.table2_loop_order"),
+    ("table4", "benchmarks.table4_compare"),
+    ("table6", "benchmarks.table6_nyt"),
+    ("fig7", "benchmarks.fig7_iterations"),
+    ("fig10", "benchmarks.fig10_threshold"),
+    ("fig13", "benchmarks.fig13_estparams"),
+    ("ablation", "benchmarks.ablation_thresholds"),
+    ("apph", "benchmarks.apph_seeding"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite prefixes")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            rows = mod.run()
+            for row in rows:
+                print(row, flush=True)
+            print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},elapsed",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}/_suite_FAILED,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

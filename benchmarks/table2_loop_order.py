@@ -1,0 +1,64 @@
+"""Paper Table II / App. E — loop orientation: MIVI vs DIVI (vs Ding+).
+
+The paper's point: identical multiplication counts, wildly different wall
+time, because DIVI's loop order (outer loop over *means*, inner over long
+object-postings) destroys locality.  The TPU analogue measured here: the
+mean-inverted TAAT orientation streams (B, K) accumulator tiles, while the
+object-inverted orientation streams (K, N) tiles whose gather strides are
+data-sized, not mean-sized.  Ding+ (triangle-inequality, per-object bound
+state ∝ K) is represented analytically: its Mult reduction (paper: 0.23×)
+cannot pay for its branch/locality damage — we report its Mult model only,
+since branch mispredictions have no TPU analogue (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import corpus, time_call, csv_row
+from repro.core import init_state, StructuralParams
+from repro.core.assignment import assignment_step
+
+
+def _divi_sims(docs, means_t):
+    """DIVI orientation: object-inverted index — outer over means."""
+    from repro.sparse import to_dense
+    x_dense_t = to_dense(docs).T                   # (D, N) 'object index'
+
+    def per_mean(mcol):
+        return mcol @ x_dense_t                    # (N,) one mean at a time
+
+    return jax.lax.map(per_mean, means_t.T)        # (K, N)
+
+
+def run():
+    job, docs, df, perm, topics = corpus("pubmed")
+    sub = docs.slice_rows(0, 4096)
+    k = 128
+    state = init_state(sub, k, StructuralParams.trivial(sub.dim), seed=0)
+    means_t = state.index.means_t
+
+    mivi = jax.jit(lambda: assignment_step(
+        "mivi", sub, state.index, state.assign, state.rho_self,
+        jnp.zeros_like(state.assign, bool)).rho.sum())
+    divi = jax.jit(lambda: _divi_sims(sub, means_t).sum())
+
+    _, t_mivi = time_call(lambda: mivi().block_until_ready())
+    _, t_divi = time_call(lambda: divi().block_until_ready())
+
+    res = assignment_step("mivi", sub, state.index, state.assign,
+                          state.rho_self, jnp.zeros_like(state.assign, bool))
+    mult = float(res.mult)
+    # Ding+ model (paper Table II): 0.2284x Mult, ~3x time via BM/LLCM
+    rows = [
+        csv_row("table2/mivi", t_mivi * 1e6, f"mult={mult:.3g}"),
+        csv_row("table2/divi", t_divi * 1e6,
+                f"mult={mult:.3g};time_ratio={t_divi / t_mivi:.2f}"),
+        csv_row("table2/ding+_model", 0.0,
+                f"mult={0.2284 * mult:.3g};paper_time_ratio=2.89"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,10 @@
+"""Paper Table VI — the NYT dataset comparison (same harness as Table IV)."""
+from benchmarks.table4_compare import run as _run
+
+
+def run():
+    return _run("nyt")
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

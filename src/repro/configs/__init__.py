@@ -1,0 +1,3 @@
+from repro.configs.registry import get_config, list_archs, smoke_config, ARCHS
+
+__all__ = ["get_config", "list_archs", "smoke_config", "ARCHS"]

@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Every assigned architecture has its own module exporting ``config()`` (the
+exact published shape) and ``smoke_config()`` (a reduced same-family config
+for CPU tests).  The paper's own workloads (pubmed8m / nyt1m spherical
+K-means jobs) live in ``pubmed8m.py`` / ``nyt1m.py``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mixtral-8x22b",
+    "granite-moe-3b-a800m",
+    "xlstm-125m",
+    "qwen1.5-32b",
+    "gemma3-1b",
+    "gemma-2b",
+    "qwen2.5-32b",
+    "zamba2-2.7b",
+    "musicgen-large",
+    "chameleon-34b",
+]
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCHS}")
+    return _module(name).config()
+
+
+def smoke_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCHS}")
+    return _module(name).smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — ES-ICP accelerated spherical K-means.
+
+Public API:
+    MeanIndex            — structured mean set (the paper's mean-inverted index)
+    StructuralParams     — (t_th, v_th) shared thresholds
+    estimate_params      — EstParams (paper §V / App. B–C)
+    assignment_step      — one assignment step under a chosen algorithm
+    update_step          — mean update + moving-centroid detection
+    SphericalKMeans      — Lloyd-iteration driver with diagnostics
+"""
+from repro.core.meanindex import MeanIndex, StructuralParams, build_mean_index
+from repro.core.assignment import assignment_step, ALGORITHMS
+from repro.core.update import update_step, init_state, KMeansState
+from repro.core.estparams import estimate_params, EstGrid
+from repro.core.lloyd import SphericalKMeans, LloydResult
+from repro.core import metrics
+
+__all__ = [
+    "MeanIndex", "StructuralParams", "build_mean_index",
+    "assignment_step", "ALGORITHMS",
+    "update_step", "init_state", "KMeansState",
+    "estimate_params", "EstGrid",
+    "SphericalKMeans", "LloydResult", "metrics",
+]

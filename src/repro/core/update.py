@@ -1,0 +1,113 @@
+"""Update step (paper Alg. 6) + clustering state.
+
+Responsibilities, matching the paper's five update-phase duties:
+  (1) accumulate tentative means λ_j = Σ_{x∈C_j} x (sparse scatter-add);
+  (2) refresh every object's self-similarity ρ_{a(i)} against its *new*
+      centroid — the shared pruning threshold of the next assignment step;
+  (3)–(5) rebuild the structured index (here: column stats + moving flags).
+
+Invariant-centroid detection uses exact set semantics (C_j^{[r]} == C_j^{[r-1]})
+— a centroid is invariant iff no object moved into or out of its cluster —
+rather than a float tolerance, so ICP pruning is exactly the paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse import SparseDocs
+from repro.core.meanindex import MeanIndex, StructuralParams, build_mean_index
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KMeansState:
+    index: MeanIndex
+    assign: jax.Array       # (N,) int32
+    rho_self: jax.Array     # (N,) float32 — ρ_{a(i)} vs the current means
+    rho_self_prev: jax.Array  # (N,) float32 — previous refresh (Eq. 5 input)
+    iteration: jax.Array    # () int32
+
+    def tree_flatten(self):
+        return (self.index, self.assign, self.rho_self, self.rho_self_prev, self.iteration), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def xstate(self) -> jax.Array:
+        """Eq. (5): object is 'more similar' if its refreshed self-similarity
+        did not decrease.  False on the first two iterations (no history)."""
+        return (self.rho_self >= self.rho_self_prev) & (self.iteration >= 2)
+
+
+def _accumulate_means(docs: SparseDocs, assign: jax.Array, k: int) -> jax.Array:
+    """(K, D) tentative means λ via sparse scatter-add (Alg. 6 lines 2–5)."""
+    acc = jnp.zeros((k, docs.dim), jnp.float32)
+    vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
+    return acc.at[assign[:, None], docs.ids].add(vals)
+
+
+def _self_sims(docs: SparseDocs, means_t: jax.Array, assign: jax.Array) -> jax.Array:
+    """ρ_{a(i)} for every object vs its own centroid (Alg. 6 lines 6–7)."""
+    picked = means_t[docs.ids, assign[:, None]]  # (N, P)
+    return jnp.sum(jnp.where(docs.row_mask(), docs.vals * picked, 0.0), axis=1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
+                prev_state: KMeansState, params: StructuralParams, *, k: int) -> KMeansState:
+    """Full update: new means, moving flags, refreshed ρ_self, xstate shift."""
+    lam = _accumulate_means(docs, assign, k)
+    norms = jnp.sqrt(jnp.sum(lam * lam, axis=1, keepdims=True))
+    empty = norms[:, 0] == 0.0
+    # Empty clusters keep their previous mean (still a unit vector) so the
+    # exactness property vs Lloyd from identical states is preserved.
+    means = jnp.where(empty[:, None], prev_state.index.means_t.T, lam / jnp.maximum(norms, 1e-12))
+
+    # Exact invariance: a centroid moved iff its membership changed.
+    changed = assign != prev_assign
+    moving = jnp.zeros((k,), jnp.int32)
+    moving = moving.at[assign].max(changed.astype(jnp.int32))
+    moving = moving.at[prev_assign].max(changed.astype(jnp.int32))
+    moving = moving.astype(bool)
+
+    index = build_mean_index(means, params, moving=moving)
+    rho_self = _self_sims(docs, index.means_t, assign)
+    return KMeansState(
+        index=index,
+        assign=assign,
+        rho_self=rho_self,
+        rho_self_prev=prev_state.rho_self,
+        iteration=prev_state.iteration + 1,
+    )
+
+
+def init_state(docs: SparseDocs, k: int, params: StructuralParams, *, seed: int = 0) -> KMeansState:
+    """Random seeding: K distinct documents as initial centroids.
+
+    App. H shows clustering results in this regime are initial-state
+    independent, so random seeding matches k-means++ quality at far lower
+    cost; seeding strategies are explicitly out of the paper's scope (§I).
+    """
+    key = jax.random.PRNGKey(seed)
+    pick = jax.random.choice(key, docs.n_docs, shape=(k,), replace=False)
+    sel = SparseDocs(ids=docs.ids[pick], vals=docs.vals[pick], nnz=docs.nnz[pick], dim=docs.dim)
+    means = jnp.zeros((k, docs.dim), jnp.float32)
+    rows = jnp.arange(k)[:, None]
+    means = means.at[rows, sel.ids].add(jnp.where(sel.row_mask(), sel.vals, 0.0))
+    norms = jnp.sqrt(jnp.sum(means**2, axis=1, keepdims=True))
+    means = means / jnp.maximum(norms, 1e-12)
+    index = build_mean_index(means, params)
+    n = docs.n_docs
+    return KMeansState(
+        index=index,
+        assign=jnp.zeros((n,), jnp.int32),
+        rho_self=jnp.full((n,), -jnp.inf, jnp.float32),
+        rho_self_prev=jnp.full((n,), -jnp.inf, jnp.float32),
+        iteration=jnp.asarray(0, jnp.int32),
+    )

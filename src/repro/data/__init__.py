@@ -1,0 +1,5 @@
+from repro.data.synthetic import make_corpus, CorpusSpec
+from repro.data.loader import load_uci_bow
+from repro.data.pipeline import ShardedBatches
+
+__all__ = ["make_corpus", "CorpusSpec", "load_uci_bow", "ShardedBatches"]

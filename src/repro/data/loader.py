@@ -1,0 +1,54 @@
+"""Loader for the UCI "bag of words" format the paper's PubMed set uses.
+
+Format (docword.<name>.txt, optionally gzipped)::
+
+    N
+    D
+    NNZ
+    docID termID count     # 1-based ids, one triple per line
+
+Returns the same tf-idf / L2 / df-rank pipeline output as the synthetic
+generator so benchmarks can run on the real corpora when available.
+"""
+from __future__ import annotations
+
+import gzip
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse import SparseDocs, tf_idf, l2_normalize_rows, remap_terms_by_df, df_counts
+
+
+def load_uci_bow(path: str, max_docs: int | None = None, pad_to: int | None = None):
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        n = int(f.readline())
+        d = int(f.readline())
+        _nnz = int(f.readline())
+        triples = np.loadtxt(f, dtype=np.int64)
+    if max_docs is not None:
+        triples = triples[triples[:, 0] <= max_docs]
+        n = min(n, max_docs)
+    doc = triples[:, 0] - 1
+    term = triples[:, 1] - 1
+    cnt = triples[:, 2].astype(np.float32)
+
+    order = np.lexsort((term, doc))
+    doc, term, cnt = doc[order], term[order], cnt[order]
+    nnz = np.bincount(doc, minlength=n).astype(np.int32)
+    pad = pad_to or int(nnz.max(initial=1))
+    ids = np.zeros((n, pad), np.int32)
+    vals = np.zeros((n, pad), np.float32)
+    starts = np.concatenate([[0], np.cumsum(nnz)[:-1]])
+    for i in range(n):
+        k = min(nnz[i], pad)
+        ids[i, :k] = term[starts[i] : starts[i] + k]
+        vals[i, :k] = cnt[starts[i] : starts[i] + k]
+    docs = SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                      nnz=jnp.asarray(np.minimum(nnz, pad)), dim=d)
+    df = df_counts(docs)
+    docs = tf_idf(docs, df=df)
+    docs = l2_normalize_rows(docs)
+    docs, perm = remap_terms_by_df(docs, df=df)
+    return docs, df[perm], perm

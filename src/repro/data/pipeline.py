@@ -1,0 +1,86 @@
+"""Sharded, prefetching batch pipeline.
+
+Deterministic: batch b of epoch e is a pure function of (seed, e, b) so a
+restarted job resumes mid-epoch from the checkpointed (epoch, batch) cursor —
+the fault-tolerance contract used by launch/train.py.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import SparseDocs
+
+
+class ShardedBatches:
+    """Iterates padded SparseDocs minibatches, optionally device-sharded.
+
+    Objects are sharded along the batch dim over the mesh's data axes; the
+    centroid state lives on the model axis, so the iterator never needs to
+    know about it.
+    """
+
+    def __init__(self, docs: SparseDocs, batch: int, *, seed: int = 0,
+                 shuffle: bool = True, drop_remainder: bool = True,
+                 sharding: jax.sharding.Sharding | None = None,
+                 prefetch: int = 2):
+        if drop_remainder and docs.n_docs < batch:
+            raise ValueError(f"batch {batch} > corpus {docs.n_docs}")
+        self.docs = docs
+        self.batch = batch
+        self.seed = seed
+        self.shuffle = shuffle
+        self.drop_remainder = drop_remainder
+        self.sharding = sharding
+        self.prefetch = prefetch
+        self._ids = np.asarray(docs.ids)
+        self._vals = np.asarray(docs.vals)
+        self._nnz = np.asarray(docs.nnz)
+
+    def __len__(self) -> int:
+        n = self.docs.n_docs
+        return n // self.batch if self.drop_remainder else -(-n // self.batch)
+
+    def _order(self, epoch: int) -> np.ndarray:
+        if not self.shuffle:
+            return np.arange(self.docs.n_docs)
+        return np.random.default_rng((self.seed, epoch)).permutation(self.docs.n_docs)
+
+    def _make(self, order: np.ndarray, b: int) -> SparseDocs:
+        sel = order[b * self.batch : (b + 1) * self.batch]
+        if len(sel) < self.batch:  # pad the ragged final batch with doc 0, nnz 0
+            pad = np.zeros(self.batch - len(sel), dtype=sel.dtype)
+            ids = np.concatenate([self._ids[sel], self._ids[pad] * 0])
+            vals = np.concatenate([self._vals[sel], self._vals[pad] * 0])
+            nnz = np.concatenate([self._nnz[sel], pad.astype(np.int32) * 0])
+        else:
+            ids, vals, nnz = self._ids[sel], self._vals[sel], self._nnz[sel]
+        put = (lambda a: jax.device_put(a, self.sharding)) if self.sharding else jnp.asarray
+        return SparseDocs(ids=put(ids), vals=put(vals), nnz=put(nnz), dim=self.docs.dim)
+
+    def epoch(self, epoch: int = 0, start_batch: int = 0) -> Iterator[SparseDocs]:
+        """Prefetching iterator over one epoch, resumable at start_batch."""
+        order = self._order(epoch)
+        nb = len(self)
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+
+        def producer():
+            try:
+                for b in range(start_batch, nb):
+                    q.put(self._make(order, b))
+            finally:
+                q.put(stop)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item

@@ -1,0 +1,12 @@
+from repro.distributed.kmeans import (
+    DistKMeansState,
+    dist_init_state,
+    dist_assignment_update,
+    dist_fit,
+)
+from repro.distributed.elastic import reshard_state, StepWatchdog
+
+__all__ = [
+    "DistKMeansState", "dist_init_state", "dist_assignment_update", "dist_fit",
+    "reshard_state", "StepWatchdog",
+]

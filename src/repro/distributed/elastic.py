@@ -1,0 +1,75 @@
+"""Elastic re-meshing + straggler mitigation.
+
+Node-failure posture for 1000+-node runs (DESIGN.md §4):
+
+* All object-axis state (assign / ρ_self / ρ_prev) is a pure function of the
+  object shard, so losing a data-parallel slice only loses objects that will
+  be re-assigned next iteration anyway — the recovery path is: shrink the
+  mesh, re-shard from the last checkpoint, continue.  Centroid state
+  (means_t / moving) is the only state that must survive; it is sharded over
+  "model" and checkpointed every few iterations.
+
+* `reshard_state` moves a checkpointed state onto a *different* mesh (fewer
+  or more hosts, different data-axis width).  Only the object axis changes;
+  "model" layout is preserved so no centroid shuffling happens on recovery.
+
+* `StepWatchdog` implements deterministic straggler detection: the step-time
+  budget is a multiple of the trailing-median step time; a breach raises the
+  checkpoint-restart path rather than letting one slow host serialise the
+  pod (the classic straggler mitigation for synchronous data-parallel jobs).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.kmeans import DistKMeansState, object_axes
+
+
+def reshard_state(state: DistKMeansState, new_mesh: Mesh) -> DistKMeansState:
+    """Re-place every array of `state` onto `new_mesh` (elastic rescale)."""
+    axes_obj = object_axes(new_mesh)
+    sh = lambda spec: NamedSharding(new_mesh, spec)
+    return DistKMeansState(
+        means_t=jax.device_put(state.means_t, sh(P(None, "model"))),
+        assign=jax.device_put(state.assign, sh(P(axes_obj))),
+        rho_self=jax.device_put(state.rho_self, sh(P(axes_obj))),
+        rho_prev=jax.device_put(state.rho_prev, sh(P(axes_obj))),
+        moving=jax.device_put(state.moving, sh(P("model"))),
+        iteration=state.iteration,
+    )
+
+
+class StepWatchdog:
+    """Flags straggling steps against a trailing-median budget."""
+
+    def __init__(self, factor: float = 3.0, warmup: int = 3):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: list[float] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Returns True if this step breached the straggler budget."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        breach = False
+        if len(self.times) >= self.warmup:
+            med = sorted(self.times)[len(self.times) // 2]
+            breach = dt > self.factor * med
+        self.times.append(dt)
+        if len(self.times) > 64:
+            self.times.pop(0)
+        return breach
+
+    @property
+    def budget(self) -> float | None:
+        if len(self.times) < self.warmup:
+            return None
+        return self.factor * sorted(self.times)[len(self.times) // 2]

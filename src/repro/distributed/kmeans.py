@@ -1,0 +1,439 @@
+"""Distributed spherical K-means: the paper's pipeline on a pod mesh.
+
+Layout (DESIGN.md §4):
+  objects   — sharded over the object axes ("pod","data") / ("data",);
+  centroids — sharded over "model": each device owns K/|model| columns of the
+              transposed mean matrix (its slice of the mean-inverted index);
+  thresholds (t_th, v_th, ρ_max) — replicated; the paper's "shared with all
+              objects" becomes "shared across the mesh".
+
+One fused step = assignment + update:
+  1. per (object-shard × centroid-shard): ES gathering + filter on the local
+     K/|model| centroids, local top-1;
+  2. (max, argmin-index) all-reduce over "model" — O(B) bytes/object batch,
+     never O(B·K).  This is the only assignment-phase collective;
+  3. update: local cluster sums for owned centroids, psum over object axes
+     (compiles to reduce-scatter + all-gather), L2 normalise;
+  4. ρ_self refresh where the centroid shard lives, psum over "model";
+  5. exact invariant-centroid (ICP) flags from membership deltas.
+
+Object batching inside the shard keeps the (chunk × K_loc) similarity tile
+VMEM/HBM-friendly; chunk size is the software-pipelining knob measured in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def object_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes except 'model' shard the object dimension."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistKMeansState:
+    """Global jax.Arrays with the shardings described above."""
+    means_t: jax.Array    # (D, K)   P(None, 'model')
+    assign: jax.Array     # (N,)     P(obj)
+    rho_self: jax.Array   # (N,)     P(obj)
+    rho_prev: jax.Array   # (N,)     P(obj)
+    moving: jax.Array     # (K,)     P('model')
+    iteration: jax.Array  # ()       replicated
+
+
+def _taat_local(ids, vals, means_t, t_th, v_th, unroll=False, p_block=1):
+    """TAAT pass over one object chunk vs the local centroid shard.
+    Returns (sims, rho12, y) each (C, K_loc).
+
+    p_block > 1 (§Perf): gather p_block posting rows per scan step and fold
+    their contributions before touching the (C, K_loc) accumulators — the
+    accumulator read/write traffic (the dominant memory-term component)
+    drops ~p_block× while gather traffic is unchanged.
+    """
+    c, p = ids.shape
+    k_loc = means_t.shape[1]
+    pb = p_block
+
+    def body(carry, xs):
+        sims, rho12, y = carry
+        idp, vp = xs                              # (pb, C)
+        rows = means_t[idp]                       # (pb, C, K_loc)
+        contrib = vp[..., None] * rows
+        tail = (idp >= t_th)[..., None]
+        hi = rows >= v_th
+        exact = jnp.where(tail, hi, True)
+        return (sims + jnp.sum(contrib, 0),
+                rho12 + jnp.sum(jnp.where(exact, contrib, 0.0), 0),
+                y + jnp.sum(jnp.where(tail & ~hi, vp[..., None], 0.0), 0)), None
+
+    z = jnp.zeros((c, k_loc), jnp.float32)
+    ids, vals = _pad_p(ids, vals, pb)
+    pp = ids.shape[1]
+    xs = (ids.T.reshape(pp // pb, pb, c), vals.T.reshape(pp // pb, pb, c))
+    (sims, rho12, y), _ = lax.scan(body, (z, z, z), xs, unroll=unroll)
+    return sims, rho12, y
+
+
+def _pad_p(ids, vals, pb: int):
+    p = ids.shape[1]
+    rem = (-p) % pb
+    if rem:
+        ids = jnp.pad(ids, ((0, 0), (0, rem)))
+        vals = jnp.pad(vals, ((0, 0), (0, rem)))
+    return ids, vals
+
+
+def _gather_verify_local(ids, vals, nnz, means_t, t_th, v_th, rho_max, col_ok,
+                         unroll=False, p_block=1, p_tail: int = 16):
+    """Paper-faithful two-phase assignment (§Perf variant, Algs. 2–3):
+
+    Phase G: one TAAT pass accumulating only (rho12, y) — the full exact
+    similarity is NOT computed for every centroid (that is MIVI\'s cost).
+    Phase V: the exact Region-3 partial from a second pass over a compacted
+    live-suffix window.  ids ascend by df-rank within a row, so the >= t_th
+    entries are the last (ntH)_i LIVE positions; the caller guarantees
+    max_i (ntH)_i <= p_tail (computed after EstParams fixes t_th — the same
+    moment the paper restructures its index).  Exactness is preserved:
+    windows that reach below position 0 are validity-masked.
+
+    Returns (exact_masked, survivors).
+    """
+    c, p = ids.shape
+    k_loc = means_t.shape[1]
+    pb = p_block
+    z = jnp.zeros((c, k_loc), jnp.float32)
+
+    def g_body(carry, xs):
+        rho12, y = carry
+        idp, vp = xs
+        rows = means_t[idp]
+        contrib = vp[..., None] * rows
+        tail = (idp >= t_th)[..., None]
+        hi = rows >= v_th
+        exact = jnp.where(tail, hi, True)
+        return (rho12 + jnp.sum(jnp.where(exact, contrib, 0.0), 0),
+                y + jnp.sum(jnp.where(tail & ~hi, vp[..., None], 0.0), 0)), None
+
+    gi, gv = _pad_p(ids, vals, pb)
+    pp = gi.shape[1]
+    xs = (gi.T.reshape(pp // pb, pb, c), gv.T.reshape(pp // pb, pb, c))
+    (rho12, y), _ = lax.scan(g_body, (z, z), xs, unroll=unroll)
+    surv = ((rho12 + y * v_th) > rho_max[:, None]) & col_ok
+
+    # compacted live-suffix window [nnz - p_tail, nnz)
+    off = nnz[:, None] - p_tail + jnp.arange(p_tail)[None, :]
+    okw = off >= 0
+    idx = jnp.clip(off, 0, p - 1)
+    tids = jnp.take_along_axis(ids, idx, axis=1)
+    tvals = jnp.where(okw, jnp.take_along_axis(vals, idx, axis=1), 0.0)
+
+    def v_body(rho3, xs):
+        idp, vp = xs
+        rows = means_t[idp]
+        tail = (idp >= t_th)[..., None]
+        lo = rows < v_th
+        add = jnp.where(tail & lo, vp[..., None] * rows, 0.0)
+        return rho3 + jnp.sum(add, 0), None
+
+    ti, tv = _pad_p(tids, tvals, pb)
+    pt = ti.shape[1]
+    xsv = (ti.T.reshape(pt // pb, pb, c), tv.T.reshape(pt // pb, pb, c))
+    rho3, _ = lax.scan(v_body, z, xsv, unroll=unroll)
+    exact = jnp.where(surv, rho12 + rho3, -jnp.inf)
+    return exact, surv
+
+
+def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
+                t_th, v_th, iteration, *, algo: str, axes_obj, k: int,
+                obj_chunk: int, lambda_dtype=jnp.float32,
+                taat_unroll: bool = False, two_phase: bool = False,
+                p_block: int = 1, p_tail: int = 16):
+    n_loc, p = ids.shape
+    d, k_loc = means_t.shape
+    k0 = lax.axis_index("model") * k_loc
+    xstate = (rho_self >= rho_prev) & (iteration >= 2) & valid
+
+    # ---------------- assignment, chunked over local objects ---------------
+    nc = n_loc // obj_chunk
+
+    def chunk_fn(args):
+        cids, cvals, cval, cassign, crho, cxs = args
+        col_ok = moving[None, :] | ~cxs[:, None]
+        if two_phase and algo == "esicp":
+            cnnz = jnp.sum(cvals != 0.0, axis=1)   # tf-idf: live ⇔ val > 0
+            masked, surv = _gather_verify_local(
+                cids, cvals, cnnz, means_t, t_th, v_th, crho, col_ok,
+                unroll=taat_unroll, p_block=p_block, p_tail=p_tail)
+        else:
+            sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th,
+                                         unroll=taat_unroll, p_block=p_block)
+            if algo == "esicp":
+                surv = ((rho12 + y * v_th) > crho[:, None]) & col_ok
+            elif algo == "mivi":
+                surv = jnp.ones_like(col_ok)
+            elif algo == "icp":
+                surv = col_ok
+            else:
+                raise ValueError(algo)
+            masked = jnp.where(surv, sims, -jnp.inf)
+        lbest = jnp.max(masked, axis=1)
+        lidx = (jnp.argmax(masked, axis=1) + k0).astype(jnp.int32)
+        best = lax.pmax(lbest, "model")
+        cand = jnp.where(lbest >= best, lidx, k)      # lowest global id wins
+        widx = lax.pmin(cand, "model").astype(jnp.int32)
+        improve = (best > crho) & cval
+        na = jnp.where(improve, widx, cassign)
+        n_surv = jnp.sum(jnp.where(cval[:, None], surv, False),
+                         dtype=jnp.float32)
+        return na, n_surv
+
+    resh = lambda a: a.reshape((nc, obj_chunk) + a.shape[1:])
+    na, n_surv = lax.map(chunk_fn, (resh(ids), resh(vals), resh(valid),
+                                    resh(assign), resh(rho_self),
+                                    resh(xstate)))
+    assign_new = na.reshape(n_loc)
+    n_candidates = lax.psum(jnp.sum(n_surv), axes_obj + ("model",))
+
+    # ---------------- update: cluster sums for owned centroids -------------
+    local_a = assign_new - k0
+    in_range = (local_a >= 0) & (local_a < k_loc) & valid
+    safe_a = jnp.where(in_range, local_a, k_loc)
+
+    def acc_body(ci, lam):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
+        cvals = jnp.where(sl(in_range)[:, None], sl(vals), 0.0)
+        return lam.at[sl(safe_a)[:, None], sl(ids)].add(cvals)
+
+    lam = lax.fori_loop(0, nc, acc_body,
+                        jnp.zeros((k_loc + 1, d), jnp.float32))[:k_loc]
+    # §Perf variant: compress the cluster-sum all-reduce (the step's dominant
+    # collective) to bf16 — the k-means analogue of gradient compression.
+    # Not bit-exact vs Lloyd; f32 default preserves the acceleration contract.
+    lam = lax.psum(lam.astype(lambda_dtype), axes_obj).astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(lam * lam, axis=1, keepdims=True))
+    empty = norms[:, 0] == 0.0
+    means_new = jnp.where(empty[:, None], means_t.T.astype(jnp.float32),
+                          lam / jnp.maximum(norms, 1e-12))
+    means_new_t = means_new.T.astype(means_t.dtype)             # (D, K_loc)
+
+    # ---------------- ρ_self refresh (Alg. 6 lines 6–7) --------------------
+    def rho_body(ci, out):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
+        cids, ca, cin = sl(ids), sl(safe_a), sl(in_range)
+        picked = means_new_t[cids, jnp.minimum(ca, k_loc - 1)[:, None]]
+        r = jnp.sum(jnp.where(cin[:, None], sl(vals) * picked, 0.0), axis=1)
+        return lax.dynamic_update_slice_in_dim(out, r, ci * obj_chunk, 0)
+
+    rho_new = lax.fori_loop(0, nc, rho_body, jnp.zeros((n_loc,), jnp.float32))
+    rho_new = lax.psum(rho_new, "model")    # exactly one shard contributes
+
+    # ---------------- exact ICP flags from membership deltas ---------------
+    changed = (assign_new != assign) & valid
+    old_local = jnp.where((assign - k0 >= 0) & (assign - k0 < k_loc),
+                          assign - k0, k_loc)
+    mv = jnp.zeros((k_loc + 1,), jnp.int32)
+    mv = mv.at[safe_a].max(changed.astype(jnp.int32))
+    mv = mv.at[old_local].max(changed.astype(jnp.int32))
+    moving_new = lax.psum(mv[:k_loc], axes_obj) > 0
+
+    n_changed = lax.psum(jnp.sum(changed, dtype=jnp.float32), axes_obj)
+    objective = lax.psum(jnp.sum(jnp.where(valid, rho_new, 0.0)), axes_obj)
+
+    return (means_new_t, assign_new, rho_new, rho_self, moving_new,
+            n_changed, n_candidates, objective)
+
+
+def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
+                 obj_chunk: int = 2048, lambda_dtype=jnp.float32,
+                 taat_unroll: bool = False, two_phase: bool = False,
+                 p_block: int = 1, p_tail: int = 16):
+    """Builds the jitted fused assignment+update step for `mesh`.
+
+    taat_unroll: dry-run costing mode — unrolls the P-step TAAT scan so
+    XLA's cost model counts every multiply (launch/dryrun.py pass B)."""
+    axes_obj = object_axes(mesh)
+    po = P(axes_obj)
+    specs_in = (
+        P(axes_obj, None), P(axes_obj, None), po,       # ids, vals, valid
+        po, po, po,                                     # assign, rho_self, rho_prev
+        P(None, "model"), P("model"),                   # means_t, moving
+        P(), P(), P(),                                  # t_th, v_th, iteration
+    )
+    specs_out = (
+        P(None, "model"), po, po, po, P("model"),
+        P(), P(), P(),
+    )
+    fn = jax.shard_map(
+        partial(_step_local, algo=algo, axes_obj=axes_obj, k=k,
+                obj_chunk=obj_chunk, lambda_dtype=lambda_dtype,
+                taat_unroll=taat_unroll, two_phase=two_phase,
+                p_block=p_block, p_tail=p_tail),
+        mesh=mesh, in_specs=specs_in, out_specs=specs_out, check_vma=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Drivers.
+# ---------------------------------------------------------------------------
+
+def dist_init_state(docs, k: int, mesh: Mesh, *, seed: int = 0) -> DistKMeansState:
+    """Seed K centroids from random documents, shard everything onto `mesh`."""
+    from repro.core.update import init_state
+    from repro.core.meanindex import StructuralParams
+
+    n_model = mesh.shape["model"]
+    if k % n_model:
+        raise ValueError(f"K={k} must divide over the model axis ({n_model})")
+    core = init_state(docs, k, StructuralParams.trivial(docs.dim), seed=seed)
+    axes_obj = object_axes(mesh)
+    sh = lambda spec: NamedSharding(mesh, spec)
+    return DistKMeansState(
+        means_t=jax.device_put(core.index.means_t, sh(P(None, "model"))),
+        assign=jax.device_put(core.assign, sh(P(axes_obj))),
+        rho_self=jax.device_put(core.rho_self, sh(P(axes_obj))),
+        rho_prev=jax.device_put(core.rho_self_prev, sh(P(axes_obj))),
+        moving=jax.device_put(jnp.ones((k,), bool), sh(P("model"))),
+        iteration=jnp.asarray(0, jnp.int32),
+    )
+
+
+def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
+                           t_th, v_th):
+    """One fused step; returns (new_state, diag dict)."""
+    (means_t, assign, rho_self, rho_prev, moving,
+     n_changed, n_cand, objective) = step_fn(
+        ids, vals, valid, state.assign, state.rho_self, state.rho_prev,
+        state.means_t, state.moving,
+        jnp.asarray(t_th, jnp.int32), jnp.asarray(v_th, jnp.float32),
+        state.iteration)
+    new = DistKMeansState(means_t=means_t, assign=assign, rho_self=rho_self,
+                          rho_prev=rho_prev, moving=moving,
+                          iteration=state.iteration + 1)
+    diag = {"n_changed": n_changed, "n_candidates": n_cand,
+            "objective": objective}
+    return new, diag
+
+
+def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
+             max_iter: int = 40, obj_chunk: int = 1024, seed: int = 0,
+             est_iters=(1, 2), df=None, checkpoint_dir: str | None = None,
+             checkpoint_every: int = 5, **step_kw):
+    """Full distributed Lloyd loop with EstParams and optional checkpointing."""
+    import numpy as np
+    from repro.core.estparams import estimate_params
+    from repro.core.meanindex import StructuralParams
+
+    n = docs.n_docs
+    axes_obj = object_axes(mesh)
+    n_obj_shards = int(np.prod([mesh.shape[a] for a in axes_obj]))
+    pad = (-n) % (n_obj_shards * obj_chunk)
+    sh = lambda spec: NamedSharding(mesh, spec)
+
+    ids = jnp.pad(docs.ids, ((0, pad), (0, 0)))
+    vals = jnp.pad(docs.vals, ((0, pad), (0, 0)))
+    valid = jnp.arange(n + pad) < n
+    ids = jax.device_put(ids, sh(P(axes_obj, None)))
+    vals = jax.device_put(vals, sh(P(axes_obj, None)))
+    valid = jax.device_put(valid, sh(P(axes_obj)))
+
+    state = dist_init_state(docs, k, mesh, seed=seed)
+    if pad:
+        state = dataclasses.replace(
+            state,
+            assign=jax.device_put(jnp.pad(state.assign, (0, pad)), sh(P(axes_obj))),
+            rho_self=jax.device_put(jnp.pad(state.rho_self, (0, pad),
+                                            constant_values=-jnp.inf), sh(P(axes_obj))),
+            rho_prev=jax.device_put(jnp.pad(state.rho_prev, (0, pad),
+                                            constant_values=-jnp.inf), sh(P(axes_obj))),
+        )
+    two_phase = step_kw.pop("two_phase", False)
+    # iterations 1–2 run trivial params (t_th=0): everything is Region 3, so
+    # the windowed verification can't bound ntH — run single-phase until
+    # EstParams fixes t_th, then rebuild the step (paper Alg. 6 does the same
+    # index restructuring at that moment).
+    step_fn = make_step_fn(mesh, algo=algo, k=k, obj_chunk=obj_chunk, **step_kw)
+    params = StructuralParams.trivial(docs.dim)
+
+    if df is None:
+        from repro.sparse import df_counts
+        df = df_counts(docs)
+
+    history = []
+    converged = False
+    for r in range(1, max_iter + 1):
+        state, diag = dist_assignment_update(step_fn, state, ids, vals, valid,
+                                             params.t_th, params.v_th)
+        if algo == "esicp" and r in est_iters:
+            params, _ = estimate_params(docs, df, state.means_t[:, :k],
+                                        state.rho_self[:n], k=k)
+            if two_phase and r == max(est_iters):
+                nt_h = int(jnp.max(jnp.sum(
+                    (docs.ids >= params.t_th) & docs.row_mask(), axis=1)))
+                pb = step_kw.get("p_block", 1)
+                p_tail = max(nt_h + ((-nt_h) % max(pb, 1)), pb)
+                step_fn = make_step_fn(mesh, algo=algo, k=k,
+                                       obj_chunk=obj_chunk, two_phase=True,
+                                       p_tail=p_tail, **step_kw)
+        history.append({"iteration": r,
+                        "n_changed": float(diag["n_changed"]),
+                        "cpr": float(diag["n_candidates"]) / (n * k),
+                        "objective": float(diag["objective"]),
+                        "t_th": int(params.t_th), "v_th": float(params.v_th)})
+        if checkpoint_dir and r % checkpoint_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_dir, {
+                "means_t": state.means_t, "assign": state.assign,
+                "rho_self": state.rho_self, "rho_prev": state.rho_prev,
+                "moving": state.moving, "iteration": state.iteration,
+                "t_th": params.t_th, "v_th": params.v_th}, step=r)
+        if history[-1]["n_changed"] == 0:
+            converged = True
+            break
+    return state, history, converged
+
+
+def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048):
+    """Serving mode: classify new documents against a FROZEN mean index.
+
+    The paper's engine as a lookup service — the assignment phase only
+    (ES gathering + filter + (max, argmin-id) reduction over 'model'),
+    no update step, no ICP state.  Returns assign (N,), sims (N,).
+    """
+    axes_obj = object_axes(mesh)
+    po = P(axes_obj)
+
+    def _local(ids, vals, valid, means_t, t_th, v_th):
+        n_loc, p = ids.shape
+        d, k_loc = means_t.shape
+        k0 = lax.axis_index("model") * k_loc
+        nc = n_loc // obj_chunk
+
+        def chunk_fn(args):
+            cids, cvals, cval = args
+            sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th)
+            # serving has no previous similarity: bound via running best —
+            # one exact pass, filter diagnostics only
+            masked = jnp.where(jnp.ones_like(sims, bool), sims, -jnp.inf)
+            lbest = jnp.max(masked, axis=1)
+            lidx = (jnp.argmax(masked, axis=1) + k0).astype(jnp.int32)
+            best = lax.pmax(lbest, "model")
+            cand = jnp.where(lbest >= best, lidx, k)
+            widx = lax.pmin(cand, "model").astype(jnp.int32)
+            return jnp.where(cval, widx, 0), jnp.where(cval, best, 0.0)
+
+        resh = lambda a: a.reshape((nc, obj_chunk) + a.shape[1:])
+        aa, ss = lax.map(chunk_fn, (resh(ids), resh(vals), resh(valid)))
+        return aa.reshape(n_loc), ss.reshape(n_loc)
+
+    fn = jax.shard_map(_local, mesh=mesh,
+                       in_specs=(P(axes_obj, None), P(axes_obj, None), po,
+                                 P(None, "model"), P(), P()),
+                       out_specs=(po, po), check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the assignment-step hot spots.
+
+The paper's whole contribution lives in the assignment inner loop, so that is
+where the kernels are:
+
+  sparse_sim      — sparse-object × dense-mean-block similarities (MIVI core)
+  esicp_gather    — fused Region-1/2 partial similarity + Region-3 L1 mass
+  esicp_filter    — fused upper bound + survivor mask + |Z_i| count
+  segment_update  — assignment scatter-add of sparse objects into mean sums
+  flash_attention — online-softmax banded-causal attention (LM hot spot)
+
+Every kernel is written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
+MXU-shaped matmuls) and validated on CPU in interpret mode against the pure
+jnp oracles in ``ref.py``.
+"""
+from repro.kernels.ops import (
+    sparse_sim,
+    esicp_gather,
+    esicp_filter,
+    segment_update,
+    flash_attention,
+)
+from repro.kernels import ref
+
+__all__ = ["sparse_sim", "esicp_gather", "esicp_filter", "segment_update",
+           "flash_attention", "ref"]

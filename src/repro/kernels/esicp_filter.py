@@ -1,0 +1,68 @@
+"""Pallas kernel: fused ES upper bound + survivor mask + |Z_i| count.
+
+Implements Eq. (4) + the filter comparison (Alg. 3 lines 7–10) in one VPU
+pass — the bound, the compare, and the per-object candidate count never
+round-trip to HBM.  The moving-centroid (ICP) lane mask is an operand, so
+G_0 vs G_1 is the same kernel with a different mask (no code divergence,
+exactly the paper's shared-structure trick).
+
+    ub[b,k]    = rho12 + y · v_th
+    mask[b,k]  = (ub > rho_max[b]) & col_ok[b,k]
+    count[b]   = Σ_k mask
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _filter_kernel(vth_ref, rho_ref, y_ref, rhomax_ref, colok_ref,
+                   mask_ref, count_ref):
+    k_idx = pl.program_id(1)
+    v_th = vth_ref[0]
+    ub = rho_ref[...] + y_ref[...] * v_th
+    ok = (ub > rhomax_ref[...]) & (colok_ref[...] != 0)
+    mask_ref[...] = ok.astype(jnp.int8)
+    partial = jnp.sum(ok.astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        count_ref[...] = partial
+
+    @pl.when(k_idx > 0)
+    def _acc():
+        count_ref[...] += partial
+
+
+def esicp_filter_pallas(rho12, y, rho_max, col_ok, v_th, *,
+                        b_blk: int = 128, k_blk: int = 256,
+                        interpret: bool = False):
+    """rho12/y: (B, K); rho_max: (B,); col_ok: (B, K) int8/bool.
+    Returns (mask (B, K) int8, count (B,) int32)."""
+    b, k = rho12.shape
+    assert b % b_blk == 0 and k % k_blk == 0
+    grid = (b // b_blk, k // k_blk)
+    vth = jnp.reshape(jnp.asarray(v_th, jnp.float32), (1,))
+    rho_max2 = rho_max[:, None]                       # (B, 1) for broadcasting
+    mask, count = pl.pallas_call(
+        _filter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((b_blk, k_blk), lambda i, j: (i, j)),
+            pl.BlockSpec((b_blk, k_blk), lambda i, j: (i, j)),
+            pl.BlockSpec((b_blk, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((b_blk, k_blk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_blk, k_blk), lambda i, j: (i, j)),
+            pl.BlockSpec((b_blk, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int8),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vth, rho12, y, rho_max2, col_ok.astype(jnp.int8))
+    return mask, count[:, 0]

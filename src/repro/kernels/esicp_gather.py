@@ -1,0 +1,86 @@
+"""Pallas kernel: fused ES-filter gathering phase (paper Alg. 3 / G_0, G_1).
+
+One pass over the mean-inverted index producing, per (object, centroid):
+
+    rho12[b,k] = Σ_{s<t_th} u·v  +  Σ_{s≥t_th, v≥v_th} u·v     (exact part)
+    y[b,k]     = Σ_{s≥t_th, v<v_th} u                          (Region-3 mass)
+
+The three-region classification is two uniform masks over the means block —
+the shared (t_th, v_th) thresholds are scalar-prefetch operands living in
+SMEM, so the kernel body has no data-dependent branches at all (the paper's
+AFM requirement, realised as TPU select lanes).
+
+Same densify-then-MXU structure as sparse_sim; both matmuls (rho12, y) reuse
+one slab, doubling arithmetic intensity per HBM byte of object data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sparse_sim import _densify
+
+
+def _gather_kernel(scalars_ref, ids_ref, vals_ref, means_ref,
+                   rho_ref, y_ref, *, d_blk: int):
+    d_idx = pl.program_id(2)
+    d0 = d_idx * d_blk
+    t_th = scalars_ref[0]
+    v_th = scalars_ref[1]
+
+    slab = _densify(ids_ref[...], vals_ref[...], d0, d_blk)
+    means = means_ref[...]                                   # (D_blk, K_blk)
+
+    term = d0 + jax.lax.broadcasted_iota(jnp.int32, means.shape, 0)
+    tail = (term.astype(jnp.float32) >= t_th)
+    hi = means >= v_th
+    exact = jnp.where(tail, hi, True)
+
+    rho = jnp.dot(slab, jnp.where(exact, means, 0.0),
+                  preferred_element_type=jnp.float32)
+    yac = jnp.dot(slab, (tail & ~hi).astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        rho_ref[...] = rho
+        y_ref[...] = yac
+
+    @pl.when(d_idx > 0)
+    def _acc():
+        rho_ref[...] += rho
+        y_ref[...] += yac
+
+
+def esicp_gather_pallas(ids, vals, means_t, t_th, v_th, *,
+                        b_blk: int = 128, k_blk: int = 128, d_blk: int = 256,
+                        interpret: bool = False):
+    """Returns (rho12, y), each (B, K) float32."""
+    b, p = ids.shape
+    d, k = means_t.shape
+    assert b % b_blk == 0 and k % k_blk == 0 and d % d_blk == 0 and p % 8 == 0
+    grid = (b // b_blk, k // k_blk, d // d_blk)
+    scalars = jnp.stack([jnp.asarray(t_th, jnp.float32),
+                         jnp.asarray(v_th, jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, d_blk=d_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j, l: (0,)),        # shared thresholds
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((d_blk, k_blk), lambda i, j, l: (l, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_blk, k_blk), lambda i, j, l: (i, j)),
+            pl.BlockSpec((b_blk, k_blk), lambda i, j, l: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, ids, vals, means_t)

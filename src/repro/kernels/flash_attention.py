@@ -1,0 +1,95 @@
+"""Pallas kernel: flash attention (online-softmax, banded-causal).
+
+The LM-side hot spot: the q-chunked jnp path (models/layers.py) still
+materialises (q_chunk × S) score rows in HBM; this kernel keeps the running
+max/denominator and the output tile in VMEM and streams K/V blocks, so HBM
+traffic is O(S·d) instead of O(S²) per head.
+
+    grid = (B·H, Sq tiles, Sk tiles)             # Sk sequential → online
+    m_i, l_i, acc carried in VMEM scratch across the Sk dimension
+    banded-causal mask: k <= q and q - k < window (window < 0 → full)
+
+Sliding-window layers get tile-level work skipping for free: fully-masked
+K/V tiles still stream (uniform grid — the AFM no-branch rule) but
+contribute zeros; a production grid would prune them via index remapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  sk_blk: int, sq_blk: int, window: int, scale: float,
+                  sk_real: int):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (Sq_blk, hd)
+    k = k_ref[0]                                   # (Sk_blk, hd)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_idx * sq_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kv_idx * sk_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    w = jnp.iinfo(jnp.int32).max if window < 0 else window
+    mask = (k_pos <= q_pos) & ((q_pos - k_pos) < w) & (k_pos < sk_real)
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # masked lanes contribute exactly zero (fully-masked rows output 0)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (Sq_blk, Sk_blk)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, window: int = -1,
+                           sq_blk: int = 128, sk_blk: int = 128,
+                           interpret: bool = False, sk_real: int | None = None):
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — heads pre-folded into batch.
+    Returns (BH, Sq, hd) float32. Causal with optional sliding window.
+    sk_real: logical key length (padded key positions are masked out)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    sk_real = sk if sk_real is None else sk_real
+    assert sq % sq_blk == 0 and sk % sk_blk == 0, (sq, sk, sq_blk, sk_blk)
+    grid = (bh, sq // sq_blk, sk // sk_blk)
+    scale = 1.0 / (hd ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, sk_blk=sk_blk, sq_blk=sq_blk,
+                          window=window, scale=scale, sk_real=sk_real),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, sq_blk, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, sk_blk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, sk_blk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq_blk, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((sq_blk, 1), jnp.float32),   # running max m_i
+            pltpu.VMEM((sq_blk, 1), jnp.float32),   # running denom l_i
+            pltpu.VMEM((sq_blk, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,114 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Handles block-alignment padding (to MXU-friendly multiples), dispatches to
+interpret mode off-TPU, and slices results back to logical shapes.  Callers
+see plain jnp-like functions; the kernels see only aligned shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import sparse_sim as _ss
+from repro.kernels import esicp_gather as _eg
+from repro.kernels import esicp_filter as _ef
+from repro.kernels import segment_update as _su
+from repro.kernels import flash_attention as _fa
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis, value=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _align(ids, vals, means_t, b_blk, k_blk, d_blk):
+    ids = _pad_to(_pad_to(ids, 8, 1), b_blk, 0)
+    vals = _pad_to(_pad_to(vals, 8, 1), b_blk, 0)
+    means_t = _pad_to(_pad_to(means_t, d_blk, 0), k_blk, 1)
+    return ids, vals, means_t
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
+def sparse_sim(ids, vals, means_t, *, b_blk=128, k_blk=128, d_blk=256,
+               interpret: bool | None = None):
+    """(B, K) exact similarities of padded sparse objects vs dense means."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, k = ids.shape[0], means_t.shape[1]
+    pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
+    out = _ss.sparse_sim_pallas(pi, pv, pm, b_blk=b_blk, k_blk=k_blk,
+                                d_blk=d_blk, interpret=interpret)
+    return out[:b, :k]
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
+def esicp_gather(ids, vals, means_t, t_th, v_th, *, b_blk=128, k_blk=128,
+                 d_blk=256, interpret: bool | None = None):
+    """(rho12, y): fused Region-1/2 exact similarity + Region-3 L1 mass."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, k = ids.shape[0], means_t.shape[1]
+    pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
+    rho12, y = _eg.esicp_gather_pallas(pi, pv, pm, t_th, v_th, b_blk=b_blk,
+                                       k_blk=k_blk, d_blk=d_blk,
+                                       interpret=interpret)
+    return rho12[:b, :k], y[:b, :k]
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "interpret"))
+def esicp_filter(rho12, y, rho_max, col_ok, v_th, *, b_blk=128, k_blk=256,
+                 interpret: bool | None = None):
+    """(survivor mask int8 (B,K), |Z_i| counts (B,))."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, k = rho12.shape
+    pr = _pad_to(_pad_to(rho12, k_blk, 1), b_blk, 0)
+    py = _pad_to(_pad_to(y, k_blk, 1), b_blk, 0)
+    pm = _pad_to(rho_max, b_blk, 0, value=jnp.inf)  # padding rows prune all
+    pc = _pad_to(_pad_to(col_ok.astype(jnp.int8), k_blk, 1), b_blk, 0)
+    mask, count = _ef.esicp_filter_pallas(pr, py, pm, pc, v_th, b_blk=b_blk,
+                                          k_blk=k_blk, interpret=interpret)
+    return mask[:b, :k], count[:b]
+
+
+@partial(jax.jit, static_argnames=("k", "d", "b_blk", "k_blk", "d_blk", "interpret"))
+def segment_update(assign, ids, vals, *, k: int, d: int, b_blk=128, k_blk=128,
+                   d_blk=256, interpret: bool | None = None):
+    """(K, D) cluster sums λ. Padding objects get assign = k (out of range)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    # Padded rows get assign = k: when k is block-aligned that index falls
+    # past the last tile's iota range, otherwise into a padding column —
+    # either way it contributes nothing to the sliced result.
+    pa = _pad_to(assign, b_blk, 0, value=k)
+    pi = _pad_to(_pad_to(ids, 8, 1), b_blk, 0)
+    pv = _pad_to(_pad_to(vals, 8, 1), b_blk, 0)
+    kp = k + ((-k) % k_blk)
+    dp = d + ((-d) % d_blk)
+    out = _su.segment_update_pallas(pa, pi, pv, kp, dp, b_blk=b_blk,
+                                    k_blk=k_blk, d_blk=d_blk,
+                                    interpret=interpret)
+    return out[:k, :d]
+
+
+@partial(jax.jit, static_argnames=("window", "sq_blk", "sk_blk", "interpret"))
+def flash_attention(q, k, v, *, window: int = -1, sq_blk=128, sk_blk=128,
+                    interpret: bool | None = None):
+    """Banded-causal flash attention; heads folded into the batch dim."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    pq = _pad_to(q, sq_blk, 1)
+    pk = _pad_to(k, sk_blk, 1)
+    pv = _pad_to(v, sk_blk, 1)
+    out = _fa.flash_attention_pallas(pq, pk, pv, window=window,
+                                     sq_blk=sq_blk, sk_blk=sk_blk,
+                                     interpret=interpret, sk_real=sk)
+    return out[:, :sq]

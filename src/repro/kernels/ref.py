@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def densify(ids, vals, d: int):
+    """(B, P) sparse tuples -> (B, D) dense (padding has val == 0)."""
+    b, p = ids.shape
+    out = jnp.zeros((b, d), vals.dtype)
+    rows = jnp.repeat(jnp.arange(b), p)
+    return out.at[rows, ids.reshape(-1)].add(vals.reshape(-1))
+
+
+def sparse_sim(ids, vals, means_t):
+    """(B, K) exact similarities."""
+    x = densify(ids, vals, means_t.shape[0])
+    return x @ means_t
+
+
+def esicp_gather(ids, vals, means_t, t_th, v_th):
+    """(rho12, y) per Eq. (4) decomposition."""
+    d, k = means_t.shape
+    x = densify(ids, vals, d)
+    term = jnp.arange(d)[:, None]
+    tail = term >= t_th
+    hi = means_t >= v_th
+    exact = jnp.where(tail, hi, True)
+    rho12 = x @ jnp.where(exact, means_t, 0.0)
+    y = x @ (tail & ~hi).astype(x.dtype)
+    return rho12, y
+
+
+def esicp_filter(rho12, y, rho_max, col_ok, v_th):
+    ub = rho12 + y * v_th
+    mask = (ub > rho_max[:, None]) & col_ok.astype(bool)
+    return mask.astype(jnp.int8), jnp.sum(mask, axis=1).astype(jnp.int32)
+
+
+def segment_update(assign, ids, vals, k: int, d: int):
+    x = densify(ids, vals, d)
+    out = jnp.zeros((k, d), jnp.float32)
+    return out.at[assign].add(x)
+
+
+def flash_attention(q, k, v, window: int = -1):
+    """(BH, Sq, hd) × (BH, Sk, hd) banded-causal attention, f32."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(float(hd))
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    w = jnp.iinfo(jnp.int32).max if window < 0 else window
+    mask = (kp <= qp) & ((qp - kp) < w)
+    s = jnp.where(mask[None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    probs = jnp.where(mask.any(axis=1)[None, :, None], probs, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)

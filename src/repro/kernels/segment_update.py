@@ -1,0 +1,64 @@
+"""Pallas kernel: update-step scatter-add (paper Alg. 6 lines 2–5) as MXU work.
+
+λ[k, d] += Σ_b onehot(assign[b] == k) · x[b, d] — the cluster-sum accumulation
+expressed as two one-hot densifications feeding a single matmul:
+
+    grid = (K tiles, D tiles, B tiles)           # B sequential → accumulate
+    slab   = densify(ids, vals)                   (B_blk, D_blk)
+    sel    = onehot(assign − k0)                  (B_blk, K_blk)
+    out   += selᵀ @ slab                          (MXU)
+
+A CPU implementation scatters; a TPU implementation must not (serialised
+HBM read-modify-write) — this is the update-step half of the AFM adaptation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sparse_sim import _densify
+
+
+def _update_kernel(assign_ref, ids_ref, vals_ref, out_ref, *,
+                   d_blk: int, k_blk: int):
+    b_idx = pl.program_id(2)
+    k0 = pl.program_id(0) * k_blk
+    d0 = pl.program_id(1) * d_blk
+
+    slab = _densify(ids_ref[...], vals_ref[...], d0, d_blk)   # (B_blk, D_blk)
+    local = assign_ref[...][:, 0] - k0                        # (B_blk,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], k_blk), 1)
+    sel = (local[:, None] == iota).astype(jnp.float32)        # (B_blk, K_blk)
+    acc = jnp.dot(sel.T, slab, preferred_element_type=jnp.float32)
+
+    @pl.when(b_idx == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(b_idx > 0)
+    def _acc():
+        out_ref[...] += acc
+
+
+def segment_update_pallas(assign, ids, vals, k: int, d: int, *,
+                          b_blk: int = 128, k_blk: int = 128, d_blk: int = 256,
+                          interpret: bool = False):
+    """assign: (B,) int32; ids/vals: (B, P). Returns (K, D) float32 sums."""
+    b, p = ids.shape
+    assert b % b_blk == 0 and k % k_blk == 0 and d % d_blk == 0 and p % 8 == 0
+    grid = (k // k_blk, d // d_blk, b // b_blk)
+    return pl.pallas_call(
+        functools.partial(_update_kernel, d_blk=d_blk, k_blk=k_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, 1), lambda i, j, l: (l, 0)),
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (l, 0)),
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_blk, d_blk), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
+        interpret=interpret,
+    )(assign[:, None], ids, vals)

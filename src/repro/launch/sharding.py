@@ -1,0 +1,121 @@
+"""Sharding rules: FSDP(+TP) parameter placement, batch and cache specs.
+
+Rules are divisibility-driven so every assigned architecture (including the
+awkward ones — granite's 49 155 vocab, 40-head attention over a 16-way model
+axis) gets a *valid* sharding; vocab is Megatron-padded in the configs so
+embeddings always split over 'model'.
+
+Baseline layout (the hillclimbs in EXPERIMENTS.md §Perf move these knobs):
+  weights (…, A, B): B over 'model' if divisible (TP), then a remaining dim
+  over 'data' (FSDP/ZeRO-3); the 'pod' axis replicates weights and carries
+  gradient all-reduce only.
+  activations/tokens: batch over ('pod','data').
+  KV caches: batch over data axes, cache length over 'model' (flash-decode).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def obj_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch over as many object axes as divide it (outer first)."""
+    axes = []
+    rem = batch
+    for a in obj_axes(mesh):
+        if rem % _axis(mesh, a) == 0:
+            axes.append(a)
+            rem //= _axis(mesh, a)
+    return P(tuple(axes)) if axes else P()
+
+
+def param_spec(path, shape, mesh: Mesh, embed_mode: str = "gather") -> P:
+    name = path[-1].key if path else ""
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data")
+    nd = len(shape)
+    if name in ("embed", "lm_head"):
+        if embed_mode == "megatron":
+            # shard_map lookup wants P('model', None) exactly
+            return P("model" if shape[0] % model == 0 else None, None)
+        dims = ["model" if shape[0] % model == 0 else None,
+                "data" if shape[1] % data == 0 else None]
+        return P(*dims)
+    if nd < 2:
+        return P()
+    dims: list = [None] * nd
+    # TP: last dim over model, else second-to-last
+    if shape[-1] % model == 0:
+        dims[-1] = "model"
+    elif shape[-2] % model == 0:
+        dims[-2] = "model"
+    # FSDP: a remaining trailing dim over data
+    for cand in (-2, -1):
+        if dims[cand] is None and shape[cand] % data == 0:
+            dims[cand] = "data"
+            break
+    return P(*dims)
+
+
+def param_shardings(cfg, mesh: Mesh, specs_tree, embed_mode: str = "gather"):
+    """specs_tree: pytree of ShapeDtypeStructs -> tree of NamedSharding."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs_tree)
+    out = [NamedSharding(mesh, param_spec(path, leaf.shape, mesh, embed_mode))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(param_sh, mesh: Mesh):
+    """AdamW state mirrors parameter placement; count is replicated."""
+    return {
+        "mu": param_sh,
+        "nu": param_sh,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def cache_spec(path, shape, mesh: Mesh, batch: int) -> P:
+    """KV caches (reps, B, L_c, Hkv, hd): B over data axes, L_c over model.
+    SSM states (reps, B, H, N, Pd): B over data axes, then the widest
+    trailing dim that divides over model."""
+    name = path[-1].key
+    if name in ("q", "s"):            # int8 cache leaves live under k/v
+        name = path[-2].key
+    model = _axis(mesh, "model")
+    nd = len(shape)
+    stacked = nd >= 4  # (reps, B, ...) vs shared-block caches (B, ...)
+    b_idx = 1 if stacked else 0
+    dims: list = [None] * nd
+    bspec = batch_spec(mesh, batch)
+    if bspec != P() and shape[b_idx] == batch:
+        dims[b_idx] = bspec[0]
+    if name in ("k", "v"):
+        lc_idx = b_idx + 1
+        if shape[lc_idx] % model == 0:
+            dims[lc_idx] = "model"
+    else:  # ssm states
+        for i in range(nd - 1, b_idx, -1):
+            if shape[i] % model == 0:
+                dims[i] = "model"
+                break
+    return P(*dims)
+
+
+def cache_shardings(mesh: Mesh, cache_specs_tree, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs_tree)
+    out = [NamedSharding(mesh, cache_spec(path, leaf.shape, mesh, batch))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

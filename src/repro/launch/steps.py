@@ -1,0 +1,192 @@
+"""Step builders for the dry-run and the real launchers.
+
+`build_cell(cfg, mesh, shape)` returns everything `.lower().compile()` needs:
+the jitted step, its argument ShapeDtypeStructs, and the sharding/donation
+story.  Full-size tensors only ever exist as specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import param_specs, cache_specs
+from repro.models.config import ModelConfig
+from repro.train import make_train_step, TrainConfig, AdamWConfig
+from repro.serve import make_prefill_fn, make_decode_fn
+from repro.launch.shapes import ShapeSpec, FRONTEND_LEN
+from repro.launch import sharding as shd
+
+SERVE_DTYPE = jnp.bfloat16
+ACT_BUDGET_BYTES = 4e9   # per-device activation-checkpoint budget (heuristic)
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Choose grad-accumulation depth so the per-device scan-carry stack of
+    layer-boundary activations stays under ACT_BUDGET_BYTES."""
+    n_obj = math.prod(mesh.shape[a] for a in shd.obj_axes(mesh))
+    b_dev = max(shape.batch // n_obj, 1)
+    bytes_per_b = cfg.n_layers * shape.seq * cfg.d_model * 2  # bf16 boundaries
+    b_mb = max(1, int(ACT_BUDGET_BYTES // max(bytes_per_b, 1)))
+    mb = max(1, -(-b_dev // b_mb))
+    while b_dev % mb and mb < b_dev:   # must divide the per-device batch
+        mb += 1
+    return min(mb, b_dev)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfVariant:
+    """§Perf hillclimb knobs (baseline keeps all defaults)."""
+    name: str = "baseline"
+    embed_mode: str = "gather"       # | "megatron" (shard_map vocab-parallel)
+    kv_dtype: str = "bf16"           # | "int8" (quantized KV cache)
+    attn_stack_bf16: bool = False    # q-chunk ys in bf16
+    attn_kv_shard: bool = False      # K/V sequence-sharded over 'model'
+    cache_carry: bool = False        # decode caches in scan carry (in-place)
+    moe_group: int | None = None     # MoE routing-group override
+    microbatches: int | None = None  # override the heuristic
+
+
+VARIANTS = {
+    "baseline": PerfVariant(),
+    "megatron-embed": PerfVariant(name="megatron-embed",
+                                  embed_mode="megatron"),
+    "kv-int8": PerfVariant(name="kv-int8", kv_dtype="int8"),
+    "attn-bf16-stack": PerfVariant(name="attn-bf16-stack",
+                                   attn_stack_bf16=True),
+    "kv-seq-shard": PerfVariant(name="kv-seq-shard", attn_kv_shard=True),
+    "cache-carry": PerfVariant(name="cache-carry", cache_carry=True),
+    "cache-carry-int8": PerfVariant(name="cache-carry-int8",
+                                    cache_carry=True, kv_dtype="int8"),
+    "combo-train": PerfVariant(name="combo-train", embed_mode="megatron",
+                               attn_kv_shard=True, attn_stack_bf16=True),
+    "moe-group128": PerfVariant(name="moe-group128", moe_group=128),
+    "moe-group128-kvshard": PerfVariant(name="moe-group128-kvshard",
+                                        moe_group=128, attn_kv_shard=True),
+}
+
+
+def apply_variant(variant: PerfVariant, cfg: ModelConfig, mesh):
+    """Set trace-time globals + return the (possibly) modified config."""
+    from repro.models import transformer as T
+    from repro.models import layers as L
+    T.set_embed_mode(variant.embed_mode,
+                     mesh if variant.embed_mode == "megatron" else None)
+    T.set_cache_carry(variant.cache_carry)
+    L.set_attn_stack_bf16(variant.attn_stack_bf16)
+    L.set_attn_kv_shard(mesh if variant.attn_kv_shard else None)
+    if variant.kv_dtype != cfg.kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_dtype=variant.kv_dtype)
+    if variant.moe_group is not None:
+        cfg = dataclasses.replace(cfg, moe_group=variant.moe_group)
+    return cfg
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: object            # jitted step
+    args: tuple           # ShapeDtypeStructs (lower(*args))
+    meta: dict
+
+
+def _extend(spec: P, ndim: int) -> P:
+    parts = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return P(*parts)
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    tok = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+    tok_sh = NamedSharding(mesh, _extend(shd.batch_spec(mesh, shape.batch), 2))
+    return tok, tok_sh
+
+
+def _frontend(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    n_fe = FRONTEND_LEN.get(cfg.name)
+    if n_fe is None or shape.kind == "decode":
+        return None, None
+    spec = jax.ShapeDtypeStruct((shape.batch, n_fe, cfg.d_model), SERVE_DTYPE)
+    sh = NamedSharding(mesh, _extend(shd.batch_spec(mesh, shape.batch), 3))
+    return spec, sh
+
+
+def reduced_depth_config(cfg: ModelConfig, m: int) -> ModelConfig:
+    """Same architecture, every segment at reps=m (cost-extrapolation pass)."""
+    segs = tuple(dataclasses.replace(s, reps=m) for s in cfg.segments)
+    return dataclasses.replace(cfg, segments=segs)
+
+
+def build_cell(cfg: ModelConfig, mesh, shape: ShapeSpec, *,
+               microbatches: int | None = None,
+               variant: PerfVariant = VARIANTS["baseline"]) -> Cell:
+    cfg = apply_variant(variant, cfg, mesh)
+    if variant.microbatches is not None and microbatches is None:
+        microbatches = variant.microbatches
+    if shape.kind == "train":
+        return _build_train(cfg, mesh, shape, microbatches, variant)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, mesh, shape, variant)
+    if shape.kind == "decode":
+        return _build_decode(cfg, mesh, shape, variant)
+    raise ValueError(shape.kind)
+
+
+def _build_train(cfg, mesh, shape, microbatches, variant):
+    mb = microbatches or pick_microbatches(cfg, shape, mesh)
+    tcfg = TrainConfig(microbatches=mb, optimizer=AdamWConfig())
+    step = make_train_step(cfg, tcfg)
+
+    p_specs = param_specs(cfg, jnp.float32)
+    p_sh = shd.param_shardings(cfg, mesh, p_specs,
+                               embed_mode=variant.embed_mode)
+    opt_specs = {
+        "mu": p_specs, "nu": p_specs,
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    opt_sh = shd.opt_shardings(p_sh, mesh)
+    tok, tok_sh = _token_specs(cfg, shape, mesh)
+    fe, fe_sh = _frontend(cfg, shape, mesh)
+
+    args = (p_specs, opt_specs, tok, tok) + ((fe,) if fe is not None else ())
+    in_sh = (p_sh, opt_sh, tok_sh, tok_sh) + ((fe_sh,) if fe is not None else ())
+    out_sh = (p_sh, opt_sh, None)
+
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    return Cell(fn=fn, args=args, meta={"microbatches": mb, "kind": "train"})
+
+
+def _build_prefill(cfg, mesh, shape, variant):
+    prefill = make_prefill_fn(cfg)
+    p_specs = param_specs(cfg, SERVE_DTYPE)
+    p_sh = shd.param_shardings(cfg, mesh, p_specs,
+                               embed_mode=variant.embed_mode)
+    tok, tok_sh = _token_specs(cfg, shape, mesh)
+    fe, fe_sh = _frontend(cfg, shape, mesh)
+    args = (p_specs, tok) + ((fe,) if fe is not None else ())
+    in_sh = (p_sh, tok_sh) + ((fe_sh,) if fe is not None else ())
+    fn = jax.jit(prefill, in_shardings=in_sh)
+    return Cell(fn=fn, args=args, meta={"kind": "prefill"})
+
+
+def _build_decode(cfg, mesh, shape, variant):
+    decode = make_decode_fn(cfg)
+    p_specs = param_specs(cfg, SERVE_DTYPE)
+    p_sh = shd.param_shardings(cfg, mesh, p_specs,
+                               embed_mode=variant.embed_mode)
+    c_specs = cache_specs(cfg, shape.batch, shape.seq)
+    c_sh = shd.cache_shardings(mesh, c_specs, shape.batch)
+    tok = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, _extend(shd.batch_spec(mesh, shape.batch), 2))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = shd.replicated(mesh)
+
+    args = (p_specs, c_specs, tok, pos)
+    in_sh = (p_sh, c_sh, tok_sh, pos_sh)
+    out_sh = (None, c_sh)
+    fn = jax.jit(decode, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    return Cell(fn=fn, args=args, meta={"kind": "decode"})

@@ -1,0 +1,16 @@
+from repro.models.config import ModelConfig, Segment
+from repro.models.transformer import (
+    init_params,
+    param_specs,
+    forward,
+    lm_loss,
+    init_cache,
+    cache_specs,
+    decode_forward,
+)
+
+__all__ = [
+    "ModelConfig", "Segment",
+    "init_params", "param_specs", "forward", "lm_loss",
+    "init_cache", "cache_specs", "decode_forward",
+]

@@ -1,0 +1,124 @@
+"""Model configuration covering the ten assigned architectures.
+
+A model is a list of *segments*; each segment is `reps` repetitions of a
+homogeneous super-block executed as one lax.scan (compile time is O(#segments),
+never O(#layers)).  A super-block is itself a short static list of layer
+specs, so heterogeneous interleavings (gemma-3's 5 local : 1 global, zamba2's
+6 mamba : 1 shared-attention) stay scannable.
+
+Layer kinds: 'attn' (attention + dense MLP), 'moe' (attention + MoE MLP),
+'mamba2', 'mlstm', 'slstm', 'shared_attn' (zamba2: one parameter set reused
+at every invocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+FULL_ATTENTION = -1  # window sentinel: full causal
+
+# Cost-model mode: XLA's cost_analysis counts a while-loop body ONCE, not
+# × trip count, so the dry-run's costing pass unrolls every flop-carrying
+# scan (segments, q-chunks, loss chunks) on reduced-depth configs and
+# extrapolates (launch/dryrun.py).  Flipped only under that pass.
+SCAN_UNROLL = False
+
+
+def set_scan_unroll(v: bool):
+    global SCAN_UNROLL
+    SCAN_UNROLL = bool(v)
+
+
+def scan_unroll() -> bool:
+    return SCAN_UNROLL
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                    # attn | moe | mamba2 | mlstm | slstm | shared_attn
+    window: int = FULL_ATTENTION  # sliding-window size (attention kinds)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    reps: int                    # scan length
+    layers: tuple[LayerSpec, ...]  # unrolled inside the scan body
+
+    @property
+    def n_layers(self) -> int:
+        return self.reps * len(self.layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    segments: tuple[Segment, ...]
+    head_dim: int | None = None
+    qkv_bias: bool = False       # qwen-style
+    mlp: str = "swiglu"          # swiglu | geglu | gelu
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity: float = 1.25
+    moe_group: int = 256         # routing group size (dispatch tile)
+    ssm_state: int = 64
+    ssm_chunk: int = 128         # chunked linear-recurrence block
+    ssm_expand: int = 2          # mamba2 inner expansion (d_inner = e·d)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    vocab_pad_to: int = 2048     # Megatron-style padded vocab for sharding
+    tie_embeddings: bool = True
+    modality: str = "text"       # text | audio_tokens | image_tokens (stub frontends)
+    max_position: int = 131_072
+    kv_dtype: str = "bf16"       # | "int8" (quantized KV cache, §Perf variant)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        v = self.vocab
+        return v + ((-v) % self.vocab_pad_to)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.segments)
+
+    def n_params(self) -> int:
+        """Exact parameter count — walks the implementation's shape tree, so
+        the 6ND roofline always matches the lowered program."""
+        import math as _math
+        from repro.models.transformer import _tree_shapes
+        leaves = jax.tree_util.tree_leaves(
+            _tree_shapes(self), is_leaf=lambda x: isinstance(x, tuple))
+        return int(sum(_math.prod(s) for s in leaves))
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.n_params()
+        dense_frac = self.top_k / self.n_experts
+        d = self.d_model
+        n_mlp_mats = 3 if self.mlp in ("swiglu", "geglu") else 2
+        moe_total = sum(seg.reps * sum(1 for sp in seg.layers if sp.kind == "moe")
+                        for seg in self.segments)
+        inactive = moe_total * (1 - dense_frac) * self.n_experts * n_mlp_mats * d * self.d_ff
+        return int(self.n_params() - inactive)
+
+
+def uniform_segments(n_layers: int, kind: str = "attn",
+                     window: int = FULL_ATTENTION) -> tuple[Segment, ...]:
+    return (Segment(reps=n_layers, layers=(LayerSpec(kind, window),)),)
+
+
+def pattern_segments(n_layers: int, pattern: tuple[LayerSpec, ...]) -> tuple[Segment, ...]:
+    assert n_layers % len(pattern) == 0, (n_layers, len(pattern))
+    return (Segment(reps=n_layers // len(pattern), layers=pattern),)

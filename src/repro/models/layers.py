@@ -1,0 +1,315 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (dynamic
+sliding window), dense MLP variants, capacity-based MoE.
+
+Conventions:
+  * params live in fp32, matmuls run in bf16 with fp32 accumulation
+    (``preferred_element_type``) — the v5e MXU contract;
+  * the sliding window is *data*, not code: a traced per-layer scalar feeding
+    a uniform band mask, so heterogeneous patterns (gemma-3 5:1) scan as one
+    body — same branch-free philosophy as the k-means core;
+  * attention math leaves internal sharding to the SPMD partitioner; the
+    train/serve steps constrain only block boundaries and weights.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, scan_unroll
+
+# bf16 is the TPU contract; the CPU backend cannot *execute* bf16 dots (it
+# compiles them fine), so tests fall back to fp32 while the dry-run pins
+# REPRO_COMPUTE_DTYPE=bfloat16 to keep roofline byte counts faithful.
+_env_dt = os.environ.get("REPRO_COMPUTE_DTYPE")
+if _env_dt:
+    COMPUTE_DTYPE = getattr(jnp, _env_dt)
+else:
+    COMPUTE_DTYPE = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+
+
+def rms_norm(x, scale, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def _band_mask(q_pos, k_pos, window):
+    """Causal band: k <= q and q - k < window (window < 0 → full causal)."""
+    w = jnp.where(window < 0, jnp.iinfo(jnp.int32).max, window)
+    causal = k_pos[None, :] <= q_pos[:, None]
+    near = (q_pos[:, None] - k_pos[None, :]) < w
+    return causal & near
+
+
+ATTN_DIRECT_MAX_S = 2048   # above this, use the q-chunked (flash-style) path
+ATTN_Q_CHUNK = 1024
+# §Perf variant: stack q-chunk outputs in bf16 instead of f32 (the scan's
+# stacked ys are the prefill memory high-water mark)
+ATTN_STACK_BF16 = False
+
+
+def set_attn_stack_bf16(v: bool):
+    global ATTN_STACK_BF16
+    ATTN_STACK_BF16 = bool(v)
+
+
+# §Perf variant: shard K/V along the sequence dim over 'model' — for MQA/GQA
+# archs whose few (kv-)heads cannot split over a 16-way model axis, XLA
+# otherwise reshards the S×S score blocks every layer (the dominant
+# collective in the train_4k baseline).  With S_k sharded, score compute
+# splits |model|-ways and softmax/out contractions need only small psums.
+ATTN_KV_SHARD_MESH = None
+
+
+def set_attn_kv_shard(mesh):
+    global ATTN_KV_SHARD_MESH
+    ATTN_KV_SHARD_MESH = mesh
+
+
+def _maybe_shard_kv(k, v):
+    if ATTN_KV_SHARD_MESH is None:
+        return k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = ATTN_KV_SHARD_MESH
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    spec = NamedSharding(mesh, P(dp, "model", None, None))
+    return (jax.lax.with_sharding_constraint(k, spec),
+            jax.lax.with_sharding_constraint(v, spec))
+
+
+# TPU hot path: route attention through the Pallas flash kernel
+# (kernels/flash_attention.py).  Off by default: the jnp q-chunked path is
+# what the dry-run lowers; on a real TPU, set_use_flash(True) swaps in the
+# kernel (equivalence tested in tests/test_models.py).
+USE_FLASH = False
+
+
+def set_use_flash(v: bool):
+    global USE_FLASH
+    USE_FLASH = bool(v)
+
+
+def _flash_path(qg, k, v, window, *, interpret=None):
+    """qg: (B,S,Hkv,G,hd); k/v: (B,S,Hkv,hd) -> (B,S,Hkv,G,hd) f32."""
+    from repro.kernels import flash_attention as fa
+    b, s, hkv, g, hd = qg.shape
+    qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * hkv * g, s, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hkv * g, s, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hkv * g, s, hd)
+    w = int(window) if window is not None else -1
+    out = fa(qf.astype(jnp.float32), kf.astype(jnp.float32),
+             vf.astype(jnp.float32), window=w,
+             sq_blk=min(128, s), sk_blk=min(128, s), interpret=interpret)
+    return out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
+
+
+def _attn_core(qg, k, v, q_pos, k_pos, window, hd):
+    """scores+softmax+values for one q block. qg: (B, Sq, Hkv, G, hd)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(float(hd))
+    mask = _band_mask(q_pos, k_pos, window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(x, p, cfg: ModelConfig, window, *, pos_offset=0):
+    """Training/prefill attention. x: (B, S, D); window: static per layer.
+
+    Long sequences run a q-chunked scan (flash-style): only one
+    (q_chunk × S) score block is live at a time and the chunk body is
+    rematerialised in the backward pass — the S² probs tensor never exists.
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+    cd = COMPUTE_DTYPE
+    xc = x.astype(cd)
+
+    q = xc @ p["wq"].astype(cd)
+    k = xc @ p["wk"].astype(cd)
+    v = xc @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+
+    positions = pos_offset + jnp.arange(s)
+    q = rope(q, positions[None, :], cfg.rope_theta)
+    k = rope(k, positions[None, :], cfg.rope_theta)
+    k, v = _maybe_shard_kv(k, v)
+    qg = q.reshape(b, s, hkv, g, hd)
+
+    if USE_FLASH and pos_offset == 0:
+        out = _flash_path(qg, k, v, window)
+    elif s <= ATTN_DIRECT_MAX_S:
+        out = _attn_core(qg, k, v, positions, positions, window, hd)
+    else:
+        qc = ATTN_Q_CHUNK
+        nc = s // qc
+        assert s % qc == 0, (s, qc)
+        qg_c = qg.reshape(b, nc, qc, hkv, g, hd).swapaxes(0, 1)  # (nc, B, qc, ...)
+        pos_c = positions.reshape(nc, qc)
+
+        @jax.checkpoint
+        def body(_, inp):
+            qb, pb = inp
+            ob = _attn_core(qb, k, v, pb, positions, window, hd)
+            if ATTN_STACK_BF16:
+                ob = ob.astype(COMPUTE_DTYPE)
+            return 0.0, ob
+
+        _, out_c = jax.lax.scan(body, 0.0, (qg_c, pos_c), unroll=scan_unroll())
+        out = out_c.swapaxes(0, 1).reshape(b, s, hkv, g, hd)
+
+    out = out.reshape(b, s, hq * hd).astype(cd)
+    return (out @ p["wo"].astype(cd)).astype(x.dtype)
+
+
+def decode_attention(x, p, cfg: ModelConfig, window, cache_k, cache_v, pos):
+    """Single-token decode. x: (B, 1, D); caches: (B, L_c, Hkv, hd) where
+    L_c = min(window, S_max) for windowed layers (rotating cache) or S_max;
+    pos: () int32 absolute position.  Returns (out, cache_k, cache_v).
+
+    Rotating layout: slot j holds absolute position pos − ((slot − j) mod L_c)
+    — for a full cache (L_c = S_max) this degenerates to k_pos = j, so one
+    branch-free formula covers both.  Keys are stored RoPE'd at their
+    absolute position, so rotation never re-rotates.
+
+    The KV cache is sharded along L_c over 'model' (flash-decode layout,
+    DESIGN.md §4): the score/value contractions below reduce over that axis,
+    which the partitioner lowers to one small all-reduce per layer."""
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+    cd = COMPUTE_DTYPE
+    quant = isinstance(cache_k, dict)          # int8 cache: {"q": int8, "s": f32}
+    l_c = (cache_k["q"] if quant else cache_k).shape[1]
+    slot = pos % l_c
+    xc = x.astype(cd)
+
+    q = xc @ p["wq"].astype(cd)
+    k = xc @ p["wk"].astype(cd)
+    v = xc @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
+    posv = jnp.full((1, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    def _insert(cache, new):
+        if not quant:
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache, new.astype(cache.dtype), slot, 1)
+        # per-(token, head) max-abs int8 quantisation (§Perf variant)
+        scale = jnp.max(jnp.abs(new), axis=-1, keepdims=True).astype(jnp.float32)
+        qv = jnp.round(new.astype(jnp.float32) / jnp.maximum(scale, 1e-9) * 127.0)
+        return {
+            "q": jax.lax.dynamic_update_slice_in_dim(
+                cache["q"], qv.astype(jnp.int8), slot, 1),
+            "s": jax.lax.dynamic_update_slice_in_dim(
+                cache["s"], scale / 127.0, slot, 1),
+        }
+
+    def _read(cache):
+        if not quant:
+            return cache.astype(cd)
+        return (cache["q"].astype(jnp.float32) * cache["s"]).astype(cd)
+
+    cache_k = _insert(cache_k, k)
+    cache_v = _insert(cache_v, v)
+
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, _read(cache_k),
+                        preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+    j = jnp.arange(l_c)
+    k_pos = pos - jnp.mod(slot - j, l_c)                 # absolute positions
+    w = jnp.where(window < 0, jnp.iinfo(jnp.int32).max, window)
+    mask = (k_pos >= 0) & ((pos - k_pos) < w)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, _read(cache_v),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq * hd).astype(cd)
+    return (out @ p["wo"].astype(cd)).astype(x.dtype), cache_k, cache_v
+
+
+def dense_mlp(x, p, cfg: ModelConfig):
+    cd = COMPUTE_DTYPE
+    xc = x.astype(cd)
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(xc @ p["w_gate"].astype(cd)) * (xc @ p["w_up"].astype(cd))
+    else:
+        h = jax.nn.gelu(xc @ p["w_up"].astype(cd))
+    return (h @ p["w_down"].astype(cd)).astype(x.dtype)
+
+
+def moe_mlp(x, p, cfg: ModelConfig):
+    """Capacity-based top-k MoE (GShard/Switch dispatch as MXU einsums).
+
+    Dispatch/combine are one-hot matmuls over a (group, expert, capacity)
+    layout — no scatters, expert dim shardable over 'model' (EP).  Overflow
+    tokens are dropped (capacity_factor controls the rate) — the standard
+    trade for static shapes on TPU.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, b * s)
+    t = b * s
+    assert t % g == 0, (t, g)
+    ng = t // g
+    cap = int(g * k / e * cfg.moe_capacity) + 1
+    cap = min(cap + (-cap) % 4, g)
+    cd = COMPUTE_DTYPE
+
+    xf = x.reshape(ng, g, d)
+    logits = (xf.astype(cd) @ p["router"].astype(cd)).astype(jnp.float32)
+    gate_vals, gate_idx = jax.lax.top_k(logits, k)            # (ng, g, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)      # (ng, g, k, e)
+    mask = jnp.sum(sel, axis=2)                               # (ng, g, e) ∈ {0,1}
+    gates_e = jnp.einsum("ngk,ngke->nge", gates, sel)
+
+    pos_in_e = jnp.cumsum(mask, axis=1) - mask                # arrival order
+    keep = (pos_in_e < cap) * mask
+    slot = jax.nn.one_hot(pos_in_e, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot                                            # (ng, g, e, cap)
+
+    xin = jnp.einsum("ngec,ngd->necd", dispatch.astype(cd), xf.astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+    act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+    h = act(jnp.einsum("necd,edf->necf", xin, p["w_gate"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd))
+    h = h * jnp.einsum("necd,edf->necf", xin, p["w_up"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+    out_e = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(cd),
+                       preferred_element_type=jnp.float32)
+    combine = dispatch * gates_e[..., None]
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(jnp.float32), out_e,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype)

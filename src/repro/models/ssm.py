@@ -1,0 +1,179 @@
+"""Sequence-mixing blocks with linear-time state: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM are both gated linear recurrences
+
+    H_t = a_t · H_{t-1} + B_t ⊗ X_t,      y_t = C_t · H_t
+
+and share one chunked TPU realisation: intra-chunk work is a pair of batched
+matmuls (MXU), inter-chunk state flows through a short lax.scan of length
+S/chunk — the standard sub-quadratic layout that makes long_500k feasible.
+mLSTM adds the xLSTM normaliser n_t (same recurrence with X ≡ 1) and
+max-stabilised output.  sLSTM is a scalar-state LSTM with exponential gating;
+it is inherently sequential, so it scans over time (xLSTM-125m carries only
+a few sLSTM layers; DESIGN.md notes the recurrent-weight simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def _chunked_glr(xv, kb, qc, log_a, chunk: int):
+    """Chunked gated linear recurrence.
+
+    xv:    (B, S, H, P)   values  (X_t)
+    kb:    (B, S, H, N)   input maps (B_t)
+    qc:    (B, S, H, N)   output maps (C_t)
+    log_a: (B, S, H)      per-step log decay (<= 0)
+    Returns y: (B, S, H, P).
+    """
+    b, s, h, p = xv.shape
+    n = kb.shape[-1]
+    nc = s // chunk
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xv, kb, qc, log_a = r(xv), r(kb), r(qc), r(log_a)
+
+    cum = jnp.cumsum(log_a, axis=2)                     # (B, nc, L, H)
+    total = cum[:, :, -1]                               # (B, nc, H)
+
+    # --- intra-chunk: masked decay-weighted attention-like matmuls -------
+    li = cum[:, :, :, None, :]                          # (B,nc,L,1,H) query side
+    lj = cum[:, :, None, :, :]                          # (B,nc,1,L,H) key side
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))      # i >= j valid
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.einsum("bcihn,bcjhn->bcijh", qc, kb,
+                   preferred_element_type=jnp.float32)
+    w = jnp.where(causal[None, None, :, :, None], w * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(COMPUTE_DTYPE), xv,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk summaries and inter-chunk scan -----------------------------
+    tail = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, 0.0))  # decay to end
+    state_c = jnp.einsum("bcjhn,bcjhp->bchnp", (kb * tail[..., None]).astype(COMPUTE_DTYPE),
+                         xv, preferred_element_type=jnp.float32)      # (B,nc,H,N,P)
+
+    def scan_body(hprev, inp):
+        st, tot = inp                                    # (B,H,N,P), (B,H)
+        out = hprev                                      # state entering chunk
+        hnew = jnp.exp(tot)[..., None, None] * hprev + st
+        return hnew, out
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, h_in = jax.lax.scan(scan_body,
+                           init,
+                           (jnp.swapaxes(state_c, 0, 1), jnp.swapaxes(total, 0, 1)))
+    h_in = jnp.swapaxes(h_in, 0, 1)                      # (B,nc,H,N,P)
+
+    head_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))      # decay from chunk start
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", (qc * head_decay[..., None]).astype(COMPUTE_DTYPE),
+                         h_in.astype(COMPUTE_DTYPE), preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y
+
+
+def mamba2_block(x, p, cfg: ModelConfig):
+    """Mamba2 (SSD) mixer. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm_expand * d                              # inner width
+    hd = di // h
+    n = cfg.ssm_state
+    cd = COMPUTE_DTYPE
+    xc = x.astype(cd)
+
+    xz = xc @ p["w_in"].astype(cd)                       # (B,S,2D)
+    xv, z = jnp.split(xz, 2, axis=-1)
+    bc = xc @ p["w_bc"].astype(cd)                       # (B,S,2N)
+    kb, qc = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((xc @ p["w_dt"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"])                 # (B,S,H)
+    log_a = -dt * jnp.exp(p["log_A"])                    # (B,S,H), A > 0
+
+    xv = xv.reshape(b, s, h, hd)
+    kbh = jnp.broadcast_to(kb[:, :, None, :], (b, s, h, n)) * dt[..., None].astype(cd)
+    qch = jnp.broadcast_to(qc[:, :, None, :], (b, s, h, n))
+    y = _chunked_glr(xv, kbh.astype(cd), qch, log_a, cfg.ssm_chunk)
+    y = y + xv.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = (y.reshape(b, s, di).astype(cd) * jax.nn.silu(z))
+    return (y @ p["w_out"].astype(cd)).astype(x.dtype)
+
+
+def mamba2_decode(x, p, cfg: ModelConfig, state):
+    """One-step Mamba2. x: (B, 1, D); state: (B, H, N, hd) fp32."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm_expand * d
+    hd = di // h
+    n = cfg.ssm_state
+    cd = COMPUTE_DTYPE
+    xc = x[:, 0].astype(cd)
+
+    xz = xc @ p["w_in"].astype(cd)
+    xv, z = jnp.split(xz, 2, axis=-1)
+    bc = xc @ p["w_bc"].astype(cd)
+    kb, qc = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((xc @ p["w_dt"].astype(cd)).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["log_A"]))               # (B,H)
+
+    xv = xv.reshape(b, h, hd).astype(jnp.float32)
+    kbh = kb[:, None, :].astype(jnp.float32) * dt[..., None]          # (B,H,N)
+    state = a[..., None, None] * state + kbh[..., None] * xv[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", jnp.broadcast_to(qc[:, None, :], (b, h, n)).astype(jnp.float32),
+                   state)
+    y = y + xv * p["D"][None, :, None]
+    y = (y.reshape(b, di).astype(cd) * jax.nn.silu(z))
+    return (y @ p["w_out"].astype(cd)).astype(x.dtype)[:, None], state
+
+
+def mlstm_block(x, p, cfg: ModelConfig):
+    """xLSTM mLSTM mixer (matrix memory, exp input gate, sigmoid forget)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    cd = COMPUTE_DTYPE
+    xc = x.astype(cd)
+
+    q = (xc @ p["wq"].astype(cd)).reshape(b, s, h, hd)
+    k = (xc @ p["wk"].astype(cd)).reshape(b, s, h, hd) / jnp.sqrt(float(hd))
+    v = (xc @ p["wv"].astype(cd)).reshape(b, s, h, hd)
+    gates = (xc @ p["w_if"].astype(cd)).astype(jnp.float32)           # (B,S,2H)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)                                  # (B,S,H)
+    i_gate = jnp.exp(jnp.clip(i_pre, None, 10.0))
+
+    kv = k * i_gate[..., None].astype(cd)
+    y = _chunked_glr(v, kv, q, log_f, cfg.ssm_chunk)                  # numerator
+    ones = jnp.ones((b, s, h, 1), cd)
+    nrm = _chunked_glr(ones, kv, q, log_f, cfg.ssm_chunk)             # normaliser
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(b, s, d).astype(cd) * jax.nn.silu(xc @ p["w_z"].astype(cd))
+    return (y @ p["w_out"].astype(cd)).astype(x.dtype)
+
+
+def slstm_block(x, p, cfg: ModelConfig):
+    """xLSTM sLSTM: scalar memory, exponential gating; sequential scan."""
+    b, s, d = x.shape
+    cd = COMPUTE_DTYPE
+    gates = (x.astype(cd) @ p["w_gates"].astype(cd)).astype(jnp.float32) + p["b_gates"]
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)        # each (B,S,D)
+
+    def step(carry, gates_t):
+        c, n, m = carry
+        z_t, i_t, f_t, o_t = gates_t
+        m_new = jnp.maximum(f_t + m, i_t)                # log-space stabiliser
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(f_t + m - m_new)
+        c = f_e * c + i_e * jnp.tanh(z_t)
+        n = f_e * n + i_e
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    tm = lambda a: jnp.swapaxes(a, 0, 1)                 # time-major
+    z0 = jnp.zeros((b, d), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(step, (z0, z0, z0 - 1e30),
+                                 (tm(zi), tm(ii), tm(fi), tm(oi)))
+    hs = jnp.swapaxes(hs, 0, 1)                          # (B,S,D)
+    return (hs.astype(cd) @ p["w_out"].astype(cd)).astype(x.dtype)

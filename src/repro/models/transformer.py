@@ -1,0 +1,455 @@
+"""Model assembly: segment-scanned LM covering all ten architectures.
+
+Params are a nested dict; every segment's leaves are stacked on a leading
+``reps`` axis and executed by one lax.scan (compile-time O(#segments)).
+The zamba2-style shared attention block is a single unstacked parameter set
+reused at each invocation.  ``param_specs``/``cache_specs`` mirror
+``init_params``/``init_cache`` as ShapeDtypeStructs for the dry-run path
+(no allocation ever happens for the full-size configs).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, Segment, LayerSpec, scan_unroll
+from repro.models import layers as L
+from repro.models import ssm as S
+
+PDTYPE = jnp.float32   # parameter dtype (optimizer-friendly master copy)
+CDTYPE = L.COMPUTE_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (shapes once, realised as zeros/random or as specs).
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: ModelConfig, kind: str) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    n = cfg.ssm_state
+    f = cfg.d_ff
+    shp: dict = {}
+    if kind in ("attn", "moe", "shared_attn"):
+        shp.update({
+            "ln1": (d,), "ln2": (d,),
+            "wq": (d, hq * hd), "wk": (d, hkv * hd), "wv": (d, hkv * hd),
+            "wo": (hq * hd, d),
+        })
+        if cfg.qkv_bias:
+            shp.update({"bq": (hq * hd,), "bk": (hkv * hd,), "bv": (hkv * hd,)})
+        if kind == "moe":
+            shp.update({
+                "router": (d, cfg.n_experts),
+                "w_gate": (cfg.n_experts, d, f),
+                "w_up": (cfg.n_experts, d, f),
+                "w_down": (cfg.n_experts, f, d),
+            })
+        else:
+            if cfg.mlp in ("swiglu", "geglu"):
+                shp.update({"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)})
+            else:
+                shp.update({"w_up": (d, f), "w_down": (f, d)})
+    elif kind == "mamba2":
+        hh = cfg.n_heads
+        di = cfg.ssm_expand * d                  # mamba2 inner width
+        shp.update({
+            "ln1": (d,),
+            "w_in": (d, 2 * di), "w_bc": (d, 2 * n), "w_dt": (d, hh),
+            "dt_bias": (hh,), "log_A": (hh,), "D": (hh,),
+            "w_out": (di, d),
+        })
+    elif kind == "mlstm":
+        shp.update({
+            "ln1": (d,),
+            "wq": (d, d), "wk": (d, d), "wv": (d, d),
+            "w_if": (d, 2 * cfg.n_heads), "w_z": (d, d), "w_out": (d, d),
+        })
+    elif kind == "slstm":
+        shp.update({
+            "ln1": (d,),
+            "w_gates": (d, 4 * d), "b_gates": (4 * d,), "w_out": (d, d),
+        })
+    else:
+        raise ValueError(kind)
+    return shp
+
+
+def _tree_shapes(cfg: ModelConfig) -> dict:
+    tree: dict = {
+        "embed": (cfg.padded_vocab, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (cfg.padded_vocab, cfg.d_model)
+    if cfg.modality != "text":
+        tree["frontend_proj"] = (cfg.d_model, cfg.d_model)  # stub projection
+    has_shared = False
+    for si, seg in enumerate(cfg.segments):
+        seg_tree = {}
+        for pi, spec in enumerate(seg.layers):
+            if spec.kind == "shared_attn":
+                has_shared = True
+                continue
+            seg_tree[f"pos{pi}"] = {
+                k: (seg.reps,) + v for k, v in _layer_shapes(cfg, spec.kind).items()
+            }
+        tree[f"seg{si}"] = seg_tree
+    if has_shared:
+        tree["shared"] = _layer_shapes(cfg, "shared_attn")
+    return tree
+
+
+def param_specs(cfg: ModelConfig, dtype=PDTYPE):
+    return jax.tree_util.tree_map(
+        lambda shp: jax.ShapeDtypeStruct(shp, dtype),
+        _tree_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+_ZERO_INIT = ("ln1", "ln2", "final_norm", "bq", "bk", "bv", "b_gates", "log_A")
+
+
+def init_params(cfg: ModelConfig, key, dtype=PDTYPE):
+    shapes = _tree_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for ((path, shp), k) in zip(flat, keys):
+        name = path[-1].key
+        if name in _ZERO_INIT:
+            out.append(jnp.zeros(shp, dtype))
+        elif name == "D":
+            out.append(jnp.ones(shp, dtype))
+        elif name == "dt_bias":
+            out.append(jnp.full(shp, -2.0, dtype))       # small initial dt
+        elif name == "embed" or name == "lm_head":
+            out.append(jax.random.normal(k, shp, dtype) * 0.02)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            out.append(jax.random.normal(k, shp, dtype) / math.sqrt(fan_in))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Embedding lookup — baseline gather vs Megatron-style vocab-parallel
+# (§Perf variant: the baseline's gather over a vocab-sharded table triggers
+# XLA's "involuntary full rematerialization" replication; the shard_map
+# version does masked local lookup + one psum over 'model').
+# ---------------------------------------------------------------------------
+
+EMBED_MODE = "gather"
+_EMBED_MESH = None
+
+
+def set_embed_mode(mode: str, mesh=None):
+    global EMBED_MODE, _EMBED_MESH
+    EMBED_MODE = mode
+    _EMBED_MESH = mesh
+
+
+def _embed_lookup(emb, tokens):
+    if EMBED_MODE != "megatron" or _EMBED_MESH is None:
+        return emb[tokens]
+    from jax.sharding import PartitionSpec as P
+    mesh = _EMBED_MESH
+    n_model = mesh.shape["model"]
+    v_loc = emb.shape[0] // n_model
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def local(emb_l, tok):
+        lo = jax.lax.axis_index("model") * v_loc
+        t = tok - lo
+        ok = (t >= 0) & (t < v_loc)
+        x = emb_l[jnp.where(ok, t, 0)]
+        x = jnp.where(ok[..., None], x, 0.0)
+        return jax.lax.psum(x, "model")
+
+    f = jax.shard_map(local, mesh=mesh,
+                      in_specs=(P("model", None), P(dp, None)),
+                      out_specs=P(dp, None, None))
+    return f(emb, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill).
+# ---------------------------------------------------------------------------
+
+def _apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, shared):
+    eps = cfg.norm_eps
+    if spec.kind == "shared_attn":
+        p = shared
+    if spec.kind in ("attn", "moe", "shared_attn"):
+        h = L.attention(L.rms_norm(x, p["ln1"], eps), p, cfg, spec.window)
+        x = x + h
+        if spec.kind == "moe":
+            x = x + L.moe_mlp(L.rms_norm(x, p["ln2"], eps), p, cfg)
+        else:
+            x = x + L.dense_mlp(L.rms_norm(x, p["ln2"], eps), p, cfg)
+    elif spec.kind == "mamba2":
+        x = x + S.mamba2_block(L.rms_norm(x, p["ln1"], eps), p, cfg)
+    elif spec.kind == "mlstm":
+        x = x + S.mlstm_block(L.rms_norm(x, p["ln1"], eps), p, cfg)
+    elif spec.kind == "slstm":
+        x = x + S.slstm_block(L.rms_norm(x, p["ln1"], eps), p, cfg)
+    else:
+        raise ValueError(spec.kind)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, *, frontend_embeds=None,
+            remat: bool = True):
+    """tokens: (B, S) int32 -> final hidden states (B, S, D) bf16.
+
+    frontend_embeds: (B, S_fe, D) — modality-stub prefix (audio frames /
+    image patches) replacing the first S_fe token embeddings (early fusion).
+    """
+    emb = params["embed"]
+    x = _embed_lookup(emb, tokens).astype(CDTYPE) * math.sqrt(cfg.d_model)
+    if frontend_embeds is not None:
+        fe = (frontend_embeds.astype(CDTYPE) @ params["frontend_proj"].astype(CDTYPE))
+        x = jnp.concatenate([fe, x[:, fe.shape[1]:]], axis=1)
+
+    shared = params.get("shared")
+
+    for si, seg in enumerate(cfg.segments):
+        seg_params = params[f"seg{si}"]
+
+        def body(h, lp, _seg=seg):
+            for pi, spec in enumerate(_seg.layers):
+                p = lp.get(f"pos{pi}") if spec.kind != "shared_attn" else None
+                h = _apply_layer(h, p, spec, cfg, shared)
+            return h, None
+
+        body_fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, seg_params, length=seg.reps,
+                            unroll=scan_unroll())
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _logits(params, h, cfg: ModelConfig):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return h.astype(CDTYPE) @ head.astype(CDTYPE).T          # (B, S, Vpad)
+
+
+def lm_loss(params, tokens, labels, cfg: ModelConfig, *, loss_chunk: int = 512,
+            frontend_embeds=None):
+    """Mean next-token cross-entropy; the (B, S, V) logits tensor is never
+    materialised — the unembed+softmax runs in S-chunks (memory-roofline
+    optimisation measured in §Perf)."""
+    h = forward(params, tokens, cfg, frontend_embeds=frontend_embeds)
+    b, s, d = h.shape
+    c = min(loss_chunk, s)
+    nc = s // c
+    hc = h.reshape(b, nc, c, d).swapaxes(0, 1)               # (nc, B, c, D)
+    lc = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    valid_v = cfg.vocab
+
+    def body(acc, inp):
+        hh, ll = inp
+        logits = _logits(params, hh, cfg).astype(jnp.float32)
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < valid_v, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc),
+                            unroll=scan_unroll())
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Serving: KV caches + single-token decode.
+# ---------------------------------------------------------------------------
+
+def _cache_len(spec: LayerSpec, s_max: int) -> int:
+    if spec.kind in ("attn", "moe", "shared_attn") and spec.window > 0:
+        return min(spec.window, s_max)   # rotating window cache
+    return s_max
+
+
+def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int, s_max: int):
+    d, hd, hkv = cfg.d_model, cfg.hd, cfg.n_kv_heads
+    h = cfg.n_heads
+    if spec.kind in ("attn", "moe", "shared_attn"):
+        lc = _cache_len(spec, s_max)
+        if cfg.kv_dtype == "int8":     # quantized cache: values + scales
+            return {"k": {"q": ((batch, lc, hkv, hd), jnp.int8),
+                          "s": ((batch, lc, hkv, 1), jnp.float32)},
+                    "v": {"q": ((batch, lc, hkv, hd), jnp.int8),
+                          "s": ((batch, lc, hkv, 1), jnp.float32)}}
+        return {"k": ((batch, lc, hkv, hd), CDTYPE),
+                "v": ((batch, lc, hkv, hd), CDTYPE)}
+    if spec.kind == "mamba2":
+        return {"state": ((batch, h, cfg.ssm_state, cfg.ssm_expand * d // h), jnp.float32)}
+    if spec.kind == "mlstm":
+        p = d // h
+        return {"C": ((batch, h, p, p), jnp.float32),
+                "n": ((batch, h, p), jnp.float32)}
+    if spec.kind == "slstm":
+        return {"c": ((batch, d), jnp.float32),
+                "n": ((batch, d), jnp.float32),
+                "m": ((batch, d), jnp.float32)}
+    raise ValueError(spec.kind)
+
+
+def _cache_tree_shapes(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """Note: shared_attn blocks share PARAMETERS, not caches — every
+    invocation has its own stacked KV history (inputs differ per depth)."""
+    is_sd = lambda x: (isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple))
+    tree: dict = {}
+    for si, seg in enumerate(cfg.segments):
+        seg_tree = {}
+        for pi, spec in enumerate(seg.layers):
+            seg_tree[f"pos{pi}"] = jax.tree_util.tree_map(
+                lambda sd, _r=seg.reps: ((_r,) + sd[0], sd[1]),
+                _layer_cache_shapes(cfg, spec, batch, s_max), is_leaf=is_sd)
+        tree[f"seg{si}"] = seg_tree
+    return tree
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    return jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct(*sd),
+        _cache_tree_shapes(cfg, batch, s_max),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    def make(path, sd):
+        shp, dt = sd
+        if path and getattr(path[-1], "key", None) == "m":
+            return jnp.full(shp, -1e30, dt)   # sLSTM stabiliser: empty = -inf
+        return jnp.zeros(shp, dt)
+
+    return jax.tree_util.tree_map_with_path(
+        make, _cache_tree_shapes(cfg, batch, s_max),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def _decode_layer(x, p, c, spec: LayerSpec, cfg: ModelConfig, pos, shared):
+    eps = cfg.norm_eps
+    if spec.kind == "shared_attn":
+        p = shared            # parameters shared; cache is per invocation
+    if spec.kind in ("attn", "moe", "shared_attn"):
+        h, ck, cv = L.decode_attention(L.rms_norm(x, p["ln1"], eps), p, cfg,
+                                       spec.window, c["k"], c["v"], pos)
+        x = x + h
+        if spec.kind == "moe":
+            x = x + L.moe_mlp(L.rms_norm(x, p["ln2"], eps), p, cfg)
+        else:
+            x = x + L.dense_mlp(L.rms_norm(x, p["ln2"], eps), p, cfg)
+        return x, {"k": ck, "v": cv}
+    if spec.kind == "mamba2":
+        h, st = S.mamba2_decode(L.rms_norm(x, p["ln1"], eps), p, cfg, c["state"])
+        return x + h, {"state": st}
+    if spec.kind == "mlstm":
+        h, cc, nn = _mlstm_decode(L.rms_norm(x, p["ln1"], eps), p, cfg, c["C"], c["n"])
+        return x + h, {"C": cc, "n": nn}
+    if spec.kind == "slstm":
+        h, new = _slstm_decode(L.rms_norm(x, p["ln1"], eps), p, cfg, c)
+        return x + h, new
+    raise ValueError(spec.kind)
+
+
+def _mlstm_decode(x, p, cfg, C, n):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    cd = CDTYPE
+    xc = x[:, 0].astype(cd)
+    q = (xc @ p["wq"].astype(cd)).reshape(b, h, hd).astype(jnp.float32)
+    k = (xc @ p["wk"].astype(cd)).reshape(b, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (xc @ p["wv"].astype(cd)).reshape(b, h, hd).astype(jnp.float32)
+    gates = (xc @ p["w_if"].astype(cd)).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    f = jax.nn.sigmoid(f_pre)
+    i = jnp.exp(jnp.clip(i_pre, None, 10.0))
+    C = f[..., None, None] * C + (i * 1.0)[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhk,bhkp->bhp", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n))[..., None], 1.0)
+    y = (num / den).reshape(b, d).astype(cd)
+    y = y * jax.nn.silu(xc @ p["w_z"].astype(cd))
+    return (y @ p["w_out"].astype(cd)).astype(x.dtype)[:, None], C, n
+
+
+def _slstm_decode(x, p, cfg, c):
+    cd = CDTYPE
+    xc = x[:, 0].astype(cd)
+    gates = (xc @ p["w_gates"].astype(cd)).astype(jnp.float32) + p["b_gates"]
+    z_t, i_t, f_t, o_t = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(f_t + c["m"], i_t)
+    i_e = jnp.exp(i_t - m_new)
+    f_e = jnp.exp(f_t + c["m"] - m_new)
+    cc = f_e * c["c"] + i_e * jnp.tanh(z_t)
+    nn = f_e * c["n"] + i_e
+    hh = jax.nn.sigmoid(o_t) * cc / jnp.maximum(nn, 1.0)
+    y = (hh.astype(cd) @ p["w_out"].astype(cd)).astype(x.dtype)[:, None]
+    return y, {"c": cc, "n": nn, "m": m_new}
+
+
+# §Perf variant: thread decode caches through the scan CARRY with per-step
+# dynamic-index updates instead of the xs→ys copy.  The ys path makes XLA
+# double-buffer the whole cache (read stack + written stack); the carry is
+# single-buffered and aliases with the donated input.
+CACHE_CARRY = False
+
+
+def set_cache_carry(v: bool):
+    global CACHE_CARRY
+    CACHE_CARRY = bool(v)
+
+
+def decode_forward(params, cache, token, pos, cfg: ModelConfig):
+    """token: (B, 1) int32; pos: () int32. Returns (logits (B,1,V), cache)."""
+    x = params["embed"][token].astype(CDTYPE) * math.sqrt(cfg.d_model)
+    shared = params.get("shared")
+    new_cache: dict = {}
+
+    for si, seg in enumerate(cfg.segments):
+        seg_params = params[f"seg{si}"]
+        seg_cache = cache[f"seg{si}"]
+
+        def apply_layers(h, lp, lc, _seg=seg):
+            out_c = {}
+            for pi, spec in enumerate(_seg.layers):
+                p = lp.get(f"pos{pi}") if spec.kind != "shared_attn" else None
+                h, nc = _decode_layer(h, p, lc[f"pos{pi}"], spec, cfg, pos,
+                                      shared)
+                out_c[f"pos{pi}"] = nc
+            return h, out_c
+
+        if CACHE_CARRY:
+            def body(carry, inp):
+                h, sc = carry
+                lp, i = inp
+                lc = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                           keepdims=False), sc)
+                h, out_c = apply_layers(h, lp, lc)
+                sc = jax.tree_util.tree_map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), i, 0), sc, out_c)
+                return (h, sc), None
+
+            (x, seg_cache_new), _ = jax.lax.scan(
+                body, (x, seg_cache), (seg_params, jnp.arange(seg.reps)),
+                length=seg.reps, unroll=scan_unroll())
+        else:
+            def body(h, inp):
+                lp, lc = inp
+                return apply_layers(h, lp, lc)
+
+            x, seg_cache_new = jax.lax.scan(body, x, (seg_params, seg_cache),
+                                            length=seg.reps,
+                                            unroll=scan_unroll())
+        new_cache[f"seg{si}"] = seg_cache_new
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h, cfg)
+    return logits[..., :cfg.vocab], new_cache

@@ -1,0 +1,3 @@
+from repro.serve.engine import make_prefill_fn, make_decode_fn, ServeLoop
+
+__all__ = ["make_prefill_fn", "make_decode_fn", "ServeLoop"]

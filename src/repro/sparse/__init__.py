@@ -1,0 +1,31 @@
+"""Padded sparse representations for document-feature vectors.
+
+The paper stores each object as a tuple array ``[(term_id, value)] * nt_i`` with
+term IDs sorted ascending by document frequency (df).  On TPU we keep exactly
+that layout, padded to a fixed ``nt_max`` per batch so every shape is static:
+``ids[(N, P)] int32`` / ``vals[(N, P)] float32`` with ``val == 0`` on padding.
+
+Padding uses term id 0 with value 0 so any gather stays in bounds and any
+multiply contributes nothing.
+"""
+from repro.sparse.matrix import (
+    SparseDocs,
+    from_dense,
+    to_dense,
+    df_counts,
+    tf_idf,
+    l2_normalize_rows,
+    remap_terms_by_df,
+    l1_tail,
+)
+
+__all__ = [
+    "SparseDocs",
+    "from_dense",
+    "to_dense",
+    "df_counts",
+    "tf_idf",
+    "l2_normalize_rows",
+    "remap_terms_by_df",
+    "l1_tail",
+]

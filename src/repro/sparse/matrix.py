@@ -1,0 +1,143 @@
+"""Sparse document matrix: fixed-width padded (ids, vals) rows.
+
+All functions are pure JAX unless noted ``host_``; the host builders use numpy
+because corpus construction happens once, off the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseDocs:
+    """N documents, each a padded list of (term id, feature value) tuples.
+
+    ids:  (N, P) int32, term IDs ascending within a row (df-rank order once
+          :func:`remap_terms_by_df` has been applied); 0 on padding.
+    vals: (N, P) float32, 0.0 on padding.
+    nnz:  (N,) int32, number of live tuples per row.
+    dim:  vocabulary size D (static).
+    """
+
+    ids: jax.Array
+    vals: jax.Array
+    nnz: jax.Array
+    dim: int
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.ids, self.vals, self.nnz), self.dim
+
+    @classmethod
+    def tree_unflatten(cls, dim, leaves):
+        ids, vals, nnz = leaves
+        return cls(ids=ids, vals=vals, nnz=nnz, dim=dim)
+
+    # -- conveniences ------------------------------------------------------
+    @property
+    def n_docs(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def pad_width(self) -> int:
+        return self.ids.shape[1]
+
+    def row_mask(self) -> jax.Array:
+        """(N, P) bool — True on live tuples."""
+        return jnp.arange(self.pad_width)[None, :] < self.nnz[:, None]
+
+    def slice_rows(self, start: int, size: int) -> "SparseDocs":
+        return SparseDocs(
+            ids=jax.lax.dynamic_slice_in_dim(self.ids, start, size, 0),
+            vals=jax.lax.dynamic_slice_in_dim(self.vals, start, size, 0),
+            nnz=jax.lax.dynamic_slice_in_dim(self.nnz, start, size, 0),
+            dim=self.dim,
+        )
+
+
+def from_dense(x: np.ndarray | jax.Array, pad_to: int | None = None) -> SparseDocs:
+    """Host-side: dense (N, D) -> SparseDocs (deterministic, ascending ids)."""
+    x = np.asarray(x)
+    n, d = x.shape
+    nnz = (x != 0).sum(axis=1).astype(np.int32)
+    p = int(pad_to if pad_to is not None else max(int(nnz.max(initial=1)), 1))
+    ids = np.zeros((n, p), dtype=np.int32)
+    vals = np.zeros((n, p), dtype=np.float32)
+    for i in range(n):
+        (cols,) = np.nonzero(x[i])
+        cols = cols[:p]
+        ids[i, : len(cols)] = cols
+        vals[i, : len(cols)] = x[i, cols]
+    nnz = np.minimum(nnz, p)
+    return SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals), nnz=jnp.asarray(nnz), dim=d)
+
+
+def to_dense(docs: SparseDocs) -> jax.Array:
+    """(N, D) dense reconstruction (jnp; scatter-add per row)."""
+    n, p = docs.ids.shape
+    out = jnp.zeros((n, docs.dim), dtype=docs.vals.dtype)
+    rows = jnp.repeat(jnp.arange(n), p)
+    return out.at[rows, docs.ids.reshape(-1)].add(
+        jnp.where(docs.row_mask(), docs.vals, 0.0).reshape(-1)
+    )
+
+
+def df_counts(docs: SparseDocs) -> jax.Array:
+    """(D,) document frequency of each term."""
+    live = docs.row_mask()
+    flat_ids = jnp.where(live, docs.ids, docs.dim)  # park padding out of range
+    counts = jnp.zeros((docs.dim + 1,), jnp.int32).at[flat_ids.reshape(-1)].add(1)
+    return counts[: docs.dim]
+
+
+def tf_idf(docs: SparseDocs, df: jax.Array | None = None, n_total: int | None = None) -> SparseDocs:
+    """Classic tf-idf re-weighting (paper Eq. 15): tf * log(N / df_s)."""
+    if df is None:
+        df = df_counts(docs)
+    n = float(n_total if n_total is not None else docs.n_docs)
+    idf = jnp.log(n / jnp.maximum(df.astype(jnp.float32), 1.0))
+    vals = docs.vals * idf[docs.ids]
+    vals = jnp.where(docs.row_mask(), vals, 0.0)
+    return dataclasses.replace(docs, vals=vals)
+
+
+def l2_normalize_rows(docs: SparseDocs, eps: float = 1e-12) -> SparseDocs:
+    """Project each document onto the unit hypersphere (paper setting)."""
+    norm = jnp.sqrt(jnp.sum(docs.vals**2, axis=1) + eps)
+    return dataclasses.replace(docs, vals=docs.vals / norm[:, None])
+
+
+def remap_terms_by_df(docs: SparseDocs, df: jax.Array | None = None):
+    """Permute term IDs into ascending-df rank order (paper Table I).
+
+    Returns (docs', perm) where ``perm[new_id] = old_id`` and term ``D-1`` is
+    the highest-df term.  Object tuples are re-sorted ascending by new id so
+    a contiguous suffix of each row is exactly the ``s >= t_th`` tail the ES
+    filter needs.
+    """
+    if df is None:
+        df = df_counts(docs)
+    perm = jnp.argsort(df, stable=True)          # perm[new] = old
+    inv = jnp.argsort(perm, stable=True)         # inv[old] = new
+    new_ids = inv[docs.ids]
+    # keep padding sorted to the end: give dead slots id = dim
+    live = docs.row_mask()
+    sort_key = jnp.where(live, new_ids, docs.dim)
+    order = jnp.argsort(sort_key, axis=1, stable=True)
+    new_ids = jnp.take_along_axis(jnp.where(live, new_ids, 0), order, axis=1)
+    new_vals = jnp.take_along_axis(jnp.where(live, docs.vals, 0.0), order, axis=1)
+    docs2 = dataclasses.replace(docs, ids=new_ids, vals=new_vals)
+    return docs2, perm
+
+
+@partial(jax.jit, static_argnames=())
+def l1_tail(docs: SparseDocs, t_th: jax.Array) -> jax.Array:
+    """(N,) partial L1 norm over tuples with term id >= t_th (paper y init)."""
+    tail = (docs.ids >= t_th) & docs.row_mask()
+    return jnp.sum(jnp.where(tail, docs.vals, 0.0), axis=1)

@@ -1,0 +1,76 @@
+"""Training step builder: value_and_grad + microbatch accumulation + AdamW.
+
+Microbatching is a lax.scan over gradient accumulation slices — the knob
+that trades activation memory (the §Roofline memory term) for step latency.
+Remat is applied per segment-scan step inside ``forward`` (jax.checkpoint),
+so live activations are one layer deep per microbatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    loss_chunk: int = 512
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns train_step(params, opt_state, tokens, labels[, frontend]) ->
+    (params, opt_state, metrics).  tokens/labels: (B, S) int32."""
+
+    def loss_fn(params, tokens, labels, fe):
+        return lm_loss(params, tokens, labels, cfg, loss_chunk=tcfg.loss_chunk,
+                       frontend_embeds=fe)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, tokens, labels, frontend_embeds=None):
+        mb = tcfg.microbatches
+        b = tokens.shape[0]
+        assert b % mb == 0, (b, mb)
+
+        if mb == 1:
+            loss, grads = grad_fn(params, tokens, labels, frontend_embeds)
+        else:
+            shard = lambda a: (None if a is None else
+                               a.reshape((mb, b // mb) + a.shape[1:]))
+            tk, lb = shard(tokens), shard(labels)
+            fe = shard(frontend_embeds)
+
+            def body(acc, inp):
+                loss_acc, grads_acc = acc
+                if fe is None:
+                    t, l = inp
+                    f = None
+                else:
+                    t, l, f = inp
+                loss, grads = grad_fn(params, t, l, f)
+                return (loss_acc + loss,
+                        jax.tree_util.tree_map(jnp.add, grads_acc, grads)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (tk, lb) if fe is None else (tk, lb, fe)
+            from repro.models.config import scan_unroll
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), xs,
+                                            unroll=scan_unroll())
+            loss = loss / mb
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params,
+                                                      tcfg.optimizer)
+        metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

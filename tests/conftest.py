@@ -1,0 +1,23 @@
+"""Test process setup.
+
+8 host devices for the distributed tests (NOT 512 — that is dry-run-only,
+set inside launch/dryrun.py).  Must run before anything imports jax.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np      # noqa: E402
+import pytest           # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.data import make_corpus, CorpusSpec
+    return make_corpus(CorpusSpec(n_docs=1500, vocab=1024, nt_mean=35,
+                                  n_topics=16, seed=7))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,62 @@
+"""EstParams: the estimator's J approximates measured Mult and the
+structural parameters land where the paper says (t_th near D, small v_th)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SphericalKMeans, StructuralParams
+from repro.core.assignment import assignment_step
+from repro.core.estparams import estimate_params, EstGrid
+
+
+def test_estimator_tracks_actual(small_corpus):
+    docs, df, perm, topics = small_corpus
+    warm = SphericalKMeans(k=24, algo="mivi", max_iter=3, batch_size=750,
+                           seed=0).fit(docs, df=df)
+    state = warm.state
+    grid = EstGrid(n_v=6, n_s=12)
+    est, aux = estimate_params(docs, df, state.index.means_t, state.rho_self,
+                               k=24, grid=grid)
+    j_tab = np.asarray(aux["J"])
+    s_grid = np.asarray(aux["s_grid"])
+    v_grid = np.asarray(aux["v_grid"])
+
+    approx, actual = [], []
+    for hi in range(len(v_grid)):
+        si = int(np.argmin(j_tab[:, hi]))
+        params = StructuralParams(
+            t_th=jnp.asarray(int(s_grid[si]), jnp.int32),
+            v_th=jnp.asarray(float(v_grid[hi]), jnp.float32))
+        idx = state.index.with_params(params)
+        r = assignment_step("es", docs, idx, state.assign, state.rho_self,
+                            jnp.zeros((docs.n_docs,), bool))
+        approx.append(j_tab[si, hi])
+        actual.append(float(r.mult))
+    corr = np.corrcoef(approx, actual)[0, 1]
+    assert corr > 0.6, (corr, approx, actual)
+
+
+def test_structural_params_regime(small_corpus):
+    docs, df, perm, topics = small_corpus
+    warm = SphericalKMeans(k=24, algo="mivi", max_iter=3, batch_size=750,
+                           seed=0).fit(docs, df=df)
+    est, aux = estimate_params(docs, df, warm.state.index.means_t,
+                               warm.state.rho_self, k=24)
+    assert int(est.t_th) >= int(0.8 * docs.dim)     # grid floor = int(0.80·D)
+    vals = warm.state.index.means_t[warm.state.index.means_t > 0]
+    assert float(est.v_th) <= float(jnp.max(vals))
+    assert float(est.v_th) > 0
+
+
+def test_j_table_components_nonnegative(small_corpus):
+    docs, df, perm, topics = small_corpus
+    warm = SphericalKMeans(k=24, algo="mivi", max_iter=2, batch_size=750,
+                           seed=0).fit(docs, df=df)
+    _, aux = estimate_params(docs, df, warm.state.index.means_t,
+                             warm.state.rho_self, k=24,
+                             grid=EstGrid(n_v=5, n_s=8))
+    assert (np.asarray(aux["phi1"]) >= 0).all()
+    assert (np.asarray(aux["phi2"]) >= 0).all()
+    assert (np.asarray(aux["phi3"]) >= 0).all()
+    # φ1 grows with s' (more Region-1 terms), φ2 shrinks
+    assert (np.diff(np.asarray(aux["phi1"])) >= 0).all()
+    assert (np.diff(np.asarray(aux["phi2"]), axis=0) <= 1e-6).all()

@@ -1,0 +1,124 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import sparse_sim, esicp_gather, esicp_filter, segment_update, ref
+
+
+def _case(rng, b, p, d, k, dtype=np.float32):
+    ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
+    vals = rng.random((b, p)).astype(dtype)
+    nnz = rng.integers(1, p + 1, b)
+    for i in range(b):
+        vals[i, nnz[i]:] = 0
+    means_t = np.where(rng.random((d, k)) < 0.25,
+                       rng.random((d, k)), 0).astype(dtype)
+    return jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(means_t)
+
+
+SHAPES = [
+    (8, 8, 64, 32),       # tiny
+    (96, 20, 300, 150),   # unaligned everything
+    (128, 32, 512, 128),  # exactly aligned
+    (130, 17, 260, 129),  # off-by-one vs blocks
+]
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_sparse_sim(rng, b, p, d, k):
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    out = sparse_sim(ids, vals, means_t, b_blk=64, k_blk=64, d_blk=128)
+    exp = ref.sparse_sim(ids, vals, means_t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+@pytest.mark.parametrize("v_th", [0.2, 0.7])
+def test_esicp_gather(rng, b, p, d, k, v_th):
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    t_th = int(0.8 * d)
+    r12, y = esicp_gather(ids, vals, means_t, t_th, v_th,
+                          b_blk=64, k_blk=64, d_blk=128)
+    e12, ey = ref.esicp_gather(ids, vals, means_t, t_th, v_th)
+    np.testing.assert_allclose(np.asarray(r12), np.asarray(e12),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ey),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,k", [(8, 32), (96, 150), (128, 256), (70, 129)])
+def test_esicp_filter(rng, b, k):
+    rho12 = rng.random((b, k)).astype(np.float32)
+    y = rng.random((b, k)).astype(np.float32)
+    rho_max = rng.random(b).astype(np.float32)
+    col_ok = rng.random((b, k)) < 0.8
+    v_th = 0.35
+    m, c = esicp_filter(jnp.asarray(rho12), jnp.asarray(y),
+                        jnp.asarray(rho_max), jnp.asarray(col_ok), v_th,
+                        b_blk=64, k_blk=64)
+    em, ec = ref.esicp_filter(jnp.asarray(rho12), jnp.asarray(y),
+                              jnp.asarray(rho_max), jnp.asarray(col_ok), v_th)
+    assert np.array_equal(np.asarray(m), np.asarray(em))
+    assert np.array_equal(np.asarray(c), np.asarray(ec))
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_segment_update(rng, b, p, d, k):
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    assign = jnp.asarray(rng.integers(0, k, b).astype(np.int32))
+    out = segment_update(assign, ids, vals, k=k, d=d,
+                         b_blk=64, k_blk=64, d_blk=128)
+    exp = ref.segment_update(assign, ids, vals, k, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_matches_scan_core(rng):
+    """Kernel path == the core's TAAT scan accumulators (integration)."""
+    from repro.core import build_mean_index, StructuralParams
+    from repro.core.assignment import _scan
+    from repro.sparse import SparseDocs
+
+    b, p, d, k = 64, 16, 256, 64
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    nnz = jnp.asarray((np.asarray(vals) != 0).sum(1).astype(np.int32))
+    docs = SparseDocs(ids=ids, vals=vals, nnz=nnz, dim=d)
+    params = StructuralParams(t_th=jnp.asarray(int(0.8 * d), jnp.int32),
+                              v_th=jnp.asarray(0.3, jnp.float32))
+    index = build_mean_index(jnp.asarray(means_t).T, params)
+    out = _scan(docs, index, jnp.zeros((b,), bool), mode="esicp")
+    r12, y = esicp_gather(ids, vals, index.means_t, params.t_th, params.v_th,
+                          b_blk=64, k_blk=64, d_blk=128)
+    np.testing.assert_allclose(np.asarray(out["rho12"]), np.asarray(r12),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out["y"]), np.asarray(y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bh,sq,sk,hd", [(2, 64, 64, 32), (3, 200, 136, 64),
+                                         (4, 256, 256, 128)])
+@pytest.mark.parametrize("window", [-1, 48])
+def test_flash_attention(rng, bh, sq, sk, hd, window):
+    from repro.kernels import flash_attention
+    q = jnp.asarray(rng.standard_normal((bh, sq, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((bh, sk, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((bh, sk, hd)).astype(np.float32))
+    out = flash_attention(q, k, v, window=window, sq_blk=64, sk_blk=64)
+    exp = ref.flash_attention(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16_inputs(rng):
+    """bf16 storage dtypes lower correctly (values checked in f32)."""
+    from repro.kernels import flash_attention
+    q = jnp.asarray(rng.standard_normal((2, 128, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((2, 128, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((2, 128, 64)).astype(np.float32))
+    out = flash_attention(q, k, v, window=-1, sq_blk=64, sk_blk=64)
+    exp = ref.flash_attention(q, k, v, -1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)

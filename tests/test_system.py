@@ -1,0 +1,61 @@
+"""End-to-end behaviour: the paper's acceleration contract.
+
+Every accelerated algorithm must return the *identical* clustering to the
+MIVI baseline from the same initial state (the paper's definition of
+"acceleration", §I), while reducing the Mult/CPR diagnostics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SphericalKMeans
+
+ALGOS = ["icp", "es", "esicp", "ta-icp", "cs-icp"]
+
+
+@pytest.fixture(scope="module")
+def fitted(small_corpus):
+    docs, df, perm, topics = small_corpus
+    ref = SphericalKMeans(k=24, algo="mivi", max_iter=25, batch_size=750,
+                          seed=3).fit(docs, df=df)
+    return docs, df, ref
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_exactness(fitted, algo):
+    docs, df, ref = fitted
+    r = SphericalKMeans(k=24, algo=algo, max_iter=25, batch_size=750,
+                        seed=3).fit(docs, df=df)
+    assert r.n_iter == ref.n_iter
+    assert (r.assign == ref.assign).all()
+    assert abs(r.objective - ref.objective) < 1e-3 * abs(ref.objective)
+
+
+def test_esicp_reduces_mult(fitted):
+    docs, df, ref = fitted
+    r = SphericalKMeans(k=24, algo="esicp", max_iter=25, batch_size=750,
+                        seed=3).fit(docs, df=df)
+    total = lambda res: sum(h["mult"] for h in res.history)
+    assert total(r) < 0.7 * total(ref)
+    assert r.history[-1]["cpr"] < 0.25
+
+
+def test_objective_monotone(fitted):
+    docs, df, ref = fitted
+    objs = [h["objective"] for h in ref.history]
+    diffs = np.diff(objs)
+    assert (diffs >= -1e-3 * abs(objs[0])).all(), "Lloyd objective decreased"
+
+
+def test_convergence_reached(fitted):
+    _, _, ref = fitted
+    assert ref.converged
+    assert ref.history[-1]["n_changed"] == 0
+
+
+def test_estparams_lands_in_tail(fitted):
+    docs, df, ref = fitted
+    r = SphericalKMeans(k=24, algo="esicp", max_iter=6, batch_size=750,
+                        seed=3).fit(docs, df=df)
+    # paper: t_th close to D (≈ 0.9 D); our grid floor is 0.80 D
+    assert int(r.params.t_th) >= 0.5 * docs.dim
+    assert 0.0 < float(r.params.v_th) < 1.0
