@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, StructuralParams
+from benchmarks.common import corpus, csv_row, make_kmeans
+from repro.core import StructuralParams
 from repro.core.estparams import estimate_params, EstGrid
 
 
@@ -18,7 +18,7 @@ def run():
     job, docs, df, perm, topics = corpus("pubmed")
 
     # ES: both estimated.  ThV: t_th = 0.  ThT: v_th = max (vacuous bound).
-    warm = SphericalKMeans(k=job.k, algo="mivi", max_iter=2, batch_size=4096,
+    warm = make_kmeans(k=job.k, algo="mivi", max_iter=2, batch_size=4096,
                            seed=0).fit(docs, df=df)
     est, _ = estimate_params(docs, df, warm.state.index.means_t,
                              warm.state.rho_self, k=job.k)
@@ -34,7 +34,7 @@ def run():
     stats = {}
     ref = None
     for name, (algo, params) in variants.items():
-        r = SphericalKMeans(k=job.k, algo=algo,
+        r = make_kmeans(k=job.k, algo=algo,
                             params=params if params is not None else "auto",
                             max_iter=10, batch_size=4096, seed=0).fit(docs, df=df)
         if ref is None:

@@ -5,8 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, metrics
+from benchmarks.common import corpus, csv_row, make_kmeans
+from repro.core import metrics
 
 
 def run():
@@ -16,7 +16,7 @@ def run():
     for k in (10, 50, 150):
         assigns, objs = [], []
         for seed in range(4):
-            r = SphericalKMeans(k=k, algo="esicp", max_iter=15,
+            r = make_kmeans(k=k, algo="esicp", max_iter=15,
                                 batch_size=3000, seed=seed).fit(sub, df=df)
             assigns.append(r.assign)
             objs.append(r.objective)

@@ -4,17 +4,36 @@ PubMed/NYT are not shipped offline; all benchmarks run on the UC-faithful
 synthetic corpora from configs/pubmed8m.py::reduced() (DESIGN.md §7) and
 validate the paper's *relative* claims (speedups, CPR curves, filter
 exactness), not absolute wall-times.
+
+Backend selection: every suite builds its clusterers through
+:func:`make_kmeans`, so one env var flips the whole harness onto the Pallas
+kernel path ('auto' resolves per-platform; see core/backends.py):
+
+    REPRO_BACKEND=pallas PYTHONPATH=src python -m benchmarks.run --only table4
 """
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import numpy as np
 
 from repro.configs.pubmed8m import reduced as pubmed_reduced
 from repro.configs.nyt1m import reduced as nyt_reduced
+from repro.core import SphericalKMeans
 from repro.data import make_corpus
+
+
+def default_backend() -> str:
+    """Assignment-engine backend for every suite (env: REPRO_BACKEND)."""
+    return os.environ.get("REPRO_BACKEND", "reference")
+
+
+def make_kmeans(k: int, **kw) -> SphericalKMeans:
+    """SphericalKMeans with the harness-wide backend default threaded in."""
+    kw.setdefault("backend", default_backend())
+    return SphericalKMeans(k=k, **kw)
 
 
 @functools.lru_cache(maxsize=4)

@@ -12,15 +12,15 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, StructuralParams
+from benchmarks.common import default_backend, corpus, csv_row, make_kmeans
+from repro.core import StructuralParams
 from repro.core.assignment import assignment_step
 from repro.core.estparams import estimate_params
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
-    warm = SphericalKMeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
+    warm = make_kmeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
                            seed=0).fit(docs, df=df)
     state = warm.state
     est, aux = estimate_params(docs, df, state.index.means_t, state.rho_self,
@@ -36,7 +36,8 @@ def run():
             t_th=t_th, v_th=jnp.asarray(v, jnp.float32)))
         r = assignment_step("es", sub, idx, state.assign[:4096],
                             state.rho_self[:4096],
-                            jnp.zeros((4096,), bool))
+                            jnp.zeros((4096,), bool),
+                            backend=default_backend())
         ntail = jnp.sum(sub.row_mask(), axis=1).astype(jnp.float32)
         verify = float(jnp.sum(r.n_candidates * ntail))
         before.append(float(r.mult) - verify)

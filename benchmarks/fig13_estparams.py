@@ -10,15 +10,15 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, StructuralParams
+from benchmarks.common import default_backend, corpus, csv_row, make_kmeans
+from repro.core import StructuralParams
 from repro.core.assignment import assignment_step
 from repro.core.estparams import estimate_params, EstGrid
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
-    warm = SphericalKMeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
+    warm = make_kmeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
                            seed=0).fit(docs, df=df)
     state = warm.state
     grid = EstGrid(n_v=8, n_s=24)
@@ -37,7 +37,8 @@ def run():
                                   v_th=jnp.asarray(float(v), jnp.float32))
         idx = state.index.with_params(params)
         r = assignment_step("es", sub, idx, state.assign[:n_eval],
-                            state.rho_self[:n_eval], jnp.zeros((n_eval,), bool))
+                            state.rho_self[:n_eval], jnp.zeros((n_eval,), bool),
+                            backend=default_backend())
         approx.append(j_tab[si, hi] * n_eval / docs.n_docs)
         actual.append(float(r.mult))
     approx = np.array(approx); actual = np.array(actual)

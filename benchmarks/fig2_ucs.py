@@ -6,8 +6,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, metrics
+from benchmarks.common import corpus, csv_row, make_kmeans
+from repro.core import metrics
 
 
 def run():
@@ -16,7 +16,7 @@ def run():
     np.add.at(tf, np.asarray(docs.ids).ravel(), np.asarray(docs.vals).ravel() > 0)
 
     alpha_df = metrics.zipf_fit(np.asarray(df))
-    res = SphericalKMeans(k=job.k, algo="esicp", max_iter=6,
+    res = make_kmeans(k=job.k, algo="esicp", max_iter=6,
                           batch_size=4096, seed=0).fit(docs, df=df)
     means_t = res.state.index.means_t
     mf = np.asarray(jnp.sum(means_t > 0, axis=1))

@@ -6,13 +6,13 @@ on the tf-idf skew.
 """
 from __future__ import annotations
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans, metrics
+from benchmarks.common import corpus, csv_row, make_kmeans
+from repro.core import metrics
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
-    res = SphericalKMeans(k=job.k, algo="esicp", max_iter=4,
+    res = make_kmeans(k=job.k, algo="esicp", max_iter=4,
                           batch_size=4096, seed=0).fit(docs, df=df)
     nr, cps, std = metrics.cps_curve(docs, res.state.index.means_t, res.assign)
     i10 = int(0.1 * (len(nr) - 1))

@@ -8,15 +8,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans
+from benchmarks.common import corpus, csv_row, make_kmeans
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
     rows = []
     for algo in ["mivi", "icp", "esicp"]:
-        r = SphericalKMeans(k=job.k, algo=algo, max_iter=12,
+        r = make_kmeans(k=job.k, algo=algo, max_iter=12,
                             batch_size=4096, seed=0).fit(docs, df=df)
         mult = [h["mult"] for h in r.history]
         cpr = [h["cpr"] for h in r.history]

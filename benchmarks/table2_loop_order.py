@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, time_call, csv_row
+from benchmarks.common import default_backend, corpus, time_call, csv_row
 from repro.core import init_state, StructuralParams
 from repro.core.assignment import assignment_step
 
@@ -40,14 +40,16 @@ def run():
 
     mivi = jax.jit(lambda: assignment_step(
         "mivi", sub, state.index, state.assign, state.rho_self,
-        jnp.zeros_like(state.assign, bool)).rho.sum())
+        jnp.zeros_like(state.assign, bool),
+        backend=default_backend()).rho.sum())
     divi = jax.jit(lambda: _divi_sims(sub, means_t).sum())
 
     _, t_mivi = time_call(lambda: mivi().block_until_ready())
     _, t_divi = time_call(lambda: divi().block_until_ready())
 
     res = assignment_step("mivi", sub, state.index, state.assign,
-                          state.rho_self, jnp.zeros_like(state.assign, bool))
+                          state.rho_self, jnp.zeros_like(state.assign, bool),
+                          backend=default_backend())
     mult = float(res.mult)
     # Ding+ model (paper Table II): 0.2284x Mult, ~3x time via BM/LLCM
     rows = [

@@ -11,8 +11,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row
-from repro.core import SphericalKMeans
+from benchmarks.common import corpus, csv_row, make_kmeans
 
 ALGOS = ["mivi", "icp", "cs-icp", "ta-icp", "esicp"]
 
@@ -33,7 +32,7 @@ def run(dataset: str = "pubmed"):
     job, docs, df, perm, topics = corpus(dataset)
     results = {}
     for algo in ALGOS:
-        r = SphericalKMeans(k=job.k, algo=algo, max_iter=job.max_iter,
+        r = make_kmeans(k=job.k, algo=algo, max_iter=job.max_iter,
                             batch_size=4096, seed=0).fit(docs, df=df)
         results[algo] = r
     ref = results["mivi"]

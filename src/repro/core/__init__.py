@@ -2,6 +2,7 @@
 
 Public API:
     MeanIndex            — structured mean set (the paper's mean-inverted index)
+    BACKENDS             — assignment accumulator engines (reference | pallas)
     StructuralParams     — (t_th, v_th) shared thresholds
     estimate_params      — EstParams (paper §V / App. B–C)
     assignment_step      — one assignment step under a chosen algorithm
@@ -10,6 +11,7 @@ Public API:
 """
 from repro.core.meanindex import MeanIndex, StructuralParams, build_mean_index
 from repro.core.assignment import assignment_step, ALGORITHMS
+from repro.core.backends import BACKENDS, Backend, resolve_backend
 from repro.core.update import update_step, init_state, KMeansState
 from repro.core.estparams import estimate_params, EstGrid
 from repro.core.lloyd import SphericalKMeans, LloydResult
@@ -18,6 +20,7 @@ from repro.core import metrics
 __all__ = [
     "MeanIndex", "StructuralParams", "build_mean_index",
     "assignment_step", "ALGORITHMS",
+    "BACKENDS", "Backend", "resolve_backend",
     "update_step", "init_state", "KMeansState",
     "estimate_params", "EstGrid",
     "SphericalKMeans", "LloydResult", "metrics",

@@ -1,16 +1,17 @@
 """Assignment step for all compared algorithms (paper Algs. 1–5, App. F).
 
-Every algorithm is expressed as a term-at-a-time (TAAT) scan over the padded
-object tuples — the paper's MIVI loop order (Alg. 1 lines 1–5), which it shows
-is the architecture-friendly orientation.  On TPU each scan step is one
-(B,)-gather of a posting row ξ_s block plus a rank-1 multiply-add on the
-(B, K) accumulator: no data-dependent branches, shared thresholds as masks.
+The algorithms here are pure selection logic: they consume accumulators
+(exact similarities, region-wise partial sums, survivor masks) produced by a
+pluggable :class:`repro.core.backends.Backend` — ``reference`` (the TAAT
+``lax.scan``, the paper's MIVI loop order and this repo's exactness oracle)
+or ``pallas`` (the TPU kernels in :mod:`repro.kernels.ops`, interpret mode
+off-TPU).  See backends.py / DESIGN.md §5 for the split.
 
 Exactness contract (tested): every algorithm returns *identical* assignments
-to MIVI from the same state.  Filters only change the Mult/CPR diagnostics,
-which are counted as the paper counts them — the number of multiply-adds a
-CPU implementation would execute, i.e. pairs (object-term, posting-entry)
-actually visited.
+to MIVI from the same state, under every backend.  Filters only change the
+Mult/CPR diagnostics, which are counted as the paper counts them — the
+number of multiply-adds a CPU implementation would execute, i.e. pairs
+(object-term, posting-entry) actually visited.
 
 Tie policy (paper Algs. 1/2 line "if ρ_j > ρ_max"): strict improvement over
 the refreshed self-similarity; among equal improvers the lowest centroid ID
@@ -26,6 +27,11 @@ import jax.numpy as jnp
 
 from repro.sparse import SparseDocs
 from repro.core.meanindex import MeanIndex
+from repro.core.backends import col_ok_mask, reference_scan, resolve_backend
+
+# Back-compat alias: property/kernel tests exercise the oracle scan directly.
+_scan = reference_scan
+_col_ok = col_ok_mask
 
 
 @jax.tree_util.register_pytree_node_class
@@ -45,12 +51,6 @@ class AssignResult:
         return cls(*leaves)
 
 
-def _col_ok(index: MeanIndex, xstate: jax.Array) -> jax.Array:
-    """(B, K) — centroids the ICP filter allows: moving ones always; invariant
-    ones only for objects that are not 'more similar' (Eq. 5)."""
-    return index.moving[None, :] | ~xstate[:, None]
-
-
 def _finalize(sims_masked, prev_assign, rho_self):
     """Sequential 'if ρ_j > ρ_max' semantics, vectorised."""
     best_j = jnp.argmax(sims_masked, axis=1).astype(jnp.int32)
@@ -61,91 +61,19 @@ def _finalize(sims_masked, prev_assign, rho_self):
     return assign, rho
 
 
-# ---------------------------------------------------------------------------
-# TAAT scan cores.  Each returns the per-object accumulators + a mult counter.
-# ---------------------------------------------------------------------------
-
-def _scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
-          v_ta: jax.Array | None = None):
-    """One fused TAAT pass.
-
-    mode:
-      'exact'  -> sims, mult                                  (MIVI / ICP)
-      'esicp'  -> sims, rho12, y, mult1+2 (region-aware)      (ES / ES-ICP)
-      'ta'     -> sims, rho12', y', mult                      (TA-ICP)
-      'cs'     -> sims, rho1, sq (Σ v² over tail), mult       (CS-ICP)
-
-    ``sims`` is always the full exact similarity (reference semantics); the
-    CPU algorithm would only compute it for survivors — that cost is what the
-    verify-mult term in the caller accounts for.
-    """
-    b, p = docs.ids.shape
-    k = index.k
-    t_th = index.params.t_th
-    v_th = index.params.v_th
-    means_t = index.means_t
-    col_ok = _col_ok(index, xstate)          # (B, K) — ICP lane mask
-    f32 = jnp.float32
-
-    def body(carry, xs):
-        idp, vp = xs                          # (B,), (B,)
-        rows = means_t[idp]                   # (B, K) posting block
-        live = vp != 0.0
-        nz = (rows > 0) & col_ok & live[:, None]
-        contrib = vp[:, None] * rows
-        sims = carry["sims"] + contrib
-        out = {"sims": sims}
-        if mode == "exact":
-            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
-        elif mode == "esicp":
-            tail = (idp >= t_th)[:, None]     # (B, 1)
-            hi = rows >= v_th
-            exact_mask = jnp.where(tail, hi, True)
-            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
-            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
-            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
-        elif mode == "ta":
-            tail = (idp >= t_th)[:, None]
-            hi = rows >= v_ta[:, None]        # per-object threshold (Eq. 16)
-            exact_mask = jnp.where(tail, hi, True)
-            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
-            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
-            # TA walks each sorted posting until v < v_ta: visits hi entries
-            # plus one terminator comparison; mults are the hi entries.
-            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
-        elif mode == "cs":
-            tail = (idp >= t_th)[:, None]
-            out["rho1"] = carry["rho1"] + jnp.where(tail, 0.0, contrib)
-            out["sq"] = carry["sq"] + jnp.where(tail, rows * rows, 0.0)
-            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
-        else:
-            raise ValueError(mode)
-        return out, None
-
-    carry = {"sims": jnp.zeros((b, k), f32), "mult": jnp.zeros((), f32)}
-    if mode == "esicp" or mode == "ta":
-        carry["rho12"] = jnp.zeros((b, k), f32)
-        carry["y"] = jnp.zeros((b, k), f32)
-    elif mode == "cs":
-        carry["rho1"] = jnp.zeros((b, k), f32)
-        carry["sq"] = jnp.zeros((b, k), f32)
-    out, _ = jax.lax.scan(body, carry, (docs.ids.T, docs.vals.T))
-    return out
-
-
 def _nt_tail(docs: SparseDocs, t_th) -> jax.Array:
     """(B,) — (ntH)_i: live tuples with term id >= t_th."""
     return jnp.sum((docs.ids >= t_th) & docs.row_mask(), axis=1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
-# Algorithms.
+# Algorithms.  Each takes the backend as its first argument.
 # ---------------------------------------------------------------------------
 
-def _mivi(docs, index, prev_assign, rho_self, xstate):
+def _mivi(bk, docs, index, prev_assign, rho_self, xstate):
     """Alg. 1 — exact TAAT over the mean-inverted index, no filters."""
     no_icp = jnp.zeros_like(xstate)
-    out = _scan(docs, index, no_icp, mode="exact")
+    out = bk.accumulate(docs, index, no_icp, mode="exact")
     assign, rho = _finalize(out["sims"], prev_assign, rho_self)
     k = index.k
     return AssignResult(assign, rho,
@@ -153,53 +81,51 @@ def _mivi(docs, index, prev_assign, rho_self, xstate):
                         mult=out["mult"], changed=assign != prev_assign)
 
 
-def _icp(docs, index, prev_assign, rho_self, xstate):
+def _icp(bk, docs, index, prev_assign, rho_self, xstate):
     """Auxiliary filter only (Kaukoranta+): skip invariant centroids for
     'more similar' objects."""
-    out = _scan(docs, index, xstate, mode="exact")
-    col_ok = _col_ok(index, xstate)
+    out = bk.accumulate(docs, index, xstate, mode="exact")
+    col_ok = col_ok_mask(index, xstate)
     sims = jnp.where(col_ok, out["sims"], -jnp.inf)
     assign, rho = _finalize(sims, prev_assign, rho_self)
     n_cand = jnp.sum(col_ok, axis=1).astype(jnp.int32)
     return AssignResult(assign, rho, n_cand, out["mult"], assign != prev_assign)
 
 
-def _es_core(docs, index, prev_assign, rho_self, xstate):
+def _es_core(bk, docs, index, prev_assign, rho_self, xstate):
     """ES upper bound + optional ICP: Algs. 2/3 (and 4/5 with scaling)."""
-    out = _scan(docs, index, xstate, mode="esicp")
+    out = bk.accumulate(docs, index, xstate, mode="esicp")
     v_th = index.params.v_th
-    col_ok = _col_ok(index, xstate)
-    # Upper bound (Eq. 4): rho12 + y·v_th.  The paper's App.-A scaling removes
-    # this multiply on CPU; on TPU it is a fused multiply-add — free either way.
-    ub = out["rho12"] + out["y"] * v_th
-    survivors = (ub > rho_self[:, None]) & col_ok
+    col_ok = col_ok_mask(index, xstate)
+    survivors, n_cand = bk.es_filter(out["rho12"], out["y"], rho_self,
+                                     col_ok, v_th)
     sims = jnp.where(survivors, out["sims"], -jnp.inf)
     assign, rho = _finalize(sims, prev_assign, rho_self)
-    n_cand = jnp.sum(survivors, axis=1).astype(jnp.int32)
     # Verification phase cost: |Z_i| exact Region-3 partials, (ntH)_i mults each.
     verify_mult = jnp.sum(n_cand.astype(jnp.float32) * _nt_tail(docs, index.params.t_th))
     return AssignResult(assign, rho, n_cand, out["mult"] + verify_mult,
                         assign != prev_assign)
 
 
-def _esicp(docs, index, prev_assign, rho_self, xstate):
-    return _es_core(docs, index, prev_assign, rho_self, xstate)
+def _esicp(bk, docs, index, prev_assign, rho_self, xstate):
+    return _es_core(bk, docs, index, prev_assign, rho_self, xstate)
 
 
-def _es(docs, index, prev_assign, rho_self, xstate):
+def _es(bk, docs, index, prev_assign, rho_self, xstate):
     """Ablation: ES main filter without ICP (App. D)."""
-    return _es_core(docs, index, prev_assign, rho_self, jnp.zeros_like(xstate))
+    return _es_core(bk, docs, index, prev_assign, rho_self,
+                    jnp.zeros_like(xstate))
 
 
-def _ta_icp(docs, index, prev_assign, rho_self, xstate):
+def _ta_icp(bk, docs, index, prev_assign, rho_self, xstate):
     """TA-ICP (App. F-A): per-object threshold v_ta = ρ_max / ||x||_1."""
     l1 = jnp.sum(docs.vals, axis=1)                       # ||x_i||_1 (vals >= 0)
     # ρ_max = -inf encodes "no history" (iteration 1): clamp to 0 so the
     # threshold degenerates to v_ta = 0 (everything exact, nothing pruned)
     # instead of poisoning the bound with 0·(-inf) = NaN.
     v_ta = jnp.maximum(rho_self, 0.0) / jnp.maximum(l1, 1e-12)
-    out = _scan(docs, index, xstate, mode="ta", v_ta=v_ta)
-    col_ok = _col_ok(index, xstate)
+    out = bk.accumulate(docs, index, xstate, mode="ta", v_ta=v_ta)
+    col_ok = col_ok_mask(index, xstate)
     ub = out["rho12"] + out["y"] * v_ta[:, None]
     # G_(ta) line 10: centroids with zero partial similarity are skipped —
     # their bound v_ta·y <= v_ta·||x||_1 = ρ_max can never strictly win.
@@ -212,12 +138,12 @@ def _ta_icp(docs, index, prev_assign, rho_self, xstate):
                         assign != prev_assign)
 
 
-def _cs_icp(docs, index, prev_assign, rho_self, xstate):
+def _cs_icp(bk, docs, index, prev_assign, rho_self, xstate):
     """CS-ICP (App. F-B): Cauchy–Schwarz bound on the tail subspace."""
     tail_mask = (docs.ids >= index.params.t_th) & docs.row_mask()
     x_tail_l2 = jnp.sqrt(jnp.sum(jnp.where(tail_mask, docs.vals, 0.0) ** 2, axis=1))
-    out = _scan(docs, index, xstate, mode="cs")
-    col_ok = _col_ok(index, xstate)
+    out = bk.accumulate(docs, index, xstate, mode="cs")
+    col_ok = col_ok_mask(index, xstate)
     ub = out["rho1"] + x_tail_l2[:, None] * jnp.sqrt(out["sq"])
     survivors = (ub > rho_self[:, None]) & col_ok
     sims = jnp.where(survivors, out["sims"], -jnp.inf)
@@ -238,17 +164,27 @@ ALGORITHMS = {
 }
 
 
-@partial(jax.jit, static_argnames=("algo",))
+def assign_batch(algo: str, backend, docs: SparseDocs, index: MeanIndex,
+                 prev_assign: jax.Array, rho_self: jax.Array,
+                 xstate: jax.Array) -> AssignResult:
+    """Un-jitted dispatch — the traceable core shared by ``assignment_step``
+    and the fused epoch in :mod:`repro.core.lloyd`."""
+    if algo not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algo!r}; one of {sorted(ALGORITHMS)}")
+    bk = resolve_backend(backend)
+    return ALGORITHMS[algo](bk, docs, index, prev_assign, rho_self, xstate)
+
+
+@partial(jax.jit, static_argnames=("algo", "backend"))
 def assignment_step(algo: str, docs: SparseDocs, index: MeanIndex,
                     prev_assign: jax.Array, rho_self: jax.Array,
-                    xstate: jax.Array) -> AssignResult:
+                    xstate: jax.Array, backend: str = "reference") -> AssignResult:
     """One assignment step over a batch of objects.
 
     prev_assign: (B,) int32 — a(i) from the previous iteration.
     rho_self:    (B,) float32 — ρ_{a(i)}^{[r-1]}, refreshed at the last update
                  step (Alg. 6 lines 6–7), the shared pruning threshold ρ_max.
     xstate:      (B,) bool — Eq. (5) 'more similar' flag for the ICP filter.
+    backend:     'reference' | 'pallas' | 'auto' (see core/backends.py).
     """
-    if algo not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algo!r}; one of {sorted(ALGORITHMS)}")
-    return ALGORITHMS[algo](docs, index, prev_assign, rho_self, xstate)
+    return assign_batch(algo, backend, docs, index, prev_assign, rho_self, xstate)

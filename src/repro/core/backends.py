@@ -1,0 +1,263 @@
+"""Backend-pluggable assignment primitives (DESIGN.md §5).
+
+The six algorithms in :mod:`repro.core.assignment` are pure selection logic
+over a small set of accumulators (exact similarities, region-wise partial
+sums, filter survivor masks).  This module owns *how* those accumulators are
+produced:
+
+``reference``
+    The TAAT ``lax.scan`` over padded object tuples — the exactness oracle.
+    Runs everywhere, no alignment constraints, and is the semantics every
+    other backend is tested against.
+
+``pallas``
+    Dispatches the hot accumulators to the TPU Pallas kernels in
+    :mod:`repro.kernels.ops` (``sparse_sim`` / ``esicp_gather`` /
+    ``esicp_filter``).  Off-TPU the kernels run in interpret mode (handled
+    inside ``kernels.ops``), so the backend is selectable — and tested —
+    on CPU.  The TA bound needs a *per-object* value threshold, which the
+    shared-threshold gather kernel cannot express; that one mode delegates
+    to the reference scan (see the AFM translation table in DESIGN.md §3).
+
+Exactness contract: for every algorithm, both backends produce identical
+assignments from identical state.  ``mult`` diagnostics are kept exactly
+equal too — the pallas backend counts visited (object-term, posting-entry)
+pairs with extra binarised ``sparse_sim`` calls rather than approximating.
+
+Selection: pass ``backend="reference" | "pallas" | "auto"`` anywhere a
+``backend=`` argument is threaded (``SphericalKMeans``, ``assignment_step``,
+``distributed.kmeans``, ``serve.ClusterEngine``, ``benchmarks.common``).
+``auto`` resolves to ``pallas`` on TPU and ``reference`` elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse import SparseDocs
+from repro.core.meanindex import MeanIndex
+
+
+def col_ok_mask(index: MeanIndex, xstate: jax.Array) -> jax.Array:
+    """(B, K) — centroids the ICP filter allows: moving ones always; invariant
+    ones only for objects that are not 'more similar' (Eq. 5)."""
+    return index.moving[None, :] | ~xstate[:, None]
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Producer of the assignment-step accumulators.
+
+    ``accumulate`` returns the same dict the reference TAAT scan produces:
+
+      mode 'exact'  -> {sims, mult}
+      mode 'esicp'  -> {sims, rho12, y, mult}
+      mode 'ta'     -> {sims, rho12, y, mult}   (per-object v_ta threshold)
+      mode 'cs'     -> {sims, rho1, sq, mult}
+
+    ``es_filter`` evaluates the ES upper bound (Eq. 4) and returns the
+    survivor mask and per-object candidate counts |Z_i|.
+    """
+
+    name: str
+
+    def accumulate(self, docs: SparseDocs, index: MeanIndex, xstate: jax.Array,
+                   *, mode: str, v_ta: jax.Array | None = None,
+                   diag: bool = True) -> dict: ...
+
+    def es_filter(self, rho12: jax.Array, y: jax.Array, rho_self: jax.Array,
+                  col_ok: jax.Array, v_th: jax.Array): ...
+
+
+# ---------------------------------------------------------------------------
+# Reference backend: the TAAT lax.scan (moved verbatim from assignment.py).
+# ---------------------------------------------------------------------------
+
+def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
+                   v_ta: jax.Array | None = None):
+    """One fused TAAT pass — the paper's MIVI loop order (Alg. 1 lines 1–5).
+
+    On TPU each scan step is one (B,)-gather of a posting row ξ_s block plus
+    a rank-1 multiply-add on the (B, K) accumulator: no data-dependent
+    branches, shared thresholds as masks.
+
+    ``sims`` is always the full exact similarity (reference semantics); the
+    CPU algorithm would only compute it for survivors — that cost is what the
+    verify-mult term in the caller accounts for.
+    """
+    b, p = docs.ids.shape
+    k = index.k
+    t_th = index.params.t_th
+    v_th = index.params.v_th
+    means_t = index.means_t
+    col_ok = col_ok_mask(index, xstate)      # (B, K) — ICP lane mask
+    f32 = jnp.float32
+
+    def body(carry, xs):
+        idp, vp = xs                          # (B,), (B,)
+        rows = means_t[idp]                   # (B, K) posting block
+        live = vp != 0.0
+        nz = (rows > 0) & col_ok & live[:, None]
+        contrib = vp[:, None] * rows
+        sims = carry["sims"] + contrib
+        out = {"sims": sims}
+        if mode == "exact":
+            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
+        elif mode == "esicp":
+            tail = (idp >= t_th)[:, None]     # (B, 1)
+            hi = rows >= v_th
+            exact_mask = jnp.where(tail, hi, True)
+            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
+            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
+            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
+        elif mode == "ta":
+            tail = (idp >= t_th)[:, None]
+            hi = rows >= v_ta[:, None]        # per-object threshold (Eq. 16)
+            exact_mask = jnp.where(tail, hi, True)
+            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
+            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
+            # TA walks each sorted posting until v < v_ta: visits hi entries
+            # plus one terminator comparison; mults are the hi entries.
+            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
+        elif mode == "cs":
+            tail = (idp >= t_th)[:, None]
+            out["rho1"] = carry["rho1"] + jnp.where(tail, 0.0, contrib)
+            out["sq"] = carry["sq"] + jnp.where(tail, rows * rows, 0.0)
+            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
+        else:
+            raise ValueError(mode)
+        return out, None
+
+    carry = {"sims": jnp.zeros((b, k), f32), "mult": jnp.zeros((), f32)}
+    if mode == "esicp" or mode == "ta":
+        carry["rho12"] = jnp.zeros((b, k), f32)
+        carry["y"] = jnp.zeros((b, k), f32)
+    elif mode == "cs":
+        carry["rho1"] = jnp.zeros((b, k), f32)
+        carry["sq"] = jnp.zeros((b, k), f32)
+    out, _ = jax.lax.scan(body, carry, (docs.ids.T, docs.vals.T))
+    return out
+
+
+class ReferenceBackend:
+    """Pure-jnp TAAT scan — runs anywhere, defines the exactness contract."""
+
+    name = "reference"
+
+    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True):
+        # The scan's mult counter rides the same pass for free; diag=False
+        # callers simply ignore it.
+        return reference_scan(docs, index, xstate, mode=mode, v_ta=v_ta)
+
+    def es_filter(self, rho12, y, rho_self, col_ok, v_th):
+        # Upper bound (Eq. 4): rho12 + y·v_th.  The paper's App.-A scaling
+        # removes this multiply on CPU; on TPU it is a fused multiply-add.
+        ub = rho12 + y * v_th
+        survivors = (ub > rho_self[:, None]) & col_ok
+        return survivors, jnp.sum(survivors, axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend: kernels for the hot accumulators.
+# ---------------------------------------------------------------------------
+
+class PallasBackend:
+    """Kernel-dispatching backend (interpret mode off-TPU).
+
+    The similarity/gather accumulators become densify-then-MXU kernels; the
+    Mult diagnostic — a *count* of posting entries a CPU implementation would
+    visit — is itself a sparse similarity with binarised operands, so it
+    reuses ``sparse_sim`` rather than growing a bespoke counting kernel:
+
+        count[b, k] = Σ_p live[b, p] · W[ids[b, p], k]
+
+    with W the region/nonzero indicator of the mean matrix.
+    """
+
+    name = "pallas"
+
+    def _live01(self, docs):
+        # Match the reference scan's live test (vals != 0), not row_mask():
+        # an explicit 0.0 stored inside the live region must not be counted.
+        return (docs.vals != 0.0).astype(jnp.float32)
+
+    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True):
+        from repro.kernels import ops
+
+        if mode == "ta":
+            # Per-object v_ta threshold: not expressible as a shared-threshold
+            # mask over the (D_blk, K_blk) means block, so no kernel exists.
+            return reference_scan(docs, index, xstate, mode="ta", v_ta=v_ta)
+
+        means_t = index.means_t
+        t_th = index.params.t_th
+        v_th = index.params.v_th
+        col_ok = col_ok_mask(index, xstate)
+        live01 = self._live01(docs)
+        nz = means_t > 0
+
+        out = {"sims": ops.sparse_sim(docs.ids, docs.vals, means_t)}
+        if not diag:
+            out["mult"] = jnp.zeros((), jnp.float32)
+        if mode == "exact" or mode == "cs":
+            if diag:
+                counts = ops.sparse_sim(docs.ids, live01,
+                                        nz.astype(jnp.float32))
+                out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+            if mode == "cs":
+                # Head-only partial: mask on the object side (ids < t_th) —
+                # identical sums to masking rows of the mean matrix.
+                head_vals = jnp.where(docs.ids < t_th, docs.vals, 0.0)
+                out["rho1"] = ops.sparse_sim(docs.ids, head_vals, means_t)
+                # Σ over slots of means², including the reference scan's
+                # dead-slot quirk (padding ids are 0, counted iff t_th == 0).
+                tail_ones = (docs.ids >= t_th).astype(jnp.float32)
+                out["sq"] = ops.sparse_sim(docs.ids, tail_ones,
+                                           means_t * means_t)
+        elif mode == "esicp":
+            rho12, y = ops.esicp_gather(docs.ids, docs.vals, means_t,
+                                        t_th, v_th)
+            out["rho12"], out["y"] = rho12, y
+            if diag:
+                tail = jnp.arange(index.dim)[:, None] >= t_th
+                exact_region = jnp.where(tail, means_t >= v_th, True)
+                counts = ops.sparse_sim(
+                    docs.ids, live01, (nz & exact_region).astype(jnp.float32))
+                out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+        else:
+            raise ValueError(mode)
+        return out
+
+    def es_filter(self, rho12, y, rho_self, col_ok, v_th):
+        from repro.kernels import ops
+
+        mask, count = ops.esicp_filter(rho12, y, rho_self, col_ok, v_th)
+        return mask.astype(bool), count
+
+
+# ---------------------------------------------------------------------------
+# Registry / resolution.
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, Backend] = {
+    "reference": ReferenceBackend(),
+    "pallas": PallasBackend(),
+}
+
+
+def resolve_backend(spec) -> Backend:
+    """'reference' | 'pallas' | 'auto' | Backend instance -> Backend.
+
+    'auto' picks the kernel path on TPU and the oracle elsewhere (interpret
+    mode is for correctness testing, not speed).
+    """
+    if isinstance(spec, Backend) and not isinstance(spec, str):
+        return spec
+    if spec == "auto":
+        return BACKENDS["pallas" if jax.default_backend() == "tpu" else "reference"]
+    if spec not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {spec!r}; one of {sorted(BACKENDS)} or 'auto'")
+    return BACKENDS[spec]

@@ -1,25 +1,74 @@
 """Lloyd-iteration driver for accelerated spherical K-means.
 
-Runs assignment (selected algorithm) → update → [EstParams at iterations 1–2]
-until no assignment changes, collecting the paper's diagnostics per iteration:
-Mult (multiply-adds), CPR (complementary pruning rate, Eq. 22), #changed,
-objective J (Eq. 47).  All algorithms converge to the identical fixed point
-from the same seed — the acceleration contract.
+Runs assignment (selected algorithm × backend) → update → [EstParams at
+iterations 1–2] until no assignment changes, collecting the paper's
+diagnostics per iteration: Mult (multiply-adds), CPR (complementary pruning
+rate, Eq. 22), #changed, objective J (Eq. 47).  All algorithms converge to
+the identical fixed point from the same seed — the acceleration contract.
+
+The whole epoch (every batch of the assignment phase) is one jitted
+``lax.map`` over reshaped batches: Mult/CPR/#changed accumulate on device
+and the host sees exactly one sync per Lloyd iteration, instead of one
+``float()`` round-trip per batch.  Documents are padded to a batch-size
+multiple with dead rows (nnz = 0) that are masked out of every diagnostic;
+the tail batch therefore runs through the identical code path as full
+batches (tested in tests/test_backends.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.sparse import SparseDocs
+from repro.sparse import SparseDocs, pad_rows
 from repro.core.meanindex import StructuralParams
-from repro.core.assignment import assignment_step
+from repro.core.assignment import assign_batch
 from repro.core.update import update_step, init_state, KMeansState
 from repro.core.estparams import estimate_params, EstGrid
+
+# Single host-sync point per iteration — module-level so tests can wrap it
+# and count device→host transfers.
+_host_pull = jax.device_get
+
+
+@partial(jax.jit, static_argnames=("algo", "backend", "bs"))
+def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
+                 assign, rho_self, xstate, valid, bs: int):
+    """One full assignment epoch, on device.
+
+    Returns (assign (N,), mult (), cand_sum (), n_changed ()) — the
+    per-batch Python loop and its per-batch host syncs collapse into a
+    single ``lax.map`` whose scalar diagnostics are reduced on device.
+    (Per-object ρ is not returned: the update step refreshes ρ_self against
+    the *new* means anyway.)
+    """
+    n = docs.ids.shape[0]
+    nb = n // bs
+    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
+
+    def batch_fn(args):
+        bids, bvals, bnnz, bassign, brho, bxs, bvalid = args
+        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=docs.dim)
+        res = assign_batch(algo, backend, bdocs, index, bassign, brho, bxs)
+        cand = jnp.where(bvalid, res.n_candidates, 0)
+        changed = res.changed & bvalid
+        return (res.assign, jnp.sum(cand), jnp.sum(changed), res.mult)
+
+    a, cand, changed, mult = lax.map(
+        batch_fn, (resh(docs.ids), resh(docs.vals), resh(docs.nnz),
+                   resh(assign), resh(rho_self), resh(xstate), resh(valid)))
+    return a.reshape(n), jnp.sum(mult), jnp.sum(cand), jnp.sum(changed)
+
+
+def _run_epoch(algo, backend, docs, index, assign, rho_self, xstate, valid, bs):
+    """Indirection point for tests asserting the fused path is used."""
+    return _fused_epoch(algo, backend, docs, index, assign, rho_self,
+                        xstate, valid, bs)
 
 
 @dataclasses.dataclass
@@ -41,16 +90,19 @@ class SphericalKMeans:
     """sklearn-ish front-end over the core steps.
 
     algo: 'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
+    backend: 'reference' | 'pallas' | 'auto' — accumulator engine for the
+            assignment step (core/backends.py; 'auto' = pallas on TPU).
     params: 'auto' (EstParams at iterations 1–2, the paper's default),
             StructuralParams for fixed thresholds, or None -> trivial.
     """
 
     def __init__(self, k: int, *, algo: str = "esicp", params="auto",
-                 batch_size: int = 4096, max_iter: int = 60,
-                 est_grid: EstGrid | None = None, est_iters=(1, 2),
-                 seed: int = 0):
+                 backend: str = "reference", batch_size: int = 4096,
+                 max_iter: int = 60, est_grid: EstGrid | None = None,
+                 est_iters=(1, 2), seed: int = 0):
         self.k = k
         self.algo = algo
+        self.backend = backend
         self.params = params
         self.batch_size = batch_size
         self.max_iter = max_iter
@@ -69,68 +121,80 @@ class SphericalKMeans:
     def fit(self, docs: SparseDocs, df: jax.Array | None = None) -> LloydResult:
         n = docs.n_docs
         params = self._initial_params(docs.dim)
+        # Seeding picks centroids among the *real* documents, before padding.
         state = init_state(docs, self.k, params, seed=self.seed)
         if df is None:
             from repro.sparse import df_counts
             df = df_counts(docs)
 
+        bs = min(self.batch_size, n)
+        pdocs = pad_rows(docs, bs)
+        n_pad = pdocs.n_docs
+        valid = jnp.arange(n_pad) < n
+        if n_pad != n:
+            pad = n_pad - n
+            state = dataclasses.replace(
+                state,
+                assign=jnp.pad(state.assign, (0, pad)),
+                rho_self=jnp.pad(state.rho_self, (0, pad),
+                                 constant_values=-jnp.inf),
+                rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad),
+                                      constant_values=-jnp.inf),
+            )
+
         history = []
         converged = False
-        bs = min(self.batch_size, n)
         for r in range(1, self.max_iter + 1):
             t0 = time.perf_counter()
             prev_assign = state.assign
-            assigns, rhos, cands, changed = [], [], [], []
-            mult = 0.0
-            xstate_all = state.xstate
-            for start in range(0, n - n % bs, bs):
-                batch = state_batch = docs.slice_rows(start, bs)
-                res = assignment_step(self.algo, batch, state.index,
-                                      state.assign[start:start + bs],
-                                      state.rho_self[start:start + bs],
-                                      xstate_all[start:start + bs])
-                assigns.append(res.assign); rhos.append(res.rho)
-                cands.append(res.n_candidates); changed.append(res.changed)
-                mult += float(res.mult)
-            rem = n % bs
-            if rem:
-                start = n - rem
-                batch = docs.slice_rows(start, rem)
-                res = assignment_step(self.algo, batch, state.index,
-                                      state.assign[start:], state.rho_self[start:],
-                                      xstate_all[start:])
-                assigns.append(res.assign); rhos.append(res.rho)
-                cands.append(res.n_candidates); changed.append(res.changed)
-                mult += float(res.mult)
+            assign, mult, cand_sum, n_changed = _run_epoch(
+                self.algo, self.backend, pdocs, state.index, state.assign,
+                state.rho_self, state.xstate, valid, bs)
 
-            assign = jnp.concatenate(assigns)
-            n_changed = int(jnp.sum(jnp.concatenate(changed)))
-            cpr = float(jnp.mean(jnp.concatenate(cands).astype(jnp.float32))) / self.k
-
-            state = update_step(docs, assign, prev_assign, state, state.index.params,
-                                k=self.k)
+            state = update_step(pdocs, assign, prev_assign, state,
+                                state.index.params, k=self.k)
 
             if self.params == "auto" and r in self.est_iters:
+                # EstParams sees only the real rows (padding would skew the
+                # Mult-estimate tables).
                 new_params, _ = estimate_params(docs, df, state.index.means_t,
-                                                state.rho_self, k=self.k,
+                                                state.rho_self[:n], k=self.k,
                                                 grid=self.est_grid)
-                state = dataclasses.replace(state, index=state.index.with_params(new_params))
+                state = dataclasses.replace(
+                    state, index=state.index.with_params(new_params))
+
+            # The one device→host sync of the iteration: every diagnostic
+            # scalar crosses in a single pull.
+            diag = _host_pull((mult, cand_sum, n_changed,
+                               jnp.sum(state.rho_self), state.index.n_moving,
+                               state.index.params.t_th,
+                               state.index.params.v_th))
+            mult_h, cand_h, changed_h, obj_h, nmov_h, t_th_h, v_th_h = diag
 
             history.append({
                 "iteration": r,
-                "mult": mult,
-                "cpr": cpr,
-                "n_changed": n_changed,
-                "objective": float(jnp.sum(state.rho_self)),
-                "n_moving": int(state.index.n_moving),
+                "mult": float(mult_h),
+                "cpr": float(cand_h) / (n * self.k),
+                "n_changed": int(changed_h),
+                "objective": float(obj_h),
+                "n_moving": int(nmov_h),
                 "elapsed_s": time.perf_counter() - t0,
-                "t_th": int(state.index.params.t_th),
-                "v_th": float(state.index.params.v_th),
+                "t_th": int(t_th_h),
+                "v_th": float(v_th_h),
             })
-            if n_changed == 0:
+            if int(changed_h) == 0:
                 converged = True
                 break
 
+        if n_pad != n:
+            # Trim the padding rows so state arrays pair with the caller's
+            # docs again (padding rho_self is 0, so the objective is intact).
+            state = dataclasses.replace(
+                state,
+                assign=state.assign[:n],
+                rho_self=state.rho_self[:n],
+                rho_self_prev=state.rho_self_prev[:n],
+            )
         return LloydResult(
             state=state,
             assign=np.asarray(state.assign),

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def object_axes(mesh: Mesh) -> tuple[str, ...]:
     """All mesh axes except 'model' shard the object dimension."""
@@ -154,7 +156,8 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
                 t_th, v_th, iteration, *, algo: str, axes_obj, k: int,
                 obj_chunk: int, lambda_dtype=jnp.float32,
                 taat_unroll: bool = False, two_phase: bool = False,
-                p_block: int = 1, p_tail: int = 16):
+                p_block: int = 1, p_tail: int = 16,
+                backend: str = "reference"):
     n_loc, p = ids.shape
     d, k_loc = means_t.shape
     k0 = lax.axis_index("model") * k_loc
@@ -172,8 +175,18 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
                 cids, cvals, cnnz, means_t, t_th, v_th, crho, col_ok,
                 unroll=taat_unroll, p_block=p_block, p_tail=p_tail)
         else:
-            sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th,
-                                         unroll=taat_unroll, p_block=p_block)
+            if backend == "pallas":
+                # Kernel path on the local (chunk × K_loc) tile: the shard's
+                # slice of the mean-inverted index feeds the same kernels the
+                # single-device engine uses (core/backends.py).
+                from repro.kernels import ops
+                sims = ops.sparse_sim(cids, cvals, means_t)
+                rho12, y = (ops.esicp_gather(cids, cvals, means_t, t_th, v_th)
+                            if algo == "esicp" else (None, None))
+            else:
+                sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th,
+                                             unroll=taat_unroll,
+                                             p_block=p_block)
             if algo == "esicp":
                 surv = ((rho12 + y * v_th) > crho[:, None]) & col_ok
             elif algo == "mivi":
@@ -253,11 +266,19 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
 def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
                  obj_chunk: int = 2048, lambda_dtype=jnp.float32,
                  taat_unroll: bool = False, two_phase: bool = False,
-                 p_block: int = 1, p_tail: int = 16):
+                 p_block: int = 1, p_tail: int = 16,
+                 backend: str = "reference"):
     """Builds the jitted fused assignment+update step for `mesh`.
 
     taat_unroll: dry-run costing mode — unrolls the P-step TAAT scan so
-    XLA's cost model counts every multiply (launch/dryrun.py pass B)."""
+    XLA's cost model counts every multiply (launch/dryrun.py pass B).
+    backend: 'reference' (TAAT scan) | 'pallas' (kernels on the local tile)
+    | 'auto' — see core/backends.py for selection semantics."""
+    from repro.core.backends import resolve_backend
+    backend = resolve_backend(backend).name
+    if two_phase and backend != "reference":
+        raise ValueError("two_phase is a reference-backend scan variant; "
+                         "use backend='reference' with it")
     axes_obj = object_axes(mesh)
     po = P(axes_obj)
     specs_in = (
@@ -270,12 +291,12 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
         P(None, "model"), po, po, po, P("model"),
         P(), P(), P(),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_step_local, algo=algo, axes_obj=axes_obj, k=k,
                 obj_chunk=obj_chunk, lambda_dtype=lambda_dtype,
                 taat_unroll=taat_unroll, two_phase=two_phase,
-                p_block=p_block, p_tail=p_tail),
-        mesh=mesh, in_specs=specs_in, out_specs=specs_out, check_vma=False)
+                p_block=p_block, p_tail=p_tail, backend=backend),
+        mesh=mesh, in_specs=specs_in, out_specs=specs_out)
     return jax.jit(fn)
 
 
@@ -322,7 +343,8 @@ def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
 
 
 def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
-             max_iter: int = 40, obj_chunk: int = 1024, seed: int = 0,
+             backend: str = "reference", max_iter: int = 40,
+             obj_chunk: int = 1024, seed: int = 0,
              est_iters=(1, 2), df=None, checkpoint_dir: str | None = None,
              checkpoint_every: int = 5, **step_kw):
     """Full distributed Lloyd loop with EstParams and optional checkpointing."""
@@ -354,11 +376,19 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
                                             constant_values=-jnp.inf), sh(P(axes_obj))),
         )
     two_phase = step_kw.pop("two_phase", False)
+    if two_phase:
+        from repro.core.backends import resolve_backend
+        if resolve_backend(backend).name != "reference":
+            # Fail fast: the rebuild at r == max(est_iters) would otherwise
+            # raise after iterations of completed clustering work.
+            raise ValueError("two_phase is a reference-backend scan variant; "
+                             "use backend='reference' with it")
     # iterations 1–2 run trivial params (t_th=0): everything is Region 3, so
     # the windowed verification can't bound ntH — run single-phase until
     # EstParams fixes t_th, then rebuild the step (paper Alg. 6 does the same
     # index restructuring at that moment).
-    step_fn = make_step_fn(mesh, algo=algo, k=k, obj_chunk=obj_chunk, **step_kw)
+    step_fn = make_step_fn(mesh, algo=algo, k=k, obj_chunk=obj_chunk,
+                           backend=backend, **step_kw)
     params = StructuralParams.trivial(docs.dim)
 
     if df is None:
@@ -380,7 +410,8 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
                 p_tail = max(nt_h + ((-nt_h) % max(pb, 1)), pb)
                 step_fn = make_step_fn(mesh, algo=algo, k=k,
                                        obj_chunk=obj_chunk, two_phase=True,
-                                       p_tail=p_tail, **step_kw)
+                                       p_tail=p_tail, backend=backend,
+                                       **step_kw)
         history.append({"iteration": r,
                         "n_changed": float(diag["n_changed"]),
                         "cpr": float(diag["n_candidates"]) / (n * k),
@@ -399,13 +430,16 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     return state, history, converged
 
 
-def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048):
+def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048,
+                   backend: str = "reference"):
     """Serving mode: classify new documents against a FROZEN mean index.
 
     The paper's engine as a lookup service — the assignment phase only
     (ES gathering + filter + (max, argmin-id) reduction over 'model'),
     no update step, no ICP state.  Returns assign (N,), sims (N,).
     """
+    from repro.core.backends import resolve_backend
+    backend = resolve_backend(backend).name
     axes_obj = object_axes(mesh)
     po = P(axes_obj)
 
@@ -417,7 +451,11 @@ def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048):
 
         def chunk_fn(args):
             cids, cvals, cval = args
-            sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th)
+            if backend == "pallas":
+                from repro.kernels import ops
+                sims = ops.sparse_sim(cids, cvals, means_t)
+            else:
+                sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th)
             # serving has no previous similarity: bound via running best —
             # one exact pass, filter diagnostics only
             masked = jnp.where(jnp.ones_like(sims, bool), sims, -jnp.inf)
@@ -432,8 +470,8 @@ def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048):
         aa, ss = lax.map(chunk_fn, (resh(ids), resh(vals), resh(valid)))
         return aa.reshape(n_loc), ss.reshape(n_loc)
 
-    fn = jax.shard_map(_local, mesh=mesh,
-                       in_specs=(P(axes_obj, None), P(axes_obj, None), po,
-                                 P(None, "model"), P(), P()),
-                       out_specs=(po, po), check_vma=False)
+    fn = shard_map(_local, mesh=mesh,
+                   in_specs=(P(axes_obj, None), P(axes_obj, None), po,
+                             P(None, "model"), P(), P()),
+                   out_specs=(po, po))
     return jax.jit(fn)

@@ -29,7 +29,7 @@ import jax
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, cell_enabled
 from repro.launch.steps import build_cell, reduced_depth_config, VARIANTS
-from repro.roofline.analysis import collective_bytes, roofline_terms, model_flops, HW
+from repro.roofline.analysis import collective_bytes, cost_dict, roofline_terms, model_flops, HW
 
 COST_KEYS = ("flops", "bytes accessed", "transcendentals")
 
@@ -39,7 +39,7 @@ def _measure_cost(cfg, mesh, shape, pv):
     cell = build_cell(cfg, mesh, shape, microbatches=1, variant=pv)
     with mesh:
         compiled = cell.fn.lower(*cell.args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_dict(compiled.cost_analysis())
         coll = collective_bytes(compiled.as_text())
     return cost, coll
 
@@ -125,7 +125,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost_raw = compiled.cost_analysis() or {}
+            cost_raw = cost_dict(compiled.cost_analysis())
             coll_raw = collective_bytes(compiled.as_text())
         # correct trip-count undercounting via the unrolled reduced-depth pass
         cx = cost_extrapolated(cfg, mesh, shape, pv)
@@ -225,7 +225,7 @@ def run_kmeans_dryrun(multi_pod: bool, *, out_dir: str = RESULTS_DIR,
         with mesh:
             compiled = fn.lower(*args).compile()
             return (compiled.memory_analysis(),
-                    compiled.cost_analysis() or {},
+                    cost_dict(compiled.cost_analysis()),
                     collective_bytes(compiled.as_text()))
 
     record = {"arch": "kmeans-pubmed8m", "shape": "esicp_step",

@@ -168,9 +168,10 @@ def _embed_lookup(emb, tokens):
         x = jnp.where(ok[..., None], x, 0.0)
         return jax.lax.psum(x, "model")
 
-    f = jax.shard_map(local, mesh=mesh,
-                      in_specs=(P("model", None), P(dp, None)),
-                      out_specs=P(dp, None, None))
+    from repro.compat import shard_map
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P("model", None), P(dp, None)),
+                  out_specs=P(dp, None, None))
     return f(emb, tokens)
 
 

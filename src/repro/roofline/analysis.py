@@ -16,6 +16,19 @@ import dataclasses
 import re
 
 
+def cost_dict(cost) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of dicts (per executable program);
+    newer jax returns the dict directly.  Missing/empty analyses -> {}.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 @dataclasses.dataclass(frozen=True)
 class HW:
     """TPU v5e-class chip."""

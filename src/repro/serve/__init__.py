@@ -1,3 +1,4 @@
-from repro.serve.engine import make_prefill_fn, make_decode_fn, ServeLoop
+from repro.serve.engine import (make_prefill_fn, make_decode_fn, ServeLoop,
+                                ClusterEngine)
 
-__all__ = ["make_prefill_fn", "make_decode_fn", "ServeLoop"]
+__all__ = ["make_prefill_fn", "make_decode_fn", "ServeLoop", "ClusterEngine"]

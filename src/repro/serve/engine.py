@@ -1,17 +1,25 @@
-"""Serving steps: batched prefill and single-token decode with KV caches.
+"""Serving engines: LM prefill/decode steps and cluster classification.
 
-Shapes contract (matches the assigned input-shape grid):
+LM shapes contract (matches the assigned input-shape grid):
   prefill_*  → prefill_fn(params, tokens (B, S))            -> logits (B, V)
   decode_* / long_* → decode_fn(params, cache, tok (B,1), pos) -> (logits, cache)
 
 The decode cache is pre-allocated at seq_len (rotating window caches stay at
 min(window, seq_len)); the dry-run lowers decode_fn against cache_specs, so
 full-size caches are never allocated on the host.
+
+:class:`ClusterEngine` is the k-means analogue: a frozen mean-inverted index
+served as a lookup service, with the assignment accumulators produced by a
+pluggable backend (core/backends.py) — the same engine the Lloyd loop uses,
+minus the update step.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import forward, decode_forward, init_cache
 from repro.models.config import ModelConfig
@@ -31,6 +39,61 @@ def make_decode_fn(cfg: ModelConfig):
     def decode(params, cache, token, pos):
         return decode_forward(params, cache, token, pos, cfg)
     return decode
+
+
+@partial(jax.jit, static_argnames=("backend", "bs", "dim"))
+def _classify_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
+    """Fused classification epoch: lax.map over reshaped batches, exact
+    similarities from the chosen backend, top-1 on device."""
+    from repro.sparse import SparseDocs
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    n = ids.shape[0]
+    nb = n // bs
+    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
+
+    def batch_fn(args):
+        bids, bvals, bnnz = args
+        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=dim)
+        out = bk.accumulate(bdocs, index, jnp.zeros((bs,), bool), mode="exact",
+                            diag=False)   # serving never reads Mult
+        sims = out["sims"]
+        best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+        return best, jnp.take_along_axis(sims, best[:, None], axis=1)[:, 0]
+
+    a, s = jax.lax.map(batch_fn, (resh(ids), resh(vals), resh(nnz)))
+    return a.reshape(n), s.reshape(n)
+
+
+class ClusterEngine:
+    """Classify documents against a frozen MeanIndex (serving mode).
+
+    The single-host sibling of ``distributed.kmeans.make_assign_fn``: no
+    update step, no ICP state, one device→host sync per request batch.
+
+    backend: 'reference' | 'pallas' | 'auto' — accumulator engine,
+    identical semantics to ``SphericalKMeans(backend=...)``.
+    """
+
+    def __init__(self, index, *, backend: str = "auto",
+                 batch_size: int = 4096):
+        self.index = index
+        self.backend = backend
+        self.batch_size = batch_size
+
+    def classify(self, docs):
+        """docs: SparseDocs -> (assign (N,) int32, sims (N,) float32)."""
+        from repro.sparse import pad_rows
+
+        n = docs.n_docs
+        if n == 0:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+        bs = min(self.batch_size, n)
+        pdocs = pad_rows(docs, bs)
+        a, s = _classify_fused(self.backend, pdocs.ids, pdocs.vals,
+                               pdocs.nnz, pdocs.dim, self.index, bs)
+        return np.asarray(a)[:n], np.asarray(s)[:n]
 
 
 class ServeLoop:

@@ -17,6 +17,7 @@ from repro.sparse.matrix import (
     l2_normalize_rows,
     remap_terms_by_df,
     l1_tail,
+    pad_rows,
 )
 
 __all__ = [
@@ -28,4 +29,5 @@ __all__ = [
     "l2_normalize_rows",
     "remap_terms_by_df",
     "l1_tail",
+    "pad_rows",
 ]

@@ -136,6 +136,23 @@ def remap_terms_by_df(docs: SparseDocs, df: jax.Array | None = None):
     return docs2, perm
 
 
+def pad_rows(docs: SparseDocs, multiple: int) -> SparseDocs:
+    """Pad N up to a multiple with dead rows (nnz = 0, vals = 0).
+
+    Dead rows accumulate nothing anywhere downstream: no live tuples, so
+    they contribute 0 to similarities, cluster sums, and diagnostics.
+    Callers that batch over rows (the fused Lloyd epoch, the serving
+    engine) mask them out of per-row outputs.
+    """
+    n = docs.n_docs
+    pad = (-n) % multiple
+    if pad == 0:
+        return docs
+    zpad = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return SparseDocs(ids=zpad(docs.ids), vals=zpad(docs.vals),
+                      nnz=zpad(docs.nnz), dim=docs.dim)
+
+
 @partial(jax.jit, static_argnames=())
 def l1_tail(docs: SparseDocs, t_th: jax.Array) -> jax.Array:
     """(N,) partial L1 norm over tuples with term id >= t_th (paper y init)."""

@@ -92,7 +92,8 @@ def test_lm_train_step_lowers_on_mesh():
     cell = build_cell(cfg, mesh, shape, microbatches=2)
     with mesh:
         compiled = cell.fn.lower(*cell.args).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.roofline.analysis import cost_dict
+    assert cost_dict(compiled.cost_analysis()).get("flops", 0) > 0
 
 
 def test_assign_service_matches_core(corpus_small):

@@ -6,7 +6,9 @@ pruning would be lossy and the acceleration contract void.  TA and CS bounds
 get the same treatment, plus sparse round-trips and filter/oracle agreement.
 """
 import numpy as np
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.roofline.analysis import collective_bytes, roofline_terms, HW
+from repro.roofline.analysis import collective_bytes, cost_dict, roofline_terms, HW
 from repro.launch.mesh import make_test_mesh
 
 
@@ -42,7 +42,7 @@ def test_cost_analysis_is_per_device():
             in_shardings=(NamedSharding(mesh, P("data", None)),
                           NamedSharding(mesh, P(None, "model"))),
         ).lower(a, b).compile()
-    flops = compiled.cost_analysis()["flops"]
+    flops = cost_dict(compiled.cost_analysis())["flops"]
     total = 2 * m * n * k
     assert abs(flops - total / 8) / (total / 8) < 0.05
 
@@ -69,14 +69,16 @@ def test_scan_undercount_is_corrected_by_unroll():
 
     ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
     x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
-    f_loop = jax.jit(scanned).lower(ws, x).compile().cost_analysis()["flops"]
+    f_loop = cost_dict(jax.jit(scanned).lower(ws, x).compile()
+                       .cost_analysis())["flops"]
     set_scan_unroll(True)
     try:
         # fresh trace — the flag is read at trace time, so the cached
         # unroll=False trace must not be reused (the dry-run rebuilds its
         # step closures per pass for exactly this reason)
         jax.clear_caches()
-        f_unroll = jax.jit(scanned).lower(ws, x).compile().cost_analysis()["flops"]
+        f_unroll = cost_dict(jax.jit(scanned).lower(ws, x).compile()
+                             .cost_analysis())["flops"]
     finally:
         set_scan_unroll(False)
         jax.clear_caches()
