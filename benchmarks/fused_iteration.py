@@ -1,0 +1,61 @@
+"""Fused-iteration suite (DESIGN.md §8): backend-owned update phase + the
+fully on-device Lloyd fit.
+
+Times (a) one complete update phase — cluster-sum accumulation, mean
+normalisation, index rebuild, ρ_self refresh — under the ``reference``
+scatter/gather vs the ``pallas`` ``segment_update``/``rho_gather`` kernels,
+and (b) the per-iteration cost of the fused ``lax.while_loop`` fit.  The
+``derived`` CSV column carries the backend name so :mod:`benchmarks.run`
+can emit the machine-readable ``BENCH_fused_iteration.json`` trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import corpus, csv_row, default_backend, make_kmeans, time_call
+from repro.core.update import update_step
+from repro.sparse import SparseDocs
+
+
+_N_SUB = 2048        # update-phase timing slice (interpret-mode friendly)
+
+
+def run():
+    job, docs, df, perm, topics = corpus("pubmed")
+    rows = []
+
+    # Mid-clustering state: real means, real moving flags, real thresholds.
+    km = make_kmeans(job.k, algo="esicp", max_iter=3, batch_size=4096, seed=0)
+    state = km.fit(docs, df=df).state
+
+    sub = SparseDocs(ids=docs.ids[:_N_SUB], vals=docs.vals[:_N_SUB],
+                     nnz=docs.nnz[:_N_SUB], dim=docs.dim)
+    assign = state.assign[:_N_SUB]
+    prev = jnp.roll(assign, 1)
+    state_sub = dataclasses.replace(
+        state, assign=assign, rho_self=state.rho_self[:_N_SUB],
+        rho_self_prev=state.rho_self_prev[:_N_SUB])
+
+    for backend in ("reference", "pallas"):
+        def one_update(b=backend):
+            out = update_step(sub, assign, prev, state_sub,
+                              state.index.params, k=job.k, backend=b)
+            jax.block_until_ready(out.rho_self)
+            return out
+
+        one_update()                                     # compile
+        _, best = time_call(one_update)
+        rows.append(csv_row(f"fused_iteration/update_{backend}",
+                            best * 1e6, backend))
+
+    # Fused fit: wall-time per Lloyd iteration with O(1) host syncs.
+    backend = default_backend()
+    km = make_kmeans(job.k, algo="esicp", max_iter=8, batch_size=4096, seed=0)
+    km.fit(docs, df=df)                                  # compile
+    res, best = time_call(lambda: km.fit(docs, df=df), repeat=1)
+    rows.append(csv_row("fused_iteration/fit_per_iter",
+                        best * 1e6 / max(res.n_iter, 1), backend))
+    return rows

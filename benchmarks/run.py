@@ -4,10 +4,15 @@ Prints ``name,us_per_call,derived`` CSV rows.  Run everything:
 
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --only table4,fig7
+
+The ``fused`` suite additionally writes ``BENCH_fused_iteration.json``
+(name, us_per_call, backend) so the update-phase perf trajectory is
+machine-readable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -24,7 +29,26 @@ SUITES = [
     ("ablation", "benchmarks.ablation_thresholds"),
     ("apph", "benchmarks.apph_seeding"),
     ("roofline", "benchmarks.roofline_report"),
+    ("fused", "benchmarks.fused_iteration"),
 ]
+
+JSON_SUITES = {"fused": "BENCH_fused_iteration.json"}
+
+
+def write_bench_json(rows, path: str) -> str:
+    """``name,us_per_call,derived`` CSV rows -> JSON perf-trajectory file.
+
+    The derived column of JSON-emitting suites carries the backend name.
+    """
+    entries = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        entries.append({"name": name, "us_per_call": float(us),
+                        "backend": derived})
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -45,6 +69,8 @@ def main() -> None:
             rows = mod.run()
             for row in rows:
                 print(row, flush=True)
+            if name in JSON_SUITES:
+                write_bench_json(rows, JSON_SUITES[name])
             print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},elapsed",
                   flush=True)
         except Exception as e:

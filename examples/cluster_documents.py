@@ -5,8 +5,10 @@ pubmed-reduced corpus, verifies the acceleration contract (identical
 clusterings), and prints the paper-style comparison table.
 
     PYTHONPATH=src python examples/cluster_documents.py [--dataset nyt]
+    PYTHONPATH=src python examples/cluster_documents.py --smoke   # tiny (CI)
 """
 import argparse
+import dataclasses
 
 import numpy as np
 
@@ -20,9 +22,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="pubmed", choices=["pubmed", "nyt"])
     ap.add_argument("--algos", default="mivi,icp,cs-icp,ta-icp,esicp")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic corpus so CI can smoke-run the "
+                         "example end to end in seconds")
     args = ap.parse_args()
 
     job = pubmed_reduced() if args.dataset == "pubmed" else nyt_reduced()
+    if args.smoke:
+        from repro.data import CorpusSpec
+        spec = CorpusSpec(n_docs=400, vocab=512, nt_mean=20, n_topics=8,
+                          seed=0)
+        job = dataclasses.replace(job, name=job.name + "-smoke",
+                                  n_docs=spec.n_docs, vocab=spec.vocab, k=8,
+                                  corpus=spec, max_iter=10)
     print(f"corpus {job.name}: N={job.n_docs} D={job.vocab} K={job.k}")
     docs, df, perm, topics = make_corpus(job.corpus)
 

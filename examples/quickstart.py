@@ -1,7 +1,10 @@
 """Quickstart: cluster a synthetic document corpus with ES-ICP.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --smoke   # tiny corpus (CI)
 """
+import argparse
+
 import numpy as np
 
 from repro.data import make_corpus, CorpusSpec
@@ -9,11 +12,26 @@ from repro.core import SphericalKMeans, metrics
 
 
 def main():
-    print("generating a UC-faithful corpus (Zipf df, tf-idf, unit sphere)…")
-    docs, df, perm, topics = make_corpus(
-        CorpusSpec(n_docs=8_000, vocab=4_096, nt_mean=60, n_topics=64, seed=0))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic corpus so CI can smoke-run the "
+                         "example end to end in seconds")
+    args = ap.parse_args()
 
-    km = SphericalKMeans(k=64, algo="esicp", max_iter=30, batch_size=2048)
+    if args.smoke:
+        spec = CorpusSpec(n_docs=400, vocab=512, nt_mean=20, n_topics=8,
+                          seed=0)
+        k, batch_size, max_iter = 8, 128, 12
+    else:
+        spec = CorpusSpec(n_docs=8_000, vocab=4_096, nt_mean=60, n_topics=64,
+                          seed=0)
+        k, batch_size, max_iter = 64, 2048, 30
+
+    print("generating a UC-faithful corpus (Zipf df, tf-idf, unit sphere)…")
+    docs, df, perm, topics = make_corpus(spec)
+
+    km = SphericalKMeans(k=k, algo="esicp", max_iter=max_iter,
+                         batch_size=batch_size)
     res = km.fit(docs, df=df)
 
     print(f"converged={res.converged} after {res.n_iter} iterations")

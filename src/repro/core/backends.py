@@ -1,33 +1,40 @@
-"""Backend-pluggable assignment primitives (DESIGN.md §5).
+"""Backend-pluggable clustering primitives (DESIGN.md §5).
 
 The six algorithms in :mod:`repro.core.assignment` are pure selection logic
 over a small set of accumulators (exact similarities, region-wise partial
-sums, filter survivor masks).  This module owns *how* those accumulators are
-produced:
+sums, filter survivor masks), and the update phase (Alg. 6) is two segment
+reductions (cluster sums, ρ_self refresh).  This module owns *how* both
+phases' accumulators are produced:
 
 ``reference``
-    The TAAT ``lax.scan`` over padded object tuples — the exactness oracle.
-    Runs everywhere, no alignment constraints, and is the semantics every
+    Assignment: the TAAT ``lax.scan`` over padded object tuples.  Update:
+    the dense ``at[].add`` scatter and the own-centroid gather.  Runs
+    everywhere, no alignment constraints, and is the exactness oracle every
     other backend is tested against.
 
 ``pallas``
-    Dispatches the hot accumulators to the TPU Pallas kernels in
-    :mod:`repro.kernels.ops` (``sparse_sim`` / ``esicp_gather`` /
-    ``esicp_filter``).  Off-TPU the kernels run in interpret mode (handled
-    inside ``kernels.ops``), so the backend is selectable — and tested —
-    on CPU.  The TA bound needs a *per-object* value threshold, which the
+    Assignment: the TPU Pallas kernels in :mod:`repro.kernels.ops`
+    (``sparse_sim`` / ``esicp_gather`` / ``esicp_filter``).  Update:
+    ``segment_update`` (scatter-add as one-hot-selection MXU matmuls) and
+    ``rho_gather`` (ρ_self refresh as a one-hot own-centroid gather).
+    Off-TPU the kernels run in interpret mode (handled inside
+    ``kernels.ops``), so the backend is selectable — and tested — on CPU.
+    The TA bound needs a *per-object* value threshold, which the
     shared-threshold gather kernel cannot express; that one mode delegates
     to the reference scan (see the AFM translation table in DESIGN.md §3).
 
 Exactness contract: for every algorithm, both backends produce identical
-assignments from identical state.  ``mult`` diagnostics are kept exactly
-equal too — the pallas backend counts visited (object-term, posting-entry)
-pairs with extra binarised ``sparse_sim`` calls rather than approximating.
+assignments and moving flags from identical state.  ``mult`` diagnostics are
+kept exactly equal too — the pallas backend counts visited (object-term,
+posting-entry) pairs with extra binarised ``sparse_sim`` calls rather than
+approximating.  Means and ρ_self agree to float32 reduction-order tolerance
+(the MXU accumulates in a different order than the sequential scatter).
 
 Selection: pass ``backend="reference" | "pallas" | "auto"`` anywhere a
 ``backend=`` argument is threaded (``SphericalKMeans``, ``assignment_step``,
-``distributed.kmeans``, ``serve.ClusterEngine``, ``benchmarks.common``).
-``auto`` resolves to ``pallas`` on TPU and ``reference`` elsewhere.
+``update_step``, ``distributed.kmeans``, ``serve.ClusterEngine``,
+``benchmarks.common``).  ``auto`` resolves to ``pallas`` on TPU and
+``reference`` elsewhere.
 """
 from __future__ import annotations
 
@@ -48,9 +55,10 @@ def col_ok_mask(index: MeanIndex, xstate: jax.Array) -> jax.Array:
 
 @runtime_checkable
 class Backend(Protocol):
-    """Producer of the assignment-step accumulators.
+    """Producer of the assignment-step and update-step accumulators.
 
-    ``accumulate`` returns the same dict the reference TAAT scan produces:
+    Assignment phase — ``accumulate`` returns the same dict the reference
+    TAAT scan produces:
 
       mode 'exact'  -> {sims, mult}
       mode 'esicp'  -> {sims, rho12, y, mult}
@@ -59,6 +67,17 @@ class Backend(Protocol):
 
     ``es_filter`` evaluates the ES upper bound (Eq. 4) and returns the
     survivor mask and per-object candidate counts |Z_i|.
+
+    Update phase (Alg. 6) — both methods take raw padded tuple arrays so the
+    single-device driver and the shard-local distributed step share them;
+    callers pre-mask dead slots / invalid rows to ``vals == 0``:
+
+    ``accumulate_means`` — (K, dim) tentative cluster sums λ_j = Σ_{x∈C_j} x
+    (lines 2–5).  Out-of-range assignments contribute nothing.  ``init``
+    lets chunked callers fold partial sums in place.
+
+    ``self_sims`` — (B,) refreshed ρ_{a(i)} vs each object's own (new)
+    centroid (lines 6–7); out-of-range assignments read ρ = 0.
     """
 
     name: str
@@ -69,6 +88,13 @@ class Backend(Protocol):
 
     def es_filter(self, rho12: jax.Array, y: jax.Array, rho_self: jax.Array,
                   col_ok: jax.Array, v_th: jax.Array): ...
+
+    def accumulate_means(self, ids: jax.Array, vals: jax.Array,
+                         assign: jax.Array, *, k: int, dim: int,
+                         init: jax.Array | None = None) -> jax.Array: ...
+
+    def self_sims(self, ids: jax.Array, vals: jax.Array, assign: jax.Array,
+                  means_t: jax.Array) -> jax.Array: ...
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +184,20 @@ class ReferenceBackend:
         survivors = (ub > rho_self[:, None]) & col_ok
         return survivors, jnp.sum(survivors, axis=1).astype(jnp.int32)
 
+    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None):
+        # The dense scatter-add (Alg. 6 lines 2–5).  XLA drops out-of-bounds
+        # scatter updates, so out-of-range assignments contribute nothing.
+        acc = jnp.zeros((k, dim), jnp.float32) if init is None else init
+        return acc.at[assign[:, None], ids].add(vals)
+
+    def self_sims(self, ids, vals, assign, means_t):
+        # Own-centroid gather (Alg. 6 lines 6–7); gathers clamp out-of-range
+        # assignments, so they are masked to ρ = 0 explicitly.
+        k = means_t.shape[1]
+        picked = means_t[ids, jnp.minimum(assign, k - 1)[:, None]]
+        return jnp.sum(jnp.where((assign < k)[:, None], vals * picked, 0.0),
+                       axis=1)
+
 
 # ---------------------------------------------------------------------------
 # Pallas backend: kernels for the hot accumulators.
@@ -235,6 +275,19 @@ class PallasBackend:
 
         mask, count = ops.esicp_filter(rho12, y, rho_self, col_ok, v_th)
         return mask.astype(bool), count
+
+    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None):
+        # Scatter-add as one-hot-selection MXU matmuls: a TPU must not
+        # read-modify-write HBM per object (kernels/segment_update.py).
+        from repro.kernels import ops
+
+        lam = ops.segment_update(assign, ids, vals, k=k, d=dim)
+        return lam if init is None else init + lam
+
+    def self_sims(self, ids, vals, assign, means_t):
+        from repro.kernels import ops
+
+        return ops.rho_gather(assign, ids, vals, means_t)
 
 
 # ---------------------------------------------------------------------------

@@ -6,17 +6,24 @@ diagnostics per iteration: Mult (multiply-adds), CPR (complementary pruning
 rate, Eq. 22), #changed, objective J (Eq. 47).  All algorithms converge to
 the identical fixed point from the same seed — the acceleration contract.
 
-The whole epoch (every batch of the assignment phase) is one jitted
-``lax.map`` over reshaped batches: Mult/CPR/#changed accumulate on device
-and the host sees exactly one sync per Lloyd iteration, instead of one
-``float()`` round-trip per batch.  Documents are padded to a batch-size
-multiple with dead rows (nnz = 0) that are masked out of every diagnostic;
-the tail batch therefore runs through the identical code path as full
-batches (tested in tests/test_backends.py).
+Host-sync discipline (DESIGN.md §8): the fit is an *unrolled prologue*
+covering the EstParams iterations (estimating (t_th, v_th) needs host-side
+grid bookkeeping) followed by ONE jitted, buffer-donated call that runs the
+rest of the fit as a ``lax.while_loop`` on device — assignment epoch →
+update → ρ_self refresh → convergence test per trip, with every diagnostic
+written into a per-iteration ring buffer carried through the loop.  The
+host pulls diagnostics once per prologue iteration (≤ 2) and once for the
+whole fused remainder: O(1) syncs per *fit*, independent of n_iter.
+
+Each assignment epoch is a ``lax.map`` over reshaped batches: documents are
+padded to a batch-size multiple with dead rows (nnz = 0, ρ_self = 0) that
+are masked out of every diagnostic; the tail batch therefore runs through
+the identical code path as full batches (tested in tests/test_backends.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from functools import partial
 
@@ -31,8 +38,8 @@ from repro.core.assignment import assign_batch
 from repro.core.update import update_step, init_state, KMeansState
 from repro.core.estparams import estimate_params, EstGrid
 
-# Single host-sync point per iteration — module-level so tests can wrap it
-# and count device→host transfers.
+# Single host-sync points — module-level so tests can wrap them and count
+# device→host transfers.
 _host_pull = jax.device_get
 
 
@@ -65,10 +72,79 @@ def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
     return a.reshape(n), jnp.sum(mult), jnp.sum(cand), jnp.sum(changed)
 
 
-def _run_epoch(algo, backend, docs, index, assign, rho_self, xstate, valid, bs):
-    """Indirection point for tests asserting the fused path is used."""
-    return _fused_epoch(algo, backend, docs, index, assign, rho_self,
-                        xstate, valid, bs)
+def _device_iteration(algo, backend, docs, state, valid, *, bs, k):
+    """One full Lloyd iteration (epoch + update), traceable on device.
+
+    Returns (state', (mult, cand_sum, n_changed, objective)).  Shared by the
+    host-stepped prologue and the fused while_loop body, so both paths run
+    the identical computation graph.
+    """
+    prev_assign = state.assign
+    assign, mult, cand_sum, n_changed = _fused_epoch(
+        algo, backend, docs, state.index, state.assign, state.rho_self,
+        state.xstate, valid, bs)
+    state = update_step(docs, assign, prev_assign, state,
+                        state.index.params, k=k, backend=backend)
+    objective = jnp.sum(jnp.where(valid, state.rho_self, 0.0))
+    return state, (mult, cand_sum, n_changed, objective)
+
+
+def _fused_fit_body(state, docs, valid, last_changed, *, algo, backend, bs,
+                    k, max_steps):
+    """The fused remainder of the fit: a ``lax.while_loop`` over iterations.
+
+    Carries (state, step counter, #changed of the previous iteration, ring
+    buffer).  The ring buffer holds one slot per potential iteration for
+    every diagnostic; slots past the executed step count stay zero and are
+    discarded on the host.  Entering with ``last_changed == 0`` (the
+    prologue already converged) runs zero trips.
+    """
+    zf = jnp.zeros((max_steps,), jnp.float32)
+    zi = jnp.zeros((max_steps,), jnp.int32)
+    ring = {"mult": zf, "cand": zf, "changed": zi, "objective": zf,
+            "n_moving": zi, "t_th": zi, "v_th": zf}
+
+    def cond(carry):
+        _, it, changed, _ = carry
+        return (it < max_steps) & (changed != 0)
+
+    def body(carry):
+        state, it, _, ring = carry
+        state, (mult, cand, changed, obj) = _device_iteration(
+            algo, backend, docs, state, valid, bs=bs, k=k)
+        changed = changed.astype(jnp.int32)
+        ring = {
+            "mult": ring["mult"].at[it].set(mult),
+            "cand": ring["cand"].at[it].set(cand.astype(jnp.float32)),
+            "changed": ring["changed"].at[it].set(changed),
+            "objective": ring["objective"].at[it].set(obj),
+            "n_moving": ring["n_moving"].at[it].set(state.index.n_moving),
+            "t_th": ring["t_th"].at[it].set(state.index.params.t_th),
+            "v_th": ring["v_th"].at[it].set(state.index.params.v_th),
+        }
+        return (state, it + 1, changed, ring)
+
+    state, n_steps, _, ring = lax.while_loop(
+        cond, body,
+        (state, jnp.asarray(0, jnp.int32), last_changed, ring))
+    return state, n_steps, ring
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_fit_fn(algo: str, backend: str, bs: int, k: int, max_steps: int):
+    """Jitted fused-fit entry, donated state buffers (donation is a no-op on
+    CPU, where XLA has no aliasing support — skipped to avoid the warning)."""
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(partial(_fused_fit_body, algo=algo, backend=backend,
+                           bs=bs, k=k, max_steps=max_steps),
+                   donate_argnums=donate)
+
+
+def _run_fused(algo, backend, bs, k, max_steps, state, docs, valid,
+               last_changed):
+    """Indirection point for tests asserting the fused path is one call."""
+    fn = _fused_fit_fn(algo, backend, bs, k, max_steps)
+    return fn(state, docs, valid, last_changed)
 
 
 @dataclasses.dataclass
@@ -91,7 +167,8 @@ class SphericalKMeans:
 
     algo: 'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
     backend: 'reference' | 'pallas' | 'auto' — accumulator engine for the
-            assignment step (core/backends.py; 'auto' = pallas on TPU).
+            assignment AND update steps (core/backends.py; 'auto' = pallas
+            on TPU).
     params: 'auto' (EstParams at iterations 1–2, the paper's default),
             StructuralParams for fixed thresholds, or None -> trivial.
     """
@@ -118,14 +195,27 @@ class SphericalKMeans:
         # unfiltered baseline — exactly the paper (EstParams runs at r=1,2).
         return StructuralParams.trivial(dim)
 
+    def _history_row(self, r: int, n: int, mult, cand, changed, obj, nmov,
+                     t_th, v_th, elapsed: float) -> dict:
+        return {
+            "iteration": r,
+            "mult": float(mult),
+            "cpr": float(cand) / (n * self.k),
+            "n_changed": int(changed),
+            "objective": float(obj),
+            "n_moving": int(nmov),
+            "elapsed_s": elapsed,
+            "t_th": int(t_th),
+            "v_th": float(v_th),
+        }
+
     def fit(self, docs: SparseDocs, df: jax.Array | None = None) -> LloydResult:
         n = docs.n_docs
         params = self._initial_params(docs.dim)
         # Seeding picks centroids among the *real* documents, before padding.
         state = init_state(docs, self.k, params, seed=self.seed)
         if df is None:
-            from repro.sparse import df_counts
-            df = df_counts(docs)
+            df = docs.df            # cached on the corpus (sparse/matrix.py)
 
         bs = min(self.batch_size, n)
         pdocs = pad_rows(docs, bs)
@@ -133,28 +223,34 @@ class SphericalKMeans:
         valid = jnp.arange(n_pad) < n
         if n_pad != n:
             pad = n_pad - n
+            # Dead rows carry ρ_self = 0 — exactly the value every update
+            # step recomputes for them (no live tuples ⇒ zero similarity) —
+            # and the objective reduction masks on `valid` regardless, so
+            # padding never leaks into the history.
             state = dataclasses.replace(
                 state,
                 assign=jnp.pad(state.assign, (0, pad)),
-                rho_self=jnp.pad(state.rho_self, (0, pad),
-                                 constant_values=-jnp.inf),
-                rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad),
-                                      constant_values=-jnp.inf),
+                rho_self=jnp.pad(state.rho_self, (0, pad)),
+                rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad)),
             )
 
         history = []
         converged = False
-        for r in range(1, self.max_iter + 1):
+
+        # --- Prologue: the EstParams iterations, host-stepped -------------
+        # estimate_params needs host-side grid bookkeeping (dynamic-shape
+        # candidate grids), so iterations 1..max(est_iters) run outside the
+        # fused loop: still fully on device per step, with one diagnostic
+        # pull each — a constant ≤ max(est_iters) syncs.
+        prologue = 0
+        if self.params == "auto" and self.est_iters:
+            prologue = min(max(self.est_iters), self.max_iter)
+        for r in range(1, prologue + 1):
             t0 = time.perf_counter()
-            prev_assign = state.assign
-            assign, mult, cand_sum, n_changed = _run_epoch(
-                self.algo, self.backend, pdocs, state.index, state.assign,
-                state.rho_self, state.xstate, valid, bs)
-
-            state = update_step(pdocs, assign, prev_assign, state,
-                                state.index.params, k=self.k)
-
-            if self.params == "auto" and r in self.est_iters:
+            state, (mult, cand_sum, n_changed, _) = _device_iteration(
+                self.algo, self.backend, pdocs, state, valid,
+                bs=bs, k=self.k)
+            if r in self.est_iters:
                 # EstParams sees only the real rows (padding would skew the
                 # Mult-estimate tables).
                 new_params, _ = estimate_params(docs, df, state.index.means_t,
@@ -162,33 +258,43 @@ class SphericalKMeans:
                                                 grid=self.est_grid)
                 state = dataclasses.replace(
                     state, index=state.index.with_params(new_params))
-
-            # The one device→host sync of the iteration: every diagnostic
-            # scalar crosses in a single pull.
-            diag = _host_pull((mult, cand_sum, n_changed,
-                               jnp.sum(state.rho_self), state.index.n_moving,
-                               state.index.params.t_th,
-                               state.index.params.v_th))
-            mult_h, cand_h, changed_h, obj_h, nmov_h, t_th_h, v_th_h = diag
-
-            history.append({
-                "iteration": r,
-                "mult": float(mult_h),
-                "cpr": float(cand_h) / (n * self.k),
-                "n_changed": int(changed_h),
-                "objective": float(obj_h),
-                "n_moving": int(nmov_h),
-                "elapsed_s": time.perf_counter() - t0,
-                "t_th": int(t_th_h),
-                "v_th": float(v_th_h),
-            })
-            if int(changed_h) == 0:
+            diag = _host_pull(
+                (mult, cand_sum, n_changed,
+                 jnp.sum(jnp.where(valid, state.rho_self, 0.0)),
+                 state.index.n_moving, state.index.params.t_th,
+                 state.index.params.v_th))
+            history.append(self._history_row(
+                r, n, *diag, time.perf_counter() - t0))
+            if history[-1]["n_changed"] == 0:
                 converged = True
                 break
 
+        # --- Fused remainder: one jitted call, O(1) host syncs ------------
+        max_steps = self.max_iter - len(history)
+        if not converged and max_steps > 0:
+            last_changed = jnp.asarray(
+                history[-1]["n_changed"] if history else 1, jnp.int32)
+            t0 = time.perf_counter()
+            state, n_steps, ring = _run_fused(
+                self.algo, self.backend, bs, self.k, max_steps,
+                state, pdocs, valid, last_changed)
+            # The one device→host sync of the fused remainder: the executed
+            # step count and every diagnostic ring cross in a single pull.
+            steps, ring_h = _host_pull((n_steps, ring))
+            steps = int(steps)
+            per_iter = (time.perf_counter() - t0) / max(steps, 1)
+            for i in range(steps):
+                history.append(self._history_row(
+                    len(history) + 1, n, ring_h["mult"][i], ring_h["cand"][i],
+                    ring_h["changed"][i], ring_h["objective"][i],
+                    ring_h["n_moving"][i], ring_h["t_th"][i],
+                    ring_h["v_th"][i], per_iter))
+            converged = steps > 0 and int(ring_h["changed"][steps - 1]) == 0
+
         if n_pad != n:
             # Trim the padding rows so state arrays pair with the caller's
-            # docs again (padding rho_self is 0, so the objective is intact).
+            # docs again (dead rows carry ρ_self = 0, so Σ ρ_self — the
+            # objective — is identical before and after the trim).
             state = dataclasses.replace(
                 state,
                 assign=state.assign[:n],

@@ -117,6 +117,20 @@ def build_mean_index(means: jax.Array, params: StructuralParams,
     )
 
 
+def normalized_means(lam: jax.Array, fallback_means_t: jax.Array) -> jax.Array:
+    """(K, D) unit-norm means from cluster sums λ (Alg. 6 step 2→3).
+
+    Empty clusters keep their previous mean (still a unit vector) so the
+    exactness property vs Lloyd from identical states is preserved.  Shared
+    by the single-device update step, the shard-local distributed update,
+    and the serving engine's index rebuild.
+    """
+    norms = jnp.sqrt(jnp.sum(lam * lam, axis=1, keepdims=True))
+    empty = norms[:, 0] == 0.0
+    fallback = fallback_means_t.T.astype(jnp.float32)
+    return jnp.where(empty[:, None], fallback, lam / jnp.maximum(norms, 1e-12))
+
+
 def mean_value_stats(means_t: jax.Array, t_th: jax.Array):
     """Row statistics used by EstParams:
 

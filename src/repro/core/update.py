@@ -1,14 +1,18 @@
 """Update step (paper Alg. 6) + clustering state.
 
 Responsibilities, matching the paper's five update-phase duties:
-  (1) accumulate tentative means λ_j = Σ_{x∈C_j} x (sparse scatter-add);
+  (1) accumulate tentative means λ_j = Σ_{x∈C_j} x (sparse segment sum);
   (2) refresh every object's self-similarity ρ_{a(i)} against its *new*
       centroid — the shared pruning threshold of the next assignment step;
   (3)–(5) rebuild the structured index (here: column stats + moving flags).
 
-Invariant-centroid detection uses exact set semantics (C_j^{[r]} == C_j^{[r-1]})
-— a centroid is invariant iff no object moved into or out of its cluster —
-rather than a float tolerance, so ICP pruning is exactly the paper's.
+Both segment reductions — (1) and (2) — are produced by the pluggable
+:class:`repro.core.backends.Backend` (``reference``: dense scatter / gather,
+the exactness oracle; ``pallas``: the ``segment_update`` / ``rho_gather``
+MXU kernels).  Invariant-centroid detection uses exact set semantics
+(C_j^{[r]} == C_j^{[r-1]}) — a centroid is invariant iff no object moved
+into or out of its cluster — rather than a float tolerance, so ICP pruning
+is exactly the paper's under every backend.
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.sparse import SparseDocs
-from repro.core.meanindex import MeanIndex, StructuralParams, build_mean_index
+from repro.core.meanindex import (MeanIndex, StructuralParams,
+                                  build_mean_index, normalized_means)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -45,39 +50,30 @@ class KMeansState:
         return (self.rho_self >= self.rho_self_prev) & (self.iteration >= 2)
 
 
-def _accumulate_means(docs: SparseDocs, assign: jax.Array, k: int) -> jax.Array:
-    """(K, D) tentative means λ via sparse scatter-add (Alg. 6 lines 2–5)."""
-    acc = jnp.zeros((k, docs.dim), jnp.float32)
-    vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
-    return acc.at[assign[:, None], docs.ids].add(vals)
-
-
-def _self_sims(docs: SparseDocs, means_t: jax.Array, assign: jax.Array) -> jax.Array:
-    """ρ_{a(i)} for every object vs its own centroid (Alg. 6 lines 6–7)."""
-    picked = means_t[docs.ids, assign[:, None]]  # (N, P)
-    return jnp.sum(jnp.where(docs.row_mask(), docs.vals * picked, 0.0), axis=1)
-
-
-@partial(jax.jit, static_argnames=("k",))
-def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
-                prev_state: KMeansState, params: StructuralParams, *, k: int) -> KMeansState:
-    """Full update: new means, moving flags, refreshed ρ_self, xstate shift."""
-    lam = _accumulate_means(docs, assign, k)
-    norms = jnp.sqrt(jnp.sum(lam * lam, axis=1, keepdims=True))
-    empty = norms[:, 0] == 0.0
-    # Empty clusters keep their previous mean (still a unit vector) so the
-    # exactness property vs Lloyd from identical states is preserved.
-    means = jnp.where(empty[:, None], prev_state.index.means_t.T, lam / jnp.maximum(norms, 1e-12))
-
-    # Exact invariance: a centroid moved iff its membership changed.
+def moving_flags(assign: jax.Array, prev_assign: jax.Array, k: int) -> jax.Array:
+    """(K,) bool — exact invariance: a centroid moved iff its membership
+    changed (an object entered or left its cluster)."""
     changed = assign != prev_assign
     moving = jnp.zeros((k,), jnp.int32)
     moving = moving.at[assign].max(changed.astype(jnp.int32))
     moving = moving.at[prev_assign].max(changed.astype(jnp.int32))
-    moving = moving.astype(bool)
+    return moving.astype(bool)
 
-    index = build_mean_index(means, params, moving=moving)
-    rho_self = _self_sims(docs, index.means_t, assign)
+
+@partial(jax.jit, static_argnames=("k", "backend"))
+def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
+                prev_state: KMeansState, params: StructuralParams, *, k: int,
+                backend: str = "reference") -> KMeansState:
+    """Full update: new means, moving flags, refreshed ρ_self, xstate shift."""
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
+    lam = bk.accumulate_means(docs.ids, vals, assign, k=k, dim=docs.dim)
+    means = normalized_means(lam, prev_state.index.means_t)
+    index = build_mean_index(means, params,
+                             moving=moving_flags(assign, prev_assign, k))
+    rho_self = bk.self_sims(docs.ids, vals, assign, index.means_t)
     return KMeansState(
         index=index,
         assign=assign,

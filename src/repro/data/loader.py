@@ -17,7 +17,7 @@ import gzip
 import numpy as np
 import jax.numpy as jnp
 
-from repro.sparse import SparseDocs, tf_idf, l2_normalize_rows, remap_terms_by_df, df_counts
+from repro.sparse import SparseDocs, tf_idf, l2_normalize_rows, remap_terms_by_df, df_counts, with_df
 
 
 def load_uci_bow(path: str, max_docs: int | None = None, pad_to: int | None = None):
@@ -51,4 +51,5 @@ def load_uci_bow(path: str, max_docs: int | None = None, pad_to: int | None = No
     docs = tf_idf(docs, df=df)
     docs = l2_normalize_rows(docs)
     docs, perm = remap_terms_by_df(docs, df=df)
-    return docs, df[perm], perm
+    dfp = df[perm]                   # permuted counts == remapped corpus df
+    return with_df(docs, dfp), dfp, perm

@@ -19,7 +19,7 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
-from repro.sparse import SparseDocs, tf_idf, l2_normalize_rows, remap_terms_by_df, df_counts
+from repro.sparse import SparseDocs, tf_idf, l2_normalize_rows, remap_terms_by_df, df_counts, with_df
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,4 +86,7 @@ def make_corpus(spec: CorpusSpec):
     docs = l2_normalize_rows(docs)
     docs, perm = remap_terms_by_df(docs, df=df)
     df_sorted = df[perm]
+    # The permuted counts ARE the remapped corpus's df: seed the .df cache
+    # so the fit path (EstParams, tf-idf consumers) never recounts.
+    docs = with_df(docs, df_sorted)
     return docs, df_sorted, perm, jnp.asarray(topics)

@@ -12,9 +12,12 @@ One fused step = assignment + update:
      K/|model| centroids, local top-1;
   2. (max, argmin-index) all-reduce over "model" — O(B) bytes/object batch,
      never O(B·K).  This is the only assignment-phase collective;
-  3. update: local cluster sums for owned centroids, psum over object axes
-     (compiles to reduce-scatter + all-gather), L2 normalise;
-  4. ρ_self refresh where the centroid shard lives, psum over "model";
+  3. update: local cluster sums for owned centroids produced by the pluggable
+     backend accumulator (core/backends.py: reference scatter | pallas
+     ``segment_update``), psum over object axes (compiles to reduce-scatter +
+     all-gather), L2 normalise;
+  4. ρ_self refresh via the backend's own-centroid gather where the centroid
+     shard lives, psum over "model";
   5. exact invariant-centroid (ICP) flags from membership deltas.
 
 Object batching inside the shard keeps the (chunk × K_loc) similarity tile
@@ -158,6 +161,10 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
                 taat_unroll: bool = False, two_phase: bool = False,
                 p_block: int = 1, p_tail: int = 16,
                 backend: str = "reference"):
+    from repro.core.backends import BACKENDS
+    from repro.core.meanindex import normalized_means
+
+    bk = BACKENDS[backend]
     n_loc, p = ids.shape
     d, k_loc = means_t.shape
     k0 = lax.axis_index("model") * k_loc
@@ -215,6 +222,9 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     n_candidates = lax.psum(jnp.sum(n_surv), axes_obj + ("model",))
 
     # ---------------- update: cluster sums for owned centroids -------------
+    # The backend owns the segment sums (reference scatter drops the
+    # out-of-range safe_a = k_loc rows; the pallas segment_update kernel
+    # never materialises them) — the psum consumes the backend accumulator.
     local_a = assign_new - k0
     in_range = (local_a >= 0) & (local_a < k_loc) & valid
     safe_a = jnp.where(in_range, local_a, k_loc)
@@ -222,26 +232,22 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     def acc_body(ci, lam):
         sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
         cvals = jnp.where(sl(in_range)[:, None], sl(vals), 0.0)
-        return lam.at[sl(safe_a)[:, None], sl(ids)].add(cvals)
+        return bk.accumulate_means(sl(ids), cvals, sl(safe_a),
+                                   k=k_loc, dim=d, init=lam)
 
-    lam = lax.fori_loop(0, nc, acc_body,
-                        jnp.zeros((k_loc + 1, d), jnp.float32))[:k_loc]
+    lam = lax.fori_loop(0, nc, acc_body, jnp.zeros((k_loc, d), jnp.float32))
     # §Perf variant: compress the cluster-sum all-reduce (the step's dominant
     # collective) to bf16 — the k-means analogue of gradient compression.
     # Not bit-exact vs Lloyd; f32 default preserves the acceleration contract.
     lam = lax.psum(lam.astype(lambda_dtype), axes_obj).astype(jnp.float32)
-    norms = jnp.sqrt(jnp.sum(lam * lam, axis=1, keepdims=True))
-    empty = norms[:, 0] == 0.0
-    means_new = jnp.where(empty[:, None], means_t.T.astype(jnp.float32),
-                          lam / jnp.maximum(norms, 1e-12))
+    means_new = normalized_means(lam, means_t)
     means_new_t = means_new.T.astype(means_t.dtype)             # (D, K_loc)
 
     # ---------------- ρ_self refresh (Alg. 6 lines 6–7) --------------------
     def rho_body(ci, out):
         sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
-        cids, ca, cin = sl(ids), sl(safe_a), sl(in_range)
-        picked = means_new_t[cids, jnp.minimum(ca, k_loc - 1)[:, None]]
-        r = jnp.sum(jnp.where(cin[:, None], sl(vals) * picked, 0.0), axis=1)
+        cvals = jnp.where(sl(in_range)[:, None], sl(vals), 0.0)
+        r = bk.self_sims(sl(ids), cvals, sl(safe_a), means_new_t)
         return lax.dynamic_update_slice_in_dim(out, r, ci * obj_chunk, 0)
 
     rho_new = lax.fori_loop(0, nc, rho_body, jnp.zeros((n_loc,), jnp.float32))
@@ -392,8 +398,7 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     params = StructuralParams.trivial(docs.dim)
 
     if df is None:
-        from repro.sparse import df_counts
-        df = df_counts(docs)
+        df = docs.df            # cached on the corpus (sparse/matrix.py)
 
     history = []
     converged = False

@@ -7,6 +7,7 @@ where the kernels are:
   esicp_gather    — fused Region-1/2 partial similarity + Region-3 L1 mass
   esicp_filter    — fused upper bound + survivor mask + |Z_i| count
   segment_update  — assignment scatter-add of sparse objects into mean sums
+  rho_gather      — ρ_self refresh: per-object own-centroid similarity
   flash_attention — online-softmax banded-causal attention (LM hot spot)
 
 Every kernel is written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
@@ -18,9 +19,10 @@ from repro.kernels.ops import (
     esicp_gather,
     esicp_filter,
     segment_update,
+    rho_gather,
     flash_attention,
 )
 from repro.kernels import ref
 
 __all__ = ["sparse_sim", "esicp_gather", "esicp_filter", "segment_update",
-           "flash_attention", "ref"]
+           "rho_gather", "flash_attention", "ref"]

@@ -15,6 +15,7 @@ from repro.kernels import sparse_sim as _ss
 from repro.kernels import esicp_gather as _eg
 from repro.kernels import esicp_filter as _ef
 from repro.kernels import segment_update as _su
+from repro.kernels import rho_gather as _rg
 from repro.kernels import flash_attention as _fa
 
 
@@ -96,6 +97,23 @@ def segment_update(assign, ids, vals, *, k: int, d: int, b_blk=128, k_blk=128,
                                     k_blk=k_blk, d_blk=d_blk,
                                     interpret=interpret)
     return out[:k, :d]
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
+def rho_gather(assign, ids, vals, means_t, *, b_blk=128, k_blk=128, d_blk=256,
+               interpret: bool | None = None):
+    """(B,) ρ_self refresh: each object's similarity vs its own centroid.
+
+    Padding objects get assign = k (out of range) and read back ρ = 0.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b = ids.shape[0]
+    k = means_t.shape[1]
+    pa = _pad_to(assign, b_blk, 0, value=k)
+    pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
+    out = _rg.rho_gather_pallas(pa, pi, pv, pm, b_blk=b_blk, k_blk=k_blk,
+                                d_blk=d_blk, interpret=interpret)
+    return out[:b]
 
 
 @partial(jax.jit, static_argnames=("window", "sq_blk", "sk_blk", "interpret"))

@@ -44,6 +44,16 @@ def segment_update(assign, ids, vals, k: int, d: int):
     return out.at[assign].add(x)
 
 
+def rho_gather(assign, ids, vals, means_t):
+    """(B,) each object's similarity vs its assigned centroid; out-of-range
+    assignments (padding) read 0."""
+    d, k = means_t.shape
+    x = densify(ids, vals, d)
+    cols = jnp.where(assign < k, assign, 0)
+    picked = jnp.where((assign < k)[:, None], means_t.T[cols], 0.0)
+    return jnp.sum(x * picked, axis=1)
+
+
 def flash_attention(q, k, v, window: int = -1):
     """(BH, Sq, hd) × (BH, Sk, hd) banded-causal attention, f32."""
     bh, sq, hd = q.shape

@@ -1,0 +1,80 @@
+"""Pallas kernel: ρ_self refresh — per-object gather of its own centroid.
+
+The update step's lines 6–7 (Alg. 6) compute ρ_{a(i)} = x_i · μ_{a(i)} for
+every object against its *new* centroid.  A CPU implementation gathers the
+assigned column per object tuple; on TPU a data-dependent column gather from
+``means_t (D, K)`` would serialise, so the gather is expressed as a one-hot
+matmul over the centroid tile — the ρ_self half of the AFM update adaptation
+(the scatter half is :mod:`repro.kernels.segment_update`):
+
+    grid = (B tiles, D tiles, K tiles)           # D, K sequential → accumulate
+    slab     = densify(ids, vals)                 (B_blk, D_blk)
+    sel      = onehot(assign − k0)                (B_blk, K_blk)
+    gathered = sel @ means_blkᵀ                   (MXU)  — own-centroid columns
+    out[b]  += Σ_d slab[b, d] · gathered[b, d]    (VPU row reduce)
+
+The output rides a 128-lane block (every lane carries the same partial) so
+the (B,) result stays tile-aligned; the wrapper slices lane 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sparse_sim import _densify
+
+
+def _rho_kernel(assign_ref, ids_ref, vals_ref, means_ref, out_ref, *,
+                d_blk: int, k_blk: int):
+    d_idx = pl.program_id(1)
+    k_idx = pl.program_id(2)
+    d0 = d_idx * d_blk
+    k0 = k_idx * k_blk
+
+    slab = _densify(ids_ref[...], vals_ref[...], d0, d_blk)   # (B_blk, D_blk)
+    local = assign_ref[...][:, 0] - k0                        # (B_blk,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], k_blk), 1)
+    sel = (local[:, None] == iota).astype(jnp.float32)        # (B_blk, K_blk)
+    gathered = jnp.dot(sel, means_ref[...].T,
+                       preferred_element_type=jnp.float32)    # (B_blk, D_blk)
+    part = jnp.sum(slab * gathered, axis=1, keepdims=True)    # (B_blk, 1)
+    acc = jnp.broadcast_to(part, (part.shape[0], 128))
+
+    @pl.when((d_idx == 0) & (k_idx == 0))
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when((d_idx > 0) | (k_idx > 0))
+    def _acc():
+        out_ref[...] += acc
+
+
+def rho_gather_pallas(assign, ids, vals, means_t, *,
+                      b_blk: int = 128, k_blk: int = 128, d_blk: int = 256,
+                      interpret: bool = False):
+    """assign: (B,) int32; ids/vals: (B, P); means_t: (D, K). -> (B,) float32.
+
+    Out-of-range assignments (padding rows use ``assign = K``) select no
+    centroid column and produce ρ = 0.
+    """
+    b, p = ids.shape
+    d, k = means_t.shape
+    assert b % b_blk == 0 and k % k_blk == 0 and d % d_blk == 0 and p % 8 == 0
+    grid = (b // b_blk, d // d_blk, k // k_blk)
+    out = pl.pallas_call(
+        functools.partial(_rho_kernel, d_blk=d_blk, k_blk=k_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, 1), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((d_blk, k_blk), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((b_blk, 128), lambda i, j, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 128), jnp.float32),
+        interpret=interpret,
+    )(assign[:, None], ids, vals, means_t)
+    return out[:, 0]

@@ -10,8 +10,10 @@ full-size caches are never allocated on the host.
 
 :class:`ClusterEngine` is the k-means analogue: a frozen mean-inverted index
 served as a lookup service, with the assignment accumulators produced by a
-pluggable backend (core/backends.py) — the same engine the Lloyd loop uses,
-minus the update step.
+pluggable backend (core/backends.py) — the same engine the Lloyd loop uses.
+``refit`` treats index (re)construction as a first-class serving operation
+(the SIVF companion paper's stance): one backend-owned update phase rebuilds
+the frozen index from a fresh corpus without a full training fit.
 """
 from __future__ import annotations
 
@@ -66,6 +68,27 @@ def _classify_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
     return a.reshape(n), s.reshape(n)
 
 
+@partial(jax.jit, static_argnames=("backend", "k", "dim"))
+def _rebuild_index(backend: str, ids, vals, nnz, assign, dim: int, index,
+                   k: int):
+    """Backend-owned update phase against a frozen index: cluster sums →
+    unit-norm means → fresh MeanIndex (+ refreshed per-doc ρ), one jitted
+    call, no host round-trips between the phases."""
+    from repro.core.backends import resolve_backend
+    from repro.core.meanindex import build_mean_index, normalized_means
+
+    bk = resolve_backend(backend)
+    live = jnp.arange(ids.shape[1])[None, :] < nnz[:, None]
+    mvals = jnp.where(live, vals, 0.0)
+    lam = bk.accumulate_means(ids, mvals, assign, k=k, dim=dim)
+    means = normalized_means(lam, index.means_t)
+    # A rebuild is a fresh index: every centroid is 'moving' (no ICP history
+    # carries across corpora), matching build_mean_index's default.
+    rebuilt = build_mean_index(means, index.params)
+    rho = bk.self_sims(ids, mvals, assign, rebuilt.means_t)
+    return rebuilt, rho
+
+
 class ClusterEngine:
     """Classify documents against a frozen MeanIndex (serving mode).
 
@@ -94,6 +117,39 @@ class ClusterEngine:
         a, s = _classify_fused(self.backend, pdocs.ids, pdocs.vals,
                                pdocs.nnz, pdocs.dim, self.index, bs)
         return np.asarray(a)[:n], np.asarray(s)[:n]
+
+    def refit(self, docs, *, n_iter: int = 1):
+        """Rebuild the frozen index from a fresh corpus (SIVF-style index
+        reconstruction): classify → backend-owned update phase (cluster
+        sums, L2 normalise, index rebuild) — per round.
+
+        Empty clusters keep their previous centroid, so a small refit batch
+        cannot wipe out the index.  Returns (assign (N,) int32, rho (N,)
+        float32): ``assign`` is the membership the final rebuild consumed
+        (classified against the pre-rebuild index, the Lloyd convention);
+        ``rho`` is each document's similarity refreshed against the
+        *rebuilt* means — exactly what the update step hands the next
+        assignment as its pruning threshold.
+        """
+        from repro.sparse import pad_rows
+
+        if docs.n_docs == 0:
+            raise ValueError("refit needs a non-empty corpus")
+        bs = min(self.batch_size, docs.n_docs)
+        pdocs = pad_rows(docs, bs)
+        n = docs.n_docs
+        rho = None
+        for _ in range(max(n_iter, 1)):
+            a, _ = _classify_fused(self.backend, pdocs.ids, pdocs.vals,
+                                   pdocs.nnz, pdocs.dim, self.index, bs)
+            # Padding rows carry assign = K: they select no centroid column
+            # in either backend's update accumulator.
+            a = jnp.where(jnp.arange(pdocs.n_docs) < n, a, self.index.k)
+            self.index, rho = _rebuild_index(self.backend, pdocs.ids,
+                                             pdocs.vals, pdocs.nnz, a,
+                                             pdocs.dim, self.index,
+                                             self.index.k)
+        return np.asarray(a)[:n], np.asarray(rho)[:n]
 
 
 class ServeLoop:

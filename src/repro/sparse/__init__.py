@@ -13,6 +13,7 @@ from repro.sparse.matrix import (
     from_dense,
     to_dense,
     df_counts,
+    with_df,
     tf_idf,
     l2_normalize_rows,
     remap_terms_by_df,
@@ -25,6 +26,7 @@ __all__ = [
     "from_dense",
     "to_dense",
     "df_counts",
+    "with_df",
     "tf_idf",
     "l2_normalize_rows",
     "remap_terms_by_df",

@@ -6,7 +6,7 @@ because corpus construction happens once, off the accelerator.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import cached_property, partial
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,18 @@ class SparseDocs:
         """(N, P) bool — True on live tuples."""
         return jnp.arange(self.pad_width)[None, :] < self.nnz[:, None]
 
+    @cached_property
+    def df(self) -> jax.Array:
+        """(D,) document frequency of each term, computed once per corpus.
+
+        Every df consumer on the fit path (tf-idf, df-rank remapping,
+        EstParams) shares this cache instead of re-counting from scratch.
+        cached_property stores via the instance ``__dict__``, so the frozen
+        dataclass and the pytree flatten/unflatten round-trip (which builds
+        fresh instances) are both unaffected.
+        """
+        return df_counts(self)
+
     def slice_rows(self, start: int, size: int) -> "SparseDocs":
         return SparseDocs(
             ids=jax.lax.dynamic_slice_in_dim(self.ids, start, size, 0),
@@ -88,6 +100,14 @@ def to_dense(docs: SparseDocs) -> jax.Array:
     )
 
 
+def with_df(docs: SparseDocs, df: jax.Array) -> SparseDocs:
+    """Pre-seed the ``docs.df`` cache with counts the caller already holds
+    (corpus builders compute df before the df-rank remap; the permuted
+    counts are exactly the remapped corpus's df).  Returns ``docs``."""
+    docs.__dict__["df"] = df
+    return docs
+
+
 def df_counts(docs: SparseDocs) -> jax.Array:
     """(D,) document frequency of each term."""
     live = docs.row_mask()
@@ -99,7 +119,7 @@ def df_counts(docs: SparseDocs) -> jax.Array:
 def tf_idf(docs: SparseDocs, df: jax.Array | None = None, n_total: int | None = None) -> SparseDocs:
     """Classic tf-idf re-weighting (paper Eq. 15): tf * log(N / df_s)."""
     if df is None:
-        df = df_counts(docs)
+        df = docs.df
     n = float(n_total if n_total is not None else docs.n_docs)
     idf = jnp.log(n / jnp.maximum(df.astype(jnp.float32), 1.0))
     vals = docs.vals * idf[docs.ids]
@@ -122,7 +142,7 @@ def remap_terms_by_df(docs: SparseDocs, df: jax.Array | None = None):
     filter needs.
     """
     if df is None:
-        df = df_counts(docs)
+        df = docs.df
     perm = jnp.argsort(df, stable=True)          # perm[new] = old
     inv = jnp.argsort(perm, stable=True)         # inv[old] = new
     new_ids = inv[docs.ids]

@@ -1,4 +1,4 @@
-"""Backend-pluggable assignment engine: parity matrix + fused-epoch contract.
+"""Backend-pluggable clustering engine: parity matrix + fused-fit contract.
 
 The acceptance criteria of the backend refactor:
 
@@ -6,11 +6,18 @@ The acceptance criteria of the backend refactor:
     mode on CPU) returns assignments identical to ``backend="reference"`` —
     and here we hold the stronger line: candidate counts and the Mult
     diagnostic match too;
-  * ``SphericalKMeans.fit`` runs the whole epoch as one jitted call and
-    performs exactly one device→host pull per Lloyd iteration;
+  * the update phase is backend-owned: ``update_step(..., backend="pallas")``
+    exercises ``kernels.ops.segment_update`` / ``rho_gather`` and produces
+    identical moving flags and assignments (means/ρ_self to f32
+    reduction-order tolerance) for all six algorithms;
+  * ``SphericalKMeans.fit`` performs O(1) host syncs per *fit* — one per
+    EstParams prologue iteration plus one for the entire fused
+    ``lax.while_loop`` remainder — not one per iteration;
   * the tail batch (n % batch_size != 0) rides the identical padded code
-    path and changes nothing.
+    path and changes nothing: assignments, objective, and history.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -18,7 +25,9 @@ import jax.numpy as jnp
 from repro.core import SphericalKMeans, StructuralParams
 from repro.core.assignment import ALGORITHMS, assignment_step
 from repro.core.backends import BACKENDS, resolve_backend
+from repro.core.update import update_step
 from repro.core import lloyd
+from repro.kernels import ref as kref
 
 
 BACKEND_NAMES = sorted(BACKENDS)          # ["pallas", "reference"]
@@ -54,6 +63,93 @@ def test_backend_parity_matrix(mid_state, algo):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("algo", sorted(ALGORITHMS))
+def test_update_phase_parity_matrix(mid_state, algo):
+    """Full iteration (assignment × algo → backend-owned update) per backend:
+    identical assignments and moving flags; means/ρ_self agree to f32
+    reduction-order tolerance; and the *next* assignment step from each
+    backend's updated state is again identical — the acceleration contract
+    survives the pallas update path (segment_update + rho_gather)."""
+    docs, index, state = mid_state
+    st = dataclasses.replace(state, index=index)
+    outs = {}
+    for backend in BACKEND_NAMES:
+        res = assignment_step(algo, docs, index, st.assign, st.rho_self,
+                              st.xstate, backend=backend)
+        new = update_step(docs, res.assign, st.assign, st, index.params,
+                          k=index.k, backend=backend)
+        nxt = assignment_step(algo, docs, new.index, new.assign,
+                              new.rho_self, new.xstate, backend=backend)
+        outs[backend] = (new, nxt)
+    ref_s, pal_s = outs["reference"][0], outs["pallas"][0]
+    assert (np.asarray(ref_s.assign) == np.asarray(pal_s.assign)).all()
+    assert (np.asarray(ref_s.index.moving)
+            == np.asarray(pal_s.index.moving)).all()
+    assert (np.asarray(ref_s.index.mf) == np.asarray(pal_s.index.mf)).all()
+    np.testing.assert_allclose(np.asarray(ref_s.index.means_t),
+                               np.asarray(pal_s.index.means_t),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref_s.rho_self),
+                               np.asarray(pal_s.rho_self),
+                               rtol=1e-6, atol=1e-6)
+    ref_n, pal_n = outs["reference"][1], outs["pallas"][1]
+    assert (np.asarray(ref_n.assign) == np.asarray(pal_n.assign)).all()
+
+
+def _update_case(rng, b, p, d, k, assign):
+    ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
+    vals = rng.random((b, p)).astype(np.float32)
+    nnz = rng.integers(1, p + 1, b)
+    for i in range(b):
+        vals[i, nnz[i]:] = 0
+    means_t = np.where(rng.random((d, k)) < 0.3,
+                       rng.random((d, k)), 0).astype(np.float32)
+    return (jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(means_t),
+            jnp.asarray(assign.astype(np.int32)))
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+@pytest.mark.parametrize("case", ["empty_clusters", "collapse", "tail"])
+def test_update_accumulators_vs_oracle(rng, backend, case):
+    """Backend update accumulators == the pure-jnp kernel oracles, across
+    empty clusters, single-cluster collapse, and non-block-multiple tails."""
+    b, p, d, k = {"empty_clusters": (96, 12, 200, 11),
+                  "collapse": (64, 8, 128, 9),
+                  "tail": (130, 12, 260, 33)}[case]
+    if case == "empty_clusters":
+        assign = rng.choice([0, 3, k - 1], b)      # most clusters stay empty
+    elif case == "collapse":
+        assign = np.full(b, 2)                     # every object in one cluster
+    else:
+        assign = rng.integers(0, k, b)
+    ids, vals, means_t, assign = _update_case(rng, b, p, d, k, assign)
+    bk = BACKENDS[backend]
+
+    lam = bk.accumulate_means(ids, vals, assign, k=k, dim=d)
+    np.testing.assert_allclose(
+        np.asarray(lam), np.asarray(kref.segment_update(assign, ids, vals, k, d)),
+        rtol=1e-5, atol=1e-5)
+    if case == "empty_clusters":
+        used = set(np.asarray(assign).tolist())
+        for j in range(k):
+            if j not in used:
+                assert (np.asarray(lam)[j] == 0.0).all()
+
+    rho = bk.self_sims(ids, vals, assign, means_t)
+    np.testing.assert_allclose(
+        np.asarray(rho), np.asarray(kref.rho_gather(assign, ids, vals, means_t)),
+        rtol=1e-5, atol=1e-5)
+
+    # Chunked accumulation (the distributed step's fori_loop contract):
+    # folding two halves through init= equals the one-shot sum.
+    h = (b // 2 // 8) * 8 or b // 2
+    lam2 = bk.accumulate_means(ids[:h], vals[:h], assign[:h], k=k, dim=d)
+    lam2 = bk.accumulate_means(ids[h:], vals[h:], assign[h:], k=k, dim=d,
+                               init=lam2)
+    np.testing.assert_allclose(np.asarray(lam2), np.asarray(lam),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("backend", BACKEND_NAMES)
 def test_fit_exactness_across_backends(small_corpus, backend):
     """Full Lloyd runs converge to the identical clustering per backend."""
@@ -66,42 +162,98 @@ def test_fit_exactness_across_backends(small_corpus, backend):
     assert (r.assign == ref.assign).all()
 
 
-def test_tail_batch_identical_assignments(small_corpus):
-    """n % batch_size != 0: the padded tail batch changes nothing."""
+def test_tail_batch_padding_regression(small_corpus):
+    """n % batch_size != 0: the padded tail batch changes nothing — the
+    regression companion to the ρ_self pad-value fix: assignments, objective,
+    and the entire diagnostic history are identical with and without tail
+    padding (dead rows carry ρ_self = 0 and are masked out of the objective
+    reduction)."""
     docs, df, perm, topics = small_corpus          # n = 1500
     full = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=1500,
                            seed=4).fit(docs, df=df)
     tail = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=400,
                            seed=4).fit(docs, df=df)     # 1500 % 400 = 300
     assert tail.n_iter == full.n_iter
+    assert tail.converged == full.converged
     assert (tail.assign == full.assign).all()
-    np.testing.assert_allclose([h["mult"] for h in tail.history],
-                               [h["mult"] for h in full.history], rtol=1e-6)
+    np.testing.assert_allclose(tail.objective, full.objective, rtol=1e-6)
+    for ht, hf in zip(tail.history, full.history):
+        assert ht["n_changed"] == hf["n_changed"]
+        assert ht["n_moving"] == hf["n_moving"]
+        assert ht["t_th"] == hf["t_th"]
+        np.testing.assert_allclose(ht["mult"], hf["mult"], rtol=1e-6)
+        np.testing.assert_allclose(ht["cpr"], hf["cpr"], rtol=1e-6)
+        np.testing.assert_allclose(ht["objective"], hf["objective"],
+                                   rtol=1e-6)
     assert len(tail.assign) == docs.n_docs
 
 
-def test_fused_epoch_one_call_and_one_sync_per_iteration(small_corpus,
-                                                         monkeypatch):
-    """The epoch is one jitted call; the host syncs once per iteration."""
+def test_fit_host_syncs_o1_per_fit(small_corpus, monkeypatch):
+    """O(1) host syncs per *fit*: one pull per EstParams prologue iteration
+    (≤ 2) plus exactly one for the entire fused while_loop remainder — and
+    the remainder is a single call, however many iterations it runs."""
     docs, df, perm, topics = small_corpus
-    epoch_calls, pulls = [], []
-    real_epoch, real_pull = lloyd._run_epoch, lloyd._host_pull
+    fused_calls, pulls = [], []
+    real_fused, real_pull = lloyd._run_fused, lloyd._host_pull
 
-    def counting_epoch(*a, **kw):
-        epoch_calls.append(1)
-        return real_epoch(*a, **kw)
+    def counting_fused(*a, **kw):
+        fused_calls.append(1)
+        return real_fused(*a, **kw)
 
     def counting_pull(x):
         pulls.append(1)
         return real_pull(x)
 
-    monkeypatch.setattr(lloyd, "_run_epoch", counting_epoch)
+    monkeypatch.setattr(lloyd, "_run_fused", counting_fused)
     monkeypatch.setattr(lloyd, "_host_pull", counting_pull)
-    # 4 batches per epoch: the per-batch loop would count 4× per iteration.
     res = SphericalKMeans(k=12, algo="esicp", max_iter=8, batch_size=375,
                           seed=4).fit(docs, df=df)
-    assert len(epoch_calls) == res.n_iter
-    assert len(pulls) == res.n_iter
+    assert res.n_iter > 3                  # more iterations than host syncs
+    assert len(fused_calls) == 1           # iterations 3.. are one call
+    assert len(pulls) == 3                 # 2 prologue + 1 fused remainder
+
+
+def test_fused_fit_matches_per_iteration_loop(small_corpus):
+    """Converged results of the fused while_loop fit are identical to a
+    host-stepped per-iteration loop over the same building blocks."""
+    docs, df, perm, topics = small_corpus
+    res = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=500,
+                          seed=4).fit(docs, df=df)
+    assert res.converged
+
+    # Reconstruct the pre-refactor loop: epoch + update stepped from the
+    # host, EstParams at iterations 1-2, stop at the first 0-change epoch.
+    km = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=500,
+                         seed=4)
+    from repro.core.update import init_state
+    from repro.core.estparams import estimate_params
+    from repro.sparse import pad_rows
+
+    n = docs.n_docs
+    state = init_state(docs, 12, km._initial_params(docs.dim), seed=4)
+    bs = 500
+    pdocs = pad_rows(docs, bs)
+    valid = jnp.arange(pdocs.n_docs) < n
+    history = []
+    for r in range(1, 21):
+        state, (mult, cand, changed, obj) = lloyd._device_iteration(
+            "esicp", "reference", pdocs, state, valid, bs=bs, k=12)
+        if r in (1, 2):
+            new_params, _ = estimate_params(docs, df, state.index.means_t,
+                                            state.rho_self[:n], k=12,
+                                            grid=km.est_grid)
+            state = dataclasses.replace(
+                state, index=state.index.with_params(new_params))
+        history.append((int(changed), float(obj)))
+        if int(changed) == 0:
+            break
+
+    assert res.n_iter == len(history)
+    assert (res.assign == np.asarray(state.assign)[:n]).all()
+    np.testing.assert_allclose(
+        [h["objective"] for h in res.history], [h[1] for h in history],
+        rtol=1e-6)
+    assert [h["n_changed"] for h in res.history] == [h[0] for h in history]
 
 
 def test_resolve_backend():
@@ -127,6 +279,36 @@ def test_cluster_engine_parity(small_corpus, backend):
     assert (assign == res.assign).all()
     np.testing.assert_allclose(sims, np.asarray(res.state.rho_self)[:docs.n_docs],
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_cluster_engine_refit_rebuilds_index(small_corpus, backend):
+    """Serving-layer index rebuild: refit from a converged fit's own corpus
+    reproduces the fit's index (same update phase, backend-owned); a partial
+    corpus keeps the untouched clusters' previous centroids alive."""
+    from repro.sparse import SparseDocs
+    from repro.serve import ClusterEngine
+
+    docs, df, perm, topics = small_corpus
+    res = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=1500,
+                          seed=4).fit(docs, df=df)
+    assert res.converged
+    eng = ClusterEngine(res.state.index, backend=backend, batch_size=700)
+    assign, rho = eng.refit(docs)              # tail path: 1500 % 700 != 0
+    assert (assign == res.assign).all()
+    np.testing.assert_allclose(np.asarray(eng.index.means_t),
+                               np.asarray(res.state.index.means_t),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rho, np.asarray(res.state.rho_self),
+                               rtol=1e-5, atol=1e-5)
+    # refit on a small slice: empty clusters keep their previous centroid
+    # (unit columns, no NaNs), so serving survives partial refreshes.
+    sub = SparseDocs(ids=docs.ids[:64], vals=docs.vals[:64],
+                     nnz=docs.nnz[:64], dim=docs.dim)
+    eng.refit(sub)
+    norms = np.asarray(jnp.sum(eng.index.means_t ** 2, axis=0))
+    assert np.isfinite(np.asarray(eng.index.means_t)).all()
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
 
 
 def test_distributed_backend_pallas_smoke():

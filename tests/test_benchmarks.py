@@ -1,0 +1,23 @@
+"""Benchmark harness plumbing (no timing): the machine-readable perf
+trajectory emitted for the fused-iteration suite."""
+import json
+
+from benchmarks.run import JSON_SUITES, SUITES, write_bench_json
+
+
+def test_fused_suite_registered():
+    names = [n for n, _ in SUITES]
+    assert "fused" in names
+    assert JSON_SUITES["fused"] == "BENCH_fused_iteration.json"
+
+
+def test_write_bench_json(tmp_path):
+    rows = ["fused_iteration/update_reference,12.50,reference",
+            "fused_iteration/update_pallas,8.00,pallas",
+            "fused_iteration/fit_per_iter,100.00,reference"]
+    path = write_bench_json(rows, str(tmp_path / "BENCH_fused_iteration.json"))
+    data = json.loads(open(path).read())
+    assert data[0] == {"name": "fused_iteration/update_reference",
+                       "us_per_call": 12.5, "backend": "reference"}
+    assert {e["backend"] for e in data} == {"reference", "pallas"}
+    assert all(e["us_per_call"] > 0 for e in data)

@@ -46,3 +46,15 @@ def test_uci_loader(tmp_path):
     norms = (dense ** 2).sum(1)
     np.testing.assert_allclose(norms, 1.0, atol=1e-5)
     assert (np.asarray(df) >= 0).all()
+
+
+def test_df_cached_on_docs(small_corpus):
+    """df is computed once per corpus instance and shared by consumers;
+    corpus builders pre-seed the cache with the counts they already hold."""
+    from repro.sparse import df_counts
+
+    docs, df, perm, topics = small_corpus
+    assert docs.df is df                      # builder-seeded cache
+    assert docs.df is docs.df                 # cached_property: same object
+    np.testing.assert_array_equal(np.asarray(docs.df),
+                                  np.asarray(df_counts(docs)))

@@ -4,7 +4,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import sparse_sim, esicp_gather, esicp_filter, segment_update, ref
+from repro.kernels import (sparse_sim, esicp_gather, esicp_filter,
+                           segment_update, rho_gather, ref)
 
 
 def _case(rng, b, p, d, k, dtype=np.float32):
@@ -74,6 +75,19 @@ def test_segment_update(rng, b, p, d, k):
     exp = ref.segment_update(assign, ids, vals, k, d)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_rho_gather(rng, b, p, d, k):
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    # Includes out-of-range assign == k (the padding-row convention): ρ = 0.
+    assign = jnp.asarray(rng.integers(0, k + 1, b).astype(np.int32))
+    out = rho_gather(assign, ids, vals, means_t,
+                     b_blk=64, k_blk=64, d_blk=128)
+    exp = ref.rho_gather(assign, ids, vals, means_t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(out)[np.asarray(assign) == k] == 0.0).all()
 
 
 def test_gather_matches_scan_core(rng):
