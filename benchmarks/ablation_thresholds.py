@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 from repro.core import StructuralParams
 from repro.core.estparams import estimate_params, EstGrid
 
@@ -18,11 +18,11 @@ def run():
     job, docs, df, perm, topics = corpus("pubmed")
 
     # ES: both estimated.  ThV: t_th = 0.  ThT: v_th = max (vacuous bound).
-    warm = make_kmeans(k=job.k, algo="mivi", max_iter=2, batch_size=4096,
+    warm = make_estimator(k=job.k, algo="mivi", max_iter=2, batch_size=4096,
                            seed=0).fit(docs, df=df)
-    est, _ = estimate_params(docs, df, warm.state.index.means_t,
-                             warm.state.rho_self, k=job.k)
-    vmax = float(warm.state.index.means_t.max())
+    est, _ = estimate_params(docs, df, warm.state_.index.means_t,
+                             warm.state_.rho_self, k=job.k)
+    vmax = float(warm.state_.index.means_t.max())
     variants = {
         "mivi": ("mivi", None),
         "es": ("es", est),
@@ -34,14 +34,14 @@ def run():
     stats = {}
     ref = None
     for name, (algo, params) in variants.items():
-        r = make_kmeans(k=job.k, algo=algo,
+        r = make_estimator(k=job.k, algo=algo,
                             params=params if params is not None else "auto",
                             max_iter=10, batch_size=4096, seed=0).fit(docs, df=df)
         if ref is None:
             ref = r
-        assert (r.assign == ref.assign).all(), f"{name} broke exactness"
-        stats[name] = (np.mean([h["mult"] for h in r.history]),
-                       r.history[-1]["cpr"],
+        assert (r.labels_ == ref.labels_).all(), f"{name} broke exactness"
+        stats[name] = (np.mean([h["mult"] for h in r.history_]),
+                       r.history_[-1]["cpr"],
                        int(params.t_th) if params is not None else 0)
     base = stats["mivi"][0]
     rows = []

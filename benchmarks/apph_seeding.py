@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 from repro.core import metrics
 
 
@@ -16,10 +16,10 @@ def run():
     for k in (10, 50, 150):
         assigns, objs = [], []
         for seed in range(4):
-            r = make_kmeans(k=k, algo="esicp", max_iter=15,
+            r = make_estimator(k=k, algo="esicp", max_iter=15,
                                 batch_size=3000, seed=seed).fit(sub, df=df)
-            assigns.append(r.assign)
-            objs.append(r.objective)
+            assigns.append(r.labels_)
+            objs.append(r.objective_)
         nmi_mean, nmi_std = metrics.pairwise_nmi(assigns)
         cv = metrics.coefficient_of_variation(objs)
         rows.append(csv_row(f"apph/k{k}", 0,

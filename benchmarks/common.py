@@ -16,12 +16,13 @@ from __future__ import annotations
 import functools
 import os
 import time
+import warnings
 
 import numpy as np
 
 from repro.configs.pubmed8m import reduced as pubmed_reduced
 from repro.configs.nyt1m import reduced as nyt_reduced
-from repro.core import SphericalKMeans
+from repro.cluster import SphericalKMeans
 from repro.data import make_corpus
 
 
@@ -30,10 +31,20 @@ def default_backend() -> str:
     return os.environ.get("REPRO_BACKEND", "reference")
 
 
-def make_kmeans(k: int, **kw) -> SphericalKMeans:
-    """SphericalKMeans with the harness-wide backend default threaded in."""
+def make_estimator(k: int, **kw) -> SphericalKMeans:
+    """repro.cluster.SphericalKMeans with the harness-wide backend default
+    threaded in (the estimator's fit returns itself; read history_/model_)."""
     kw.setdefault("backend", default_backend())
     return SphericalKMeans(k=k, **kw)
+
+
+def make_kmeans(k: int, **kw) -> SphericalKMeans:
+    """Deprecated pre-redesign name; use :func:`make_estimator`."""
+    warnings.warn(
+        "benchmarks.common.make_kmeans is deprecated; use make_estimator "
+        "(same semantics — fit() now returns the estimator, not a "
+        "LloydResult).", DeprecationWarning, stacklevel=2)
+    return make_estimator(k, **kw)
 
 
 @functools.lru_cache(maxsize=4)

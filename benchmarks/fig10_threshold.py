@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import default_backend, corpus, csv_row, make_kmeans
+from benchmarks.common import default_backend, corpus, csv_row, make_estimator
 from repro.core import StructuralParams
 from repro.core.assignment import assignment_step
 from repro.core.estparams import estimate_params
@@ -20,9 +20,9 @@ from repro.core.estparams import estimate_params
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
-    warm = make_kmeans(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
+    warm = make_estimator(k=job.k, algo="mivi", max_iter=3, batch_size=4096,
                            seed=0).fit(docs, df=df)
-    state = warm.state
+    state = warm.state_
     est, aux = estimate_params(docs, df, state.index.means_t, state.rho_self,
                                k=job.k)
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 from repro.core import metrics
 
 
@@ -16,9 +16,9 @@ def run():
     np.add.at(tf, np.asarray(docs.ids).ravel(), np.asarray(docs.vals).ravel() > 0)
 
     alpha_df = metrics.zipf_fit(np.asarray(df))
-    res = make_kmeans(k=job.k, algo="esicp", max_iter=6,
+    res = make_estimator(k=job.k, algo="esicp", max_iter=6,
                           batch_size=4096, seed=0).fit(docs, df=df)
-    means_t = res.state.index.means_t
+    means_t = res.state_.index.means_t
     mf = np.asarray(jnp.sum(means_t > 0, axis=1))
     alpha_mf = metrics.zipf_fit(mf)
     skew = metrics.mean_value_skew(means_t)

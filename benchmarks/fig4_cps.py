@@ -6,15 +6,15 @@ on the tf-idf skew.
 """
 from __future__ import annotations
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 from repro.core import metrics
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
-    res = make_kmeans(k=job.k, algo="esicp", max_iter=4,
+    res = make_estimator(k=job.k, algo="esicp", max_iter=4,
                           batch_size=4096, seed=0).fit(docs, df=df)
-    nr, cps, std = metrics.cps_curve(docs, res.state.index.means_t, res.assign)
+    nr, cps, std = metrics.cps_curve(docs, res.state_.index.means_t, res.labels_)
     i10 = int(0.1 * (len(nr) - 1))
     i25 = int(0.25 * (len(nr) - 1))
     return [

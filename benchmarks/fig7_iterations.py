@@ -8,17 +8,17 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 
 
 def run():
     job, docs, df, perm, topics = corpus("pubmed")
     rows = []
     for algo in ["mivi", "icp", "esicp"]:
-        r = make_kmeans(k=job.k, algo=algo, max_iter=12,
+        r = make_estimator(k=job.k, algo=algo, max_iter=12,
                             batch_size=4096, seed=0).fit(docs, df=df)
-        mult = [h["mult"] for h in r.history]
-        cpr = [h["cpr"] for h in r.history]
+        mult = [h["mult"] for h in r.history_]
+        cpr = [h["cpr"] for h in r.history_]
         early = float(np.mean(mult[1:4]))
         late = float(np.mean(mult[-3:]))
         rows.append(csv_row(

@@ -15,7 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import corpus, csv_row, default_backend, make_kmeans, time_call
+from benchmarks.common import corpus, csv_row, default_backend, make_estimator, time_call
 from repro.core.update import update_step
 from repro.sparse import SparseDocs
 
@@ -28,8 +28,8 @@ def run():
     rows = []
 
     # Mid-clustering state: real means, real moving flags, real thresholds.
-    km = make_kmeans(job.k, algo="esicp", max_iter=3, batch_size=4096, seed=0)
-    state = km.fit(docs, df=df).state
+    km = make_estimator(job.k, algo="esicp", max_iter=3, batch_size=4096, seed=0)
+    state = km.fit(docs, df=df).state_
 
     sub = SparseDocs(ids=docs.ids[:_N_SUB], vals=docs.vals[:_N_SUB],
                      nnz=docs.nnz[:_N_SUB], dim=docs.dim)
@@ -53,9 +53,9 @@ def run():
 
     # Fused fit: wall-time per Lloyd iteration with O(1) host syncs.
     backend = default_backend()
-    km = make_kmeans(job.k, algo="esicp", max_iter=8, batch_size=4096, seed=0)
+    km = make_estimator(job.k, algo="esicp", max_iter=8, batch_size=4096, seed=0)
     km.fit(docs, df=df)                                  # compile
     res, best = time_call(lambda: km.fit(docs, df=df), repeat=1)
     rows.append(csv_row("fused_iteration/fit_per_iter",
-                        best * 1e6 / max(res.n_iter, 1), backend))
+                        best * 1e6 / max(res.n_iter_, 1), backend))
     return rows

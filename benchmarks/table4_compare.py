@@ -11,7 +11,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import corpus, csv_row, make_kmeans
+from benchmarks.common import corpus, csv_row, make_estimator
 
 ALGOS = ["mivi", "icp", "cs-icp", "ta-icp", "esicp"]
 
@@ -32,23 +32,23 @@ def run(dataset: str = "pubmed"):
     job, docs, df, perm, topics = corpus(dataset)
     results = {}
     for algo in ALGOS:
-        r = make_kmeans(k=job.k, algo=algo, max_iter=job.max_iter,
+        r = make_estimator(k=job.k, algo=algo, max_iter=job.max_iter,
                             batch_size=4096, seed=0).fit(docs, df=df)
         results[algo] = r
     ref = results["mivi"]
     es = results["esicp"]
     for algo, r in results.items():
-        assert (r.assign == ref.assign).all(), f"{algo} broke exactness!"
+        assert (r.labels_ == ref.labels_).all(), f"{algo} broke exactness!"
 
     def stats(r):
-        mult = np.mean([h["mult"] for h in r.history])
-        t = np.mean([h["elapsed_s"] for h in r.history])
-        cpr = r.history[-1]["cpr"]
+        mult = np.mean([h["mult"] for h in r.history_])
+        t = np.mean([h["elapsed_s"] for h in r.history_])
+        cpr = r.history_[-1]["cpr"]
         mem = _mem_proxy_for(r)
         return mult, t, cpr, mem
 
     def _mem_proxy_for(r):
-        return _mem_proxy(r_algo[id(r)], docs.dim, job.k, int(r.params.t_th))
+        return _mem_proxy(r_algo[id(r)], docs.dim, job.k, int(r.params_.t_th))
 
     r_algo = {id(r): a for a, r in results.items()}
     es_stats = stats(es)
@@ -59,7 +59,7 @@ def run(dataset: str = "pubmed"):
             f"table4[{dataset}]/{algo}", t * 1e6,
             f"mult_ratio={m / es_stats[0]:.4g};time_ratio={t / es_stats[1]:.3g};"
             f"cpr={cpr:.4g};mem_ratio={mem / es_stats[3]:.3g};"
-            f"iters={results[algo].n_iter}"))
+            f"iters={results[algo].n_iter_}"))
     return rows
 
 

@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs.pubmed8m import reduced as pubmed_reduced
 from repro.configs.nyt1m import reduced as nyt_reduced
 from repro.data import make_corpus
-from repro.core import SphericalKMeans
+from repro.cluster import ClusterConfig, fit
 
 
 def main():
@@ -40,17 +40,16 @@ def main():
 
     results = {}
     for algo in args.algos.split(","):
-        km = SphericalKMeans(k=job.k, algo=algo, max_iter=job.max_iter,
-                             batch_size=4096, seed=0)
-        results[algo] = km.fit(docs, df=df)
-        r = results[algo]
+        cfg = ClusterConfig(k=job.k, algo=algo, max_iter=job.max_iter,
+                            batch_size=4096, seed=0)
+        results[algo] = r = fit(docs, cfg, df=df)
         mult = np.mean([h["mult"] for h in r.history])
         t = np.mean([h["elapsed_s"] for h in r.history])
         print(f"{algo:8s} iters={r.n_iter:3d} avg_mult={mult:.4g} "
               f"avg_time={t:.2f}s cpr_last={r.history[-1]['cpr']:.4g}")
 
     ref = next(iter(results.values()))
-    same = all((r.assign == ref.assign).all() for r in results.values())
+    same = all((r.labels == ref.labels).all() for r in results.values())
     print(f"\nacceleration contract (identical clusterings): {same}")
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs import smoke_config
 from repro.models import init_params
 from repro.sparse import from_dense, l2_normalize_rows, remap_terms_by_df, df_counts
-from repro.core import SphericalKMeans
+from repro.cluster import ClusterConfig, fit
 
 
 def main():
@@ -40,13 +40,13 @@ def main():
 
     results = {}
     for algo in ("mivi", "esicp"):
-        km = SphericalKMeans(k=64, algo=algo, max_iter=25, batch_size=1024)
-        r = km.fit(docs, df=df[perm])
+        cfg = ClusterConfig(k=64, algo=algo, max_iter=25, batch_size=1024)
+        r = fit(docs, cfg, df=df[perm])
         results[algo] = r
         mult = np.mean([h["mult"] for h in r.history])
         print(f"{algo:6s}: iters={r.n_iter} avg_mult={mult:.4g} "
               f"J={r.objective:.2f}")
-    same = bool((results["mivi"].assign == results["esicp"].assign).all())
+    same = bool((results["mivi"].labels == results["esicp"].labels).all())
     ratio = (np.mean([h["mult"] for h in results["esicp"].history])
              / np.mean([h["mult"] for h in results["mivi"].history]))
     print(f"identical clusterings: {same}; ES-ICP mult ratio: {ratio:.3f}")

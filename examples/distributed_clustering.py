@@ -1,41 +1,70 @@
 """Distributed ES-ICP on a (data × model) mesh with checkpoint/restart.
 
-Runs on host devices (set XLA_FLAGS for more), demonstrates the pod layout:
-objects sharded over 'data', the mean-inverted index over 'model', the
-(max, argmin-id) assignment all-reduce, and fault-tolerant resume.
+The unified API makes distribution a config field: the *same*
+``SphericalKMeans`` estimator, handed a ``mesh=``, routes the fit through
+the pod layout — objects sharded over 'data', the mean-inverted index over
+'model', the (max, argmin-id) assignment all-reduce — and still yields the
+one FittedModel artifact that serving consumes.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_clustering.py
+    PYTHONPATH=src python examples/distributed_clustering.py --smoke  # (CI)
 """
+import argparse
 import os
 import tempfile
 
-import numpy as np
 import jax
 
 from repro.data import make_corpus, CorpusSpec
-from repro.distributed import dist_fit
+from repro.cluster import ClusterEngine, SphericalKMeans
 from repro.launch.mesh import make_test_mesh
 from repro.checkpoint import latest_step
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus + whatever mesh the host devices "
+                         "allow, so CI can smoke-run this in seconds")
+    args = ap.parse_args()
+
     n_dev = len(jax.devices())
     dm = max(n_dev // 2, 1)
     mesh = make_test_mesh((n_dev // dm, dm), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    docs, df, perm, topics = make_corpus(
-        CorpusSpec(n_docs=4_096, vocab=2_048, nt_mean=50, n_topics=32, seed=1))
+    if args.smoke:
+        spec = CorpusSpec(n_docs=512, vocab=512, nt_mean=25, n_topics=8,
+                          seed=1)
+        k, chunk, max_iter = 8, 64, 12
+    else:
+        spec = CorpusSpec(n_docs=4_096, vocab=2_048, nt_mean=50, n_topics=32,
+                          seed=1)
+        k, chunk, max_iter = 32, 256, 25
+    docs, df, perm, topics = make_corpus(spec)
 
     ckdir = os.path.join(tempfile.mkdtemp(), "ckpt")
-    state, hist, conv = dist_fit(docs, k=32, mesh=mesh, algo="esicp",
-                                 max_iter=25, obj_chunk=256, seed=0, df=df,
-                                 checkpoint_dir=ckdir, checkpoint_every=5)
-    print(f"converged={conv} iters={len(hist)} "
+    km = SphericalKMeans(k=k, algo="esicp", max_iter=max_iter, mesh=mesh,
+                         chunk_size=chunk, seed=0, checkpoint_dir=ckdir,
+                         checkpoint_every=2 if args.smoke else 5)
+    km.fit(docs, df=df)
+    hist = km.history_
+    print(f"converged={km.converged_} iters={km.n_iter_} "
           f"objective={hist[-1]['objective']:.2f}")
     print(f"CPR trace: {[round(h['cpr'], 4) for h in hist[:8]]}…")
     print(f"checkpoints: latest step {latest_step(ckdir)} under {ckdir}")
+
+    # The mesh fit yields the same artifact as a single-host fit: save it,
+    # reload it, serve it.
+    mdir = os.path.join(tempfile.mkdtemp(), "model")
+    km.model_.save(mdir)
+    from repro.cluster import FittedModel
+    engine = ClusterEngine.from_model(FittedModel.load(mdir))
+    served, _ = engine.classify(docs)
+    assert (served == km.labels_).all(), "mesh-train/serve disagreement!"
+    print(f"mesh-trained artifact served single-host: parity on "
+          f"{docs.n_docs} docs ✓")
 
 
 if __name__ == "__main__":

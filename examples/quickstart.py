@@ -1,14 +1,21 @@
 """Quickstart: cluster a synthetic document corpus with ES-ICP.
 
+Uses the unified ``repro.cluster`` facade: one declarative ClusterConfig in,
+one serializable FittedModel out — the same artifact the serving engine and
+the mesh runtime consume.
+
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --smoke   # tiny corpus (CI)
 """
 import argparse
+import os
+import tempfile
 
 import numpy as np
 
 from repro.data import make_corpus, CorpusSpec
-from repro.core import SphericalKMeans, metrics
+from repro.cluster import ClusterConfig, ClusterEngine, FittedModel, fit
+from repro.core import metrics
 
 
 def main():
@@ -21,29 +28,37 @@ def main():
     if args.smoke:
         spec = CorpusSpec(n_docs=400, vocab=512, nt_mean=20, n_topics=8,
                           seed=0)
-        k, batch_size, max_iter = 8, 128, 12
+        cfg = ClusterConfig(k=8, algo="esicp", batch_size=128, max_iter=12)
     else:
         spec = CorpusSpec(n_docs=8_000, vocab=4_096, nt_mean=60, n_topics=64,
                           seed=0)
-        k, batch_size, max_iter = 64, 2048, 30
+        cfg = ClusterConfig(k=64, algo="esicp", batch_size=2048, max_iter=30)
 
     print("generating a UC-faithful corpus (Zipf df, tf-idf, unit sphere)…")
     docs, df, perm, topics = make_corpus(spec)
 
-    km = SphericalKMeans(k=k, algo="esicp", max_iter=max_iter,
-                         batch_size=batch_size)
-    res = km.fit(docs, df=df)
+    model = fit(docs, cfg, df=df)
 
-    print(f"converged={res.converged} after {res.n_iter} iterations")
-    print(f"objective J = {res.objective:.2f}")
-    print(f"structural parameters: t_th={int(res.params.t_th)} "
-          f"({int(res.params.t_th)/docs.dim:.2f}·D), "
-          f"v_th={float(res.params.v_th):.4f}")
-    h0, hl = res.history[1], res.history[-1]
+    print(f"converged={model.converged} after {model.n_iter} iterations")
+    print(f"objective J = {model.objective:.2f}")
+    print(f"structural parameters: t_th={int(model.params.t_th)} "
+          f"({int(model.params.t_th)/docs.dim:.2f}·D), "
+          f"v_th={float(model.params.v_th):.4f}")
+    h0, hl = model.history[1], model.history[-1]
     print(f"Mult/iteration: {h0['mult']:.3g} → {hl['mult']:.3g}; "
           f"CPR: {h0['cpr']:.4f} → {hl['cpr']:.4f}")
     print(f"NMI vs generating topics: "
-          f"{metrics.nmi(res.assign, np.asarray(topics)):.3f}")
+          f"{metrics.nmi(model.labels, np.asarray(topics)):.3f}")
+
+    # One artifact, three runtimes: save → load → serve.
+    path = os.path.join(tempfile.mkdtemp(), "model")
+    model.save(path)
+    reloaded = FittedModel.load(path)
+    engine = ClusterEngine.from_model(reloaded)
+    served, _ = engine.classify(docs)
+    assert (served == model.labels).all(), "serve/train disagreement!"
+    print(f"saved → loaded → served: {path} "
+          f"(classify parity on {docs.n_docs} docs ✓)")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@ from repro.checkpoint.store import (
     save_checkpoint,
     restore_checkpoint,
     latest_step,
+    load_extra,
     AsyncCheckpointer,
 )
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_extra", "AsyncCheckpointer"]

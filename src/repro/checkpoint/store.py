@@ -33,8 +33,20 @@ def _to_host(tree):
     return [np.asarray(x) for x in leaves], treedef
 
 
-def save_checkpoint(directory: str, tree, *, step: int, keep: int = 3) -> str:
-    """Atomically persist `tree` (any pytree of arrays/scalars) at `step`."""
+def save_checkpoint(directory: str, tree, *, step: int, keep: int | None = 3,
+                    extra: dict | None = None) -> str:
+    """Atomically persist `tree` (any pytree of arrays/scalars) at `step`.
+
+    ``keep=None`` disables retention pruning entirely — for artifact-style
+    writers (FittedModel.save) that must never garbage-collect unrelated
+    steps already in the directory.
+
+    ``extra`` is an optional JSON-serialisable sidecar (model metadata,
+    fit history, …) committed atomically with the payload — it rides the
+    same tmp-then-rename transaction, so a reader never sees a payload
+    without its metadata or vice versa.  Read it back with
+    :func:`load_extra`.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -53,15 +65,20 @@ def save_checkpoint(directory: str, tree, *, step: int, keep: int = 3) -> str:
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
         "format": 1,
     }
+    if extra is not None:
+        with open(os.path.join(tmp, "extra.json"), "w") as f:
+            json.dump(extra, f)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # commit point
 
-    steps = sorted(all_steps(directory))
-    for old in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{old:08d}"), ignore_errors=True)
+    if keep is not None:
+        steps = sorted(all_steps(directory))
+        for old in steps[:-keep]:
+            shutil.rmtree(os.path.join(directory, f"step_{old:08d}"),
+                          ignore_errors=True)
     return final
 
 
@@ -79,6 +96,25 @@ def all_steps(directory: str) -> list[int]:
 def latest_step(directory: str) -> int | None:
     steps = all_steps(directory)
     return steps[-1] if steps else None
+
+
+def load_extra(directory: str, *, step: int | None = None) -> dict | None:
+    """The JSON sidecar committed with `step` (None -> latest), or None if
+    the checkpoint exists but was written without one.  A missing step —
+    like the step=None path with an empty directory — raises
+    FileNotFoundError rather than masquerading as a sidecar-less save."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.isdir(step_dir):
+        raise FileNotFoundError(f"no checkpoint step {step} under {directory}")
+    path = os.path.join(step_dir, "extra.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(directory: str, example_tree, *, step: int | None = None):

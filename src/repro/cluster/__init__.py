@@ -1,0 +1,55 @@
+"""``repro.cluster`` — the one public front door to spherical k-means.
+
+Two nouns and one verb:
+
+  * :class:`ClusterConfig` — declarative *what/where*: k, algo, backend,
+    thresholds, batch/chunk sizes, seed, optional ``mesh=`` target;
+  * :class:`FittedModel` — serializable *result*: mean-inverted index +
+    structural params + labels + history + provenance, with ``save``/
+    ``load`` on the fault-tolerant checkpoint store;
+  * :func:`fit` (or the sklearn-style :class:`SphericalKMeans` estimator) —
+    turns (docs, config) into a FittedModel through a pluggable execution
+    strategy.
+
+One artifact drives all three runtimes::
+
+    model = repro.cluster.fit(docs, ClusterConfig(k=64))      # train
+    model.save("gs://…/model")                                 #   ↓
+    engine = ClusterEngine.from_model(FittedModel.load(...))  # serve
+    engine.refit(fresh_docs); model2 = engine.to_model()      # refit
+
+and ``ClusterConfig(mesh=...)`` runs the *same* estimator through the
+distributed loop.  DESIGN.md §9 documents the surface and the deprecation
+policy; tests/test_api_surface.py snapshots it so future PRs change it
+deliberately, never accidentally.
+"""
+from __future__ import annotations
+
+from repro.cluster.config import ClusterConfig
+from repro.cluster.classify import classify_docs, transform_docs
+from repro.cluster.model import FittedModel, load_model
+from repro.cluster.estimator import SphericalKMeans
+from repro.cluster.strategies import (STRATEGIES, MeshStrategy,
+                                      SingleHostStrategy, resolve_strategy)
+from repro.serve.engine import ClusterEngine
+
+
+def fit(docs, config: ClusterConfig, *, df=None) -> FittedModel:
+    """One-call front door: (docs, ClusterConfig) -> FittedModel."""
+    return SphericalKMeans.from_config(config).fit(docs, df=df).model_
+
+
+__all__ = [
+    "ClusterConfig",
+    "ClusterEngine",
+    "FittedModel",
+    "MeshStrategy",
+    "STRATEGIES",
+    "SingleHostStrategy",
+    "SphericalKMeans",
+    "classify_docs",
+    "fit",
+    "load_model",
+    "resolve_strategy",
+    "transform_docs",
+]

@@ -1,0 +1,91 @@
+"""The fused classification path every runtime shares.
+
+``SphericalKMeans.predict``, ``FittedModel.predict``, and
+``serve.ClusterEngine.classify`` all route through :func:`classify_docs`:
+one jitted ``lax.map`` epoch over padded batches, exact similarities from
+the pluggable backend (core/backends.py), top-1 on device, one device→host
+sync per request.  A parity bug can therefore only exist in one place.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("backend", "bs", "dim"))
+def _classify_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
+    """Fused classification epoch: lax.map over reshaped batches, exact
+    similarities from the chosen backend, top-1 on device."""
+    from repro.sparse import SparseDocs
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    n = ids.shape[0]
+    nb = n // bs
+    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
+
+    def batch_fn(args):
+        bids, bvals, bnnz = args
+        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=dim)
+        out = bk.accumulate(bdocs, index, jnp.zeros((bs,), bool), mode="exact",
+                            diag=False)   # serving never reads Mult
+        sims = out["sims"]
+        best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+        return best, jnp.take_along_axis(sims, best[:, None], axis=1)[:, 0]
+
+    a, s = jax.lax.map(batch_fn, (resh(ids), resh(vals), resh(nnz)))
+    return a.reshape(n), s.reshape(n)
+
+
+@partial(jax.jit, static_argnames=("backend", "bs", "dim"))
+def _transform_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
+    """Fused similarity epoch: the full (N, K) cosine matrix vs the index."""
+    from repro.sparse import SparseDocs
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    n = ids.shape[0]
+    nb = n // bs
+    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
+
+    def batch_fn(args):
+        bids, bvals, bnnz = args
+        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=dim)
+        return bk.accumulate(bdocs, index, jnp.zeros((bs,), bool),
+                             mode="exact", diag=False)["sims"]
+
+    s = jax.lax.map(batch_fn, (resh(ids), resh(vals), resh(nnz)))
+    return s.reshape(n, -1)
+
+
+def classify_docs(index, docs, *, backend: str = "auto",
+                  batch_size: int = 4096):
+    """docs vs a frozen MeanIndex -> (assign (N,) int32, sims (N,) float32)."""
+    from repro.sparse import pad_rows
+
+    n = docs.n_docs
+    if n == 0:
+        return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+    bs = min(batch_size, n)
+    pdocs = pad_rows(docs, bs)
+    a, s = _classify_fused(backend, pdocs.ids, pdocs.vals, pdocs.nnz,
+                           pdocs.dim, index, bs)
+    return np.asarray(a)[:n], np.asarray(s)[:n]
+
+
+def transform_docs(index, docs, *, backend: str = "auto",
+                   batch_size: int = 4096):
+    """docs vs a frozen MeanIndex -> dense (N, K) cosine similarities."""
+    from repro.sparse import pad_rows
+
+    n = docs.n_docs
+    if n == 0:
+        return np.zeros((0, index.k), np.float32)
+    bs = min(batch_size, n)
+    pdocs = pad_rows(docs, bs)
+    s = _transform_fused(backend, pdocs.ids, pdocs.vals, pdocs.nnz,
+                         pdocs.dim, index, bs)
+    return np.asarray(s)[:n]

@@ -1,0 +1,98 @@
+"""Declarative clustering configuration — the single front door's one noun.
+
+A :class:`ClusterConfig` says *what* to fit (k, algorithm, thresholds) and
+*where* to run it (backend, batch/chunk sizes, optional ``mesh=`` execution
+target); it never holds fitted state.  The estimator, the module-level
+:func:`repro.cluster.fit`, and the execution strategies all consume the same
+config, so single-host, mesh-distributed, and serving runtimes cannot drift
+apart kwarg by kwarg (the divergence this PR deletes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.estparams import EstGrid
+from repro.core.meanindex import StructuralParams
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Everything a spherical k-means fit needs, declared up front.
+
+    k:          number of clusters.
+    algo:       'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'.
+    backend:    'reference' | 'pallas' | 'auto' — accumulator engine for
+                assignment AND update (core/backends.py).
+    params:     'auto' (EstParams at ``est_iters``, the paper's default),
+                a StructuralParams for fixed thresholds, or None (trivial).
+    batch_size: single-host fused-epoch batch (rows per ``lax.map`` step).
+    chunk_size: mesh runtime per-shard object chunk (the software-pipelining
+                knob; ``obj_chunk`` in distributed/kmeans.py).
+    est_grid:   EstParams candidate grid (None -> EstGrid()).
+    est_iters:  iterations that re-estimate (t_th, v_th).
+    seed:       centroid-seeding PRNG seed.
+    mesh:       optional jax Mesh — set it and the *same* estimator runs
+                through the distributed loop (the 'mesh' strategy).
+    checkpoint_dir/checkpoint_every: optional fault-tolerant checkpointing
+                for long mesh fits (checkpoint/store.py).
+    """
+
+    k: int
+    algo: str = "esicp"
+    backend: str = "reference"
+    params: Any = "auto"
+    batch_size: int = 4096
+    chunk_size: int = 1024
+    max_iter: int = 60
+    est_grid: EstGrid | None = None
+    est_iters: tuple = (1, 2)
+    seed: int = 0
+    mesh: Any = None
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 5
+
+    def __post_init__(self):
+        object.__setattr__(self, "est_iters", tuple(self.est_iters))
+
+    @property
+    def strategy(self) -> str:
+        """Execution-strategy name this config resolves to."""
+        return "mesh" if self.mesh is not None else "single_host"
+
+    def replace(self, **changes) -> ClusterConfig:
+        return dataclasses.replace(self, **changes)
+
+    def validate(self) -> ClusterConfig:
+        """Fail fast on a config no strategy could run.  Returns self."""
+        from repro.core.assignment import ALGORITHMS
+        from repro.core.backends import resolve_backend
+
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.algo not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algo!r}; one of {sorted(ALGORITHMS)}")
+        resolve_backend(self.backend)          # raises on unknown backends
+        if not (self.params == "auto" or self.params is None
+                or isinstance(self.params, StructuralParams)):
+            raise ValueError(
+                "params must be 'auto', None, or a StructuralParams; "
+                f"got {self.params!r}")
+        if self.batch_size < 1 or self.chunk_size < 1 or self.max_iter < 1:
+            raise ValueError("batch_size, chunk_size, max_iter must be >= 1")
+        if self.mesh is not None:
+            # The shard-local step implements the shared-bound algorithms
+            # only (distributed/kmeans.py); fail here, not deep inside
+            # shard_map tracing.
+            mesh_algos = ("esicp", "mivi", "icp")
+            if self.algo not in mesh_algos:
+                raise ValueError(
+                    f"algo {self.algo!r} is not available on the mesh "
+                    f"strategy; one of {mesh_algos}")
+            n_model = dict(self.mesh.shape).get("model", 1)
+            if self.k % n_model:
+                raise ValueError(
+                    f"K={self.k} must divide over the mesh's model axis "
+                    f"({n_model})")
+        return self

@@ -1,0 +1,156 @@
+"""The fitted-model artifact — one serializable noun for all three runtimes.
+
+A :class:`FittedModel` is what a fit *produces* and what serving *consumes*:
+the structured mean-inverted index (the SIVF stance: the index is a
+first-class, reusable structure), the training labels and refreshed ρ_self,
+the per-iteration diagnostic history, and enough metadata (algo, backend,
+strategy) to reconstruct any runtime around it.  ``save``/``load`` ride the
+fault-tolerant checkpoint store (checkpoint/store.py): the payload commits
+atomically with a JSON metadata sidecar, so a crashed writer never leaves a
+readable-but-half model on disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (load_extra, restore_checkpoint,
+                                    save_checkpoint)
+from repro.cluster.classify import classify_docs, transform_docs
+from repro.core.meanindex import (MeanIndex, StructuralParams,
+                                  build_mean_index)
+
+MODEL_FORMAT = "repro.cluster/fitted-model-v1"
+
+
+@dataclasses.dataclass
+class FittedModel:
+    """Fit output = index + labels + history + provenance.
+
+    index:    MeanIndex — means, structural thresholds (t_th, v_th), ICP
+              moving flags; everything assignment needs.
+    labels:   (N,) int32 — final training assignment (empty for artifacts
+              exported from a pure serving engine).
+    rho_self: (N,) float32 — each doc's similarity to its own centroid, the
+              next assignment step's pruning threshold ρ_max.
+    history:  per-iteration diagnostics (mult, cpr, n_changed, objective, …).
+    algo/backend/strategy: provenance — which algorithm, accumulator engine,
+              and execution runtime produced the artifact.
+    """
+
+    index: MeanIndex
+    labels: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+    rho_self: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.float32))
+    history: list = dataclasses.field(default_factory=list)
+    converged: bool = True
+    n_iter: int = 0
+    algo: str = "esicp"
+    backend: str = "auto"
+    strategy: str = "single_host"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def k(self) -> int:
+        return self.index.k
+
+    @property
+    def dim(self) -> int:
+        return self.index.dim
+
+    @property
+    def params(self) -> StructuralParams:
+        return self.index.params
+
+    @property
+    def objective(self) -> float:
+        """J = Σ_i ρ_self(i) (Eq. 47) over the training corpus."""
+        return float(np.sum(self.rho_self))
+
+    # -- inference (the shared fused classify path) ------------------------
+    def predict(self, docs, *, batch_size: int = 4096) -> np.ndarray:
+        """(N,) int32 cluster ids — identical to
+        ``ClusterEngine.from_model(self).classify(docs)[0]`` by construction
+        (same path: cluster/classify.py)."""
+        a, _ = classify_docs(self.index, docs, backend=self.backend,
+                             batch_size=batch_size)
+        return a
+
+    def transform(self, docs, *, batch_size: int = 4096) -> np.ndarray:
+        """(N, K) dense cosine similarities to every mean."""
+        return transform_docs(self.index, docs, backend=self.backend,
+                              batch_size=batch_size)
+
+    def score(self, docs, *, batch_size: int = 4096) -> float:
+        """Σ_i max_j cos(x_i, μ_j) — the spherical k-means objective of the
+        best assignment (higher is better)."""
+        _, sims = classify_docs(self.index, docs, backend=self.backend,
+                                batch_size=batch_size)
+        return float(np.sum(sims))
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Atomically persist the artifact; returns the committed path."""
+        tree = {
+            "labels": np.asarray(self.labels, np.int32),
+            "means_t": np.asarray(self.index.means_t, np.float32),
+            "moving": np.asarray(self.index.moving, bool),
+            "rho_self": np.asarray(self.rho_self, np.float32),
+            "t_th": np.asarray(self.index.params.t_th, np.int32),
+            "v_th": np.asarray(self.index.params.v_th, np.float32),
+        }
+        extra = {
+            "format": MODEL_FORMAT,
+            "algo": self.algo,
+            "backend": self.backend,
+            "strategy": self.strategy,
+            "k": int(self.k),
+            "dim": int(self.dim),
+            "n_docs": int(np.shape(self.labels)[0]),
+            "converged": bool(self.converged),
+            "n_iter": int(self.n_iter),
+            "history": self.history,
+        }
+        # keep=None: an artifact writer must never garbage-collect other
+        # steps sharing the directory (e.g. a fit's training checkpoints).
+        return save_checkpoint(directory, tree, step=step, keep=None,
+                               extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, *, step: int | None = None) -> FittedModel:
+        extra = load_extra(directory, step=step)
+        if not extra or extra.get("format") != MODEL_FORMAT:
+            raise ValueError(
+                f"{directory} holds no {MODEL_FORMAT} artifact "
+                f"(found {extra.get('format') if extra else None!r})")
+        n, d, k = extra["n_docs"], extra["dim"], extra["k"]
+        example = {
+            "labels": np.zeros((n,), np.int32),
+            "means_t": np.zeros((d, k), np.float32),
+            "moving": np.zeros((k,), bool),
+            "rho_self": np.zeros((n,), np.float32),
+            "t_th": np.asarray(0, np.int32),
+            "v_th": np.asarray(0.0, np.float32),
+        }
+        tree, _ = restore_checkpoint(directory, example, step=step)
+        params = StructuralParams(t_th=jnp.asarray(tree["t_th"], jnp.int32),
+                                  v_th=jnp.asarray(tree["v_th"], jnp.float32))
+        index = build_mean_index(jnp.asarray(tree["means_t"]).T, params,
+                                 moving=jnp.asarray(tree["moving"]))
+        return cls(index=index,
+                   labels=np.asarray(tree["labels"], np.int32),
+                   rho_self=np.asarray(tree["rho_self"], np.float32),
+                   history=list(extra["history"]),
+                   converged=extra["converged"],
+                   n_iter=extra["n_iter"],
+                   algo=extra["algo"],
+                   backend=extra["backend"],
+                   strategy=extra["strategy"])
+
+
+def load_model(directory: str, *, step: int | None = None) -> FittedModel:
+    """Module-level alias for :meth:`FittedModel.load`."""
+    return FittedModel.load(directory, step=step)

@@ -1,0 +1,103 @@
+"""Pluggable execution strategies: one estimator, several runtimes.
+
+A strategy turns (docs, ClusterConfig) into a :class:`LloydResult`; the
+estimator wraps that into the :class:`FittedModel` artifact.  Both built-in
+strategies run the *same* algorithm and the *same* backend accumulators
+(core/backends.py) — they differ only in where the arrays live:
+
+``single_host``
+    The fused on-device Lloyd fit (core/lloyd.py): one jitted while_loop,
+    O(1) host syncs per fit.
+
+``mesh``
+    The pod-mesh loop (distributed/kmeans.py): objects sharded over the
+    object axes, the mean-inverted index over 'model', shard-local
+    accumulators from the shared backend protocol, one (max, argmin-id)
+    all-reduce per assignment.  Selected by ``ClusterConfig(mesh=...)``.
+
+The registry is open: registering a new runtime (e.g. multi-pod pipelined,
+async parameter-server) is one class with a ``fit`` method — no new front
+door.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+from repro.cluster.config import ClusterConfig
+from repro.core.lloyd import LloydResult, lloyd_fit
+from repro.core.meanindex import build_mean_index
+from repro.core.update import KMeansState
+
+
+class Strategy(Protocol):
+    name: str
+
+    def fit(self, docs, config: ClusterConfig, df=None) -> LloydResult: ...
+
+
+class SingleHostStrategy:
+    """The fused single-host Lloyd fit (DESIGN.md §8)."""
+
+    name = "single_host"
+
+    def fit(self, docs, config: ClusterConfig, df=None) -> LloydResult:
+        return lloyd_fit(
+            docs, k=config.k, algo=config.algo, backend=config.backend,
+            params=config.params, batch_size=config.batch_size,
+            max_iter=config.max_iter, est_grid=config.est_grid,
+            est_iters=config.est_iters, seed=config.seed, df=df)
+
+
+class MeshStrategy:
+    """The distributed loop behind the same estimator (DESIGN.md §4).
+
+    The mesh state (sharded arrays, padded tails) stays an implementation
+    detail: the strategy trims padding and repackages the final shard state
+    as an ordinary :class:`KMeansState`, so everything downstream — the
+    FittedModel artifact, predict/classify, save/load — is runtime-blind.
+    """
+
+    name = "mesh"
+
+    def fit(self, docs, config: ClusterConfig, df=None) -> LloydResult:
+        from repro.distributed.kmeans import mesh_fit
+
+        if config.mesh is None:
+            raise ValueError("MeshStrategy needs ClusterConfig(mesh=...)")
+        state, history, converged, params = mesh_fit(
+            docs, config.k, config.mesh, algo=config.algo,
+            backend=config.backend, max_iter=config.max_iter,
+            obj_chunk=config.chunk_size, seed=config.seed,
+            est_iters=config.est_iters, df=df,
+            checkpoint_dir=config.checkpoint_dir,
+            checkpoint_every=config.checkpoint_every)
+        n = docs.n_docs
+        index = build_mean_index(state.means_t.T, params, moving=state.moving)
+        core_state = KMeansState(
+            index=index,
+            assign=state.assign[:n],
+            rho_self=state.rho_self[:n],
+            rho_self_prev=state.rho_prev[:n],
+            iteration=state.iteration,
+        )
+        return LloydResult(
+            state=core_state,
+            assign=np.asarray(core_state.assign),
+            history=history,
+            params=params,
+            converged=converged,
+            n_iter=len(history),
+        )
+
+
+STRATEGIES: dict[str, Strategy] = {
+    "single_host": SingleHostStrategy(),
+    "mesh": MeshStrategy(),
+}
+
+
+def resolve_strategy(config: ClusterConfig) -> Strategy:
+    """ClusterConfig -> the strategy its ``mesh`` field selects."""
+    return STRATEGIES[config.strategy]

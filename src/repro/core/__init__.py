@@ -14,8 +14,18 @@ from repro.core.assignment import assignment_step, ALGORITHMS
 from repro.core.backends import BACKENDS, Backend, resolve_backend
 from repro.core.update import update_step, init_state, KMeansState
 from repro.core.estparams import estimate_params, EstGrid
-from repro.core.lloyd import SphericalKMeans, LloydResult
+from repro.core.lloyd import LloydResult, lloyd_fit
 from repro.core import metrics
+
+
+def __getattr__(name):
+    # Lazy re-export: the estimator lives in the repro.cluster facade (PR 3's
+    # API redesign), whose submodules import repro.core right back — resolving
+    # it at attribute-access time keeps the package initialisations acyclic.
+    if name == "SphericalKMeans":
+        from repro.cluster.estimator import SphericalKMeans
+        return SphericalKMeans
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "MeanIndex", "StructuralParams", "build_mean_index",
@@ -23,5 +33,5 @@ __all__ = [
     "BACKENDS", "Backend", "resolve_backend",
     "update_step", "init_state", "KMeansState",
     "estimate_params", "EstGrid",
-    "SphericalKMeans", "LloydResult", "metrics",
+    "SphericalKMeans", "LloydResult", "lloyd_fit", "metrics",
 ]

@@ -84,7 +84,8 @@ class Backend(Protocol):
 
     def accumulate(self, docs: SparseDocs, index: MeanIndex, xstate: jax.Array,
                    *, mode: str, v_ta: jax.Array | None = None,
-                   diag: bool = True) -> dict: ...
+                   diag: bool = True, unroll: bool | int = False,
+                   p_block: int = 1) -> dict: ...
 
     def es_filter(self, rho12: jax.Array, y: jax.Array, rho_self: jax.Array,
                   col_ok: jax.Array, v_th: jax.Array): ...
@@ -101,8 +102,20 @@ class Backend(Protocol):
 # Reference backend: the TAAT lax.scan (moved verbatim from assignment.py).
 # ---------------------------------------------------------------------------
 
+def _pad_p(ids, vals, pb: int):
+    """Pad the tuple-width axis to a ``pb`` multiple with dead (id 0, val 0)
+    slots — dead slots are ``live == False`` everywhere downstream."""
+    p = ids.shape[1]
+    rem = (-p) % pb
+    if rem:
+        ids = jnp.pad(ids, ((0, 0), (0, rem)))
+        vals = jnp.pad(vals, ((0, 0), (0, rem)))
+    return ids, vals
+
+
 def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
-                   v_ta: jax.Array | None = None):
+                   v_ta: jax.Array | None = None, diag: bool = True,
+                   unroll: bool | int = False, p_block: int = 1):
     """One fused TAAT pass — the paper's MIVI loop order (Alg. 1 lines 1–5).
 
     On TPU each scan step is one (B,)-gather of a posting row ξ_s block plus
@@ -112,6 +125,15 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
     ``sims`` is always the full exact similarity (reference semantics); the
     CPU algorithm would only compute it for survivors — that cost is what the
     verify-mult term in the caller accounts for.
+
+    Perf knobs (§Perf; the distributed step and the dry-run coster thread
+    them through):
+      diag=False  — skip the Mult count (``mult`` is returned as 0);
+      p_block>1   — gather ``p_block`` posting rows per scan step and fold
+                    them before touching the (B, K) accumulators: accumulator
+                    read/write traffic drops ~p_block× at unchanged gather
+                    traffic;
+      unroll      — unroll the scan (dry-run exact-FLOPs costing).
     """
     b, p = docs.ids.shape
     k = index.k
@@ -120,38 +142,50 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
     means_t = index.means_t
     col_ok = col_ok_mask(index, xstate)      # (B, K) — ICP lane mask
     f32 = jnp.float32
+    pb = max(int(p_block), 1)
 
     def body(carry, xs):
-        idp, vp = xs                          # (B,), (B,)
-        rows = means_t[idp]                   # (B, K) posting block
-        live = vp != 0.0
-        nz = (rows > 0) & col_ok & live[:, None]
-        contrib = vp[:, None] * rows
-        sims = carry["sims"] + contrib
-        out = {"sims": sims}
+        idp, vp = xs                          # (pb, B), (pb, B)
+        rows = means_t[idp]                   # (pb, B, K) posting block
+        contrib = vp[..., None] * rows
+        sims = carry["sims"] + jnp.sum(contrib, 0)
+        out = {"sims": sims, "mult": carry["mult"]}
+        if diag:
+            live = vp != 0.0
+            nz = (rows > 0) & col_ok[None] & live[..., None]
         if mode == "exact":
-            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
+            if diag:
+                out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
         elif mode == "esicp":
-            tail = (idp >= t_th)[:, None]     # (B, 1)
+            tail = (idp >= t_th)[..., None]   # (pb, B, 1)
             hi = rows >= v_th
             exact_mask = jnp.where(tail, hi, True)
-            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
-            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
-            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
+            out["rho12"] = carry["rho12"] + jnp.sum(
+                jnp.where(exact_mask, contrib, 0.0), 0)
+            out["y"] = carry["y"] + jnp.sum(
+                jnp.where(tail & ~hi, vp[..., None], 0.0), 0)
+            if diag:
+                out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
         elif mode == "ta":
-            tail = (idp >= t_th)[:, None]
-            hi = rows >= v_ta[:, None]        # per-object threshold (Eq. 16)
+            tail = (idp >= t_th)[..., None]
+            hi = rows >= v_ta[None, :, None]  # per-object threshold (Eq. 16)
             exact_mask = jnp.where(tail, hi, True)
-            out["rho12"] = carry["rho12"] + jnp.where(exact_mask, contrib, 0.0)
-            out["y"] = carry["y"] + jnp.where(tail & ~hi, vp[:, None], 0.0)
+            out["rho12"] = carry["rho12"] + jnp.sum(
+                jnp.where(exact_mask, contrib, 0.0), 0)
+            out["y"] = carry["y"] + jnp.sum(
+                jnp.where(tail & ~hi, vp[..., None], 0.0), 0)
             # TA walks each sorted posting until v < v_ta: visits hi entries
             # plus one terminator comparison; mults are the hi entries.
-            out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
+            if diag:
+                out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
         elif mode == "cs":
-            tail = (idp >= t_th)[:, None]
-            out["rho1"] = carry["rho1"] + jnp.where(tail, 0.0, contrib)
-            out["sq"] = carry["sq"] + jnp.where(tail, rows * rows, 0.0)
-            out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
+            tail = (idp >= t_th)[..., None]
+            out["rho1"] = carry["rho1"] + jnp.sum(
+                jnp.where(tail, 0.0, contrib), 0)
+            out["sq"] = carry["sq"] + jnp.sum(
+                jnp.where(tail, rows * rows, 0.0), 0)
+            if diag:
+                out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
         else:
             raise ValueError(mode)
         return out, None
@@ -163,8 +197,75 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
     elif mode == "cs":
         carry["rho1"] = jnp.zeros((b, k), f32)
         carry["sq"] = jnp.zeros((b, k), f32)
-    out, _ = jax.lax.scan(body, carry, (docs.ids.T, docs.vals.T))
+    ids, vals = (docs.ids, docs.vals) if pb == 1 else _pad_p(docs.ids,
+                                                             docs.vals, pb)
+    pp = ids.shape[1]
+    xs = (ids.T.reshape(pp // pb, pb, b), vals.T.reshape(pp // pb, pb, b))
+    out, _ = jax.lax.scan(body, carry, xs, unroll=unroll)
     return out
+
+
+def gather_verify_scan(ids, vals, nnz, means_t, t_th, v_th, rho_max, col_ok,
+                       *, unroll: bool | int = False, p_block: int = 1,
+                       p_tail: int = 16):
+    """Paper-faithful two-phase ES assignment (§Perf variant, Algs. 2–3) —
+    the reference backend's gather/verify scan, shared with the distributed
+    shard-local step.
+
+    Phase G: one TAAT pass accumulating only (rho12, y) — the full exact
+    similarity is NOT computed for every centroid (that is MIVI's cost).
+    Phase V: the exact Region-3 partial from a second pass over a compacted
+    live-suffix window.  ids ascend by df-rank within a row, so the >= t_th
+    entries are the last (ntH)_i LIVE positions; the caller guarantees
+    max_i (ntH)_i <= p_tail (computed after EstParams fixes t_th — the same
+    moment the paper restructures its index).  Exactness is preserved:
+    windows that reach below position 0 are validity-masked.
+
+    Returns (exact_masked, survivors).
+    """
+    c, p = ids.shape
+    k_loc = means_t.shape[1]
+    pb = max(int(p_block), 1)
+    z = jnp.zeros((c, k_loc), jnp.float32)
+
+    def g_body(carry, xs):
+        rho12, y = carry
+        idp, vp = xs
+        rows = means_t[idp]
+        contrib = vp[..., None] * rows
+        tail = (idp >= t_th)[..., None]
+        hi = rows >= v_th
+        exact = jnp.where(tail, hi, True)
+        return (rho12 + jnp.sum(jnp.where(exact, contrib, 0.0), 0),
+                y + jnp.sum(jnp.where(tail & ~hi, vp[..., None], 0.0), 0)), None
+
+    gi, gv = _pad_p(ids, vals, pb)
+    pp = gi.shape[1]
+    xs = (gi.T.reshape(pp // pb, pb, c), gv.T.reshape(pp // pb, pb, c))
+    (rho12, y), _ = jax.lax.scan(g_body, (z, z), xs, unroll=unroll)
+    surv = ((rho12 + y * v_th) > rho_max[:, None]) & col_ok
+
+    # compacted live-suffix window [nnz - p_tail, nnz)
+    off = nnz[:, None] - p_tail + jnp.arange(p_tail)[None, :]
+    okw = off >= 0
+    idx = jnp.clip(off, 0, p - 1)
+    tids = jnp.take_along_axis(ids, idx, axis=1)
+    tvals = jnp.where(okw, jnp.take_along_axis(vals, idx, axis=1), 0.0)
+
+    def v_body(rho3, xs):
+        idp, vp = xs
+        rows = means_t[idp]
+        tail = (idp >= t_th)[..., None]
+        lo = rows < v_th
+        add = jnp.where(tail & lo, vp[..., None] * rows, 0.0)
+        return rho3 + jnp.sum(add, 0), None
+
+    ti, tv = _pad_p(tids, tvals, pb)
+    pt = ti.shape[1]
+    xsv = (ti.T.reshape(pt // pb, pb, c), tv.T.reshape(pt // pb, pb, c))
+    rho3, _ = jax.lax.scan(v_body, z, xsv, unroll=unroll)
+    exact = jnp.where(surv, rho12 + rho3, -jnp.inf)
+    return exact, surv
 
 
 class ReferenceBackend:
@@ -172,10 +273,10 @@ class ReferenceBackend:
 
     name = "reference"
 
-    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True):
-        # The scan's mult counter rides the same pass for free; diag=False
-        # callers simply ignore it.
-        return reference_scan(docs, index, xstate, mode=mode, v_ta=v_ta)
+    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
+                   unroll=False, p_block=1):
+        return reference_scan(docs, index, xstate, mode=mode, v_ta=v_ta,
+                              diag=diag, unroll=unroll, p_block=p_block)
 
     def es_filter(self, rho12, y, rho_self, col_ok, v_th):
         # Upper bound (Eq. 4): rho12 + y·v_th.  The paper's App.-A scaling
@@ -223,7 +324,10 @@ class PallasBackend:
         # an explicit 0.0 stored inside the live region must not be counted.
         return (docs.vals != 0.0).astype(jnp.float32)
 
-    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True):
+    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
+                   unroll=False, p_block=1):
+        # unroll / p_block are reference-scan tiling knobs; the kernels tile
+        # via their own block specs, so both are accepted and ignored here.
         from repro.kernels import ops
 
         if mode == "ta":

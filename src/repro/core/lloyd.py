@@ -162,8 +162,39 @@ class LloydResult:
         return float(jnp.sum(self.state.rho_self))
 
 
-class SphericalKMeans:
-    """sklearn-ish front-end over the core steps.
+def initial_params(spec, dim: int) -> StructuralParams:
+    """'auto' / None / StructuralParams -> the fit's starting thresholds.
+
+    'auto' and None start trivial: t_th=0, v_th=1 puts everything in
+    Region 3 under a vacuous bound, i.e. iteration 1 behaves like the
+    unfiltered baseline — exactly the paper (EstParams runs at r=1,2).
+    """
+    if isinstance(spec, StructuralParams):
+        return spec
+    return StructuralParams.trivial(dim)
+
+
+def _history_row(r: int, n: int, k: int, mult, cand, changed, obj, nmov,
+                 t_th, v_th, elapsed: float) -> dict:
+    return {
+        "iteration": r,
+        "mult": float(mult),
+        "cpr": float(cand) / (n * k),
+        "n_changed": int(changed),
+        "objective": float(obj),
+        "n_moving": int(nmov),
+        "elapsed_s": elapsed,
+        "t_th": int(t_th),
+        "v_th": float(v_th),
+    }
+
+
+def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
+              backend: str = "reference", params="auto",
+              batch_size: int = 4096, max_iter: int = 60,
+              est_grid: EstGrid | None = None, est_iters=(1, 2),
+              seed: int = 0, df: jax.Array | None = None) -> LloydResult:
+    """Single-host Lloyd fit: the paper's pipeline as one function.
 
     algo: 'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
     backend: 'reference' | 'pallas' | 'auto' — accumulator engine for the
@@ -171,141 +202,119 @@ class SphericalKMeans:
             on TPU).
     params: 'auto' (EstParams at iterations 1–2, the paper's default),
             StructuralParams for fixed thresholds, or None -> trivial.
+
+    This is the ``single_host`` execution strategy behind the
+    :class:`repro.cluster.SphericalKMeans` estimator; call the estimator for
+    the artifact-producing front door, this for the raw :class:`LloydResult`.
     """
+    est_grid = est_grid or EstGrid()
+    est_iters = tuple(est_iters)
+    n = docs.n_docs
+    init_params = initial_params(params, docs.dim)
+    # Seeding picks centroids among the *real* documents, before padding.
+    state = init_state(docs, k, init_params, seed=seed)
+    if df is None:
+        df = docs.df            # cached on the corpus (sparse/matrix.py)
 
-    def __init__(self, k: int, *, algo: str = "esicp", params="auto",
-                 backend: str = "reference", batch_size: int = 4096,
-                 max_iter: int = 60, est_grid: EstGrid | None = None,
-                 est_iters=(1, 2), seed: int = 0):
-        self.k = k
-        self.algo = algo
-        self.backend = backend
-        self.params = params
-        self.batch_size = batch_size
-        self.max_iter = max_iter
-        self.est_grid = est_grid or EstGrid()
-        self.est_iters = tuple(est_iters)
-        self.seed = seed
-
-    def _initial_params(self, dim: int) -> StructuralParams:
-        if isinstance(self.params, StructuralParams):
-            return self.params
-        # 'auto' / None start trivial: t_th=0, v_th=1 puts everything in
-        # Region 3 under a vacuous bound, i.e. iteration 1 behaves like the
-        # unfiltered baseline — exactly the paper (EstParams runs at r=1,2).
-        return StructuralParams.trivial(dim)
-
-    def _history_row(self, r: int, n: int, mult, cand, changed, obj, nmov,
-                     t_th, v_th, elapsed: float) -> dict:
-        return {
-            "iteration": r,
-            "mult": float(mult),
-            "cpr": float(cand) / (n * self.k),
-            "n_changed": int(changed),
-            "objective": float(obj),
-            "n_moving": int(nmov),
-            "elapsed_s": elapsed,
-            "t_th": int(t_th),
-            "v_th": float(v_th),
-        }
-
-    def fit(self, docs: SparseDocs, df: jax.Array | None = None) -> LloydResult:
-        n = docs.n_docs
-        params = self._initial_params(docs.dim)
-        # Seeding picks centroids among the *real* documents, before padding.
-        state = init_state(docs, self.k, params, seed=self.seed)
-        if df is None:
-            df = docs.df            # cached on the corpus (sparse/matrix.py)
-
-        bs = min(self.batch_size, n)
-        pdocs = pad_rows(docs, bs)
-        n_pad = pdocs.n_docs
-        valid = jnp.arange(n_pad) < n
-        if n_pad != n:
-            pad = n_pad - n
-            # Dead rows carry ρ_self = 0 — exactly the value every update
-            # step recomputes for them (no live tuples ⇒ zero similarity) —
-            # and the objective reduction masks on `valid` regardless, so
-            # padding never leaks into the history.
-            state = dataclasses.replace(
-                state,
-                assign=jnp.pad(state.assign, (0, pad)),
-                rho_self=jnp.pad(state.rho_self, (0, pad)),
-                rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad)),
-            )
-
-        history = []
-        converged = False
-
-        # --- Prologue: the EstParams iterations, host-stepped -------------
-        # estimate_params needs host-side grid bookkeeping (dynamic-shape
-        # candidate grids), so iterations 1..max(est_iters) run outside the
-        # fused loop: still fully on device per step, with one diagnostic
-        # pull each — a constant ≤ max(est_iters) syncs.
-        prologue = 0
-        if self.params == "auto" and self.est_iters:
-            prologue = min(max(self.est_iters), self.max_iter)
-        for r in range(1, prologue + 1):
-            t0 = time.perf_counter()
-            state, (mult, cand_sum, n_changed, _) = _device_iteration(
-                self.algo, self.backend, pdocs, state, valid,
-                bs=bs, k=self.k)
-            if r in self.est_iters:
-                # EstParams sees only the real rows (padding would skew the
-                # Mult-estimate tables).
-                new_params, _ = estimate_params(docs, df, state.index.means_t,
-                                                state.rho_self[:n], k=self.k,
-                                                grid=self.est_grid)
-                state = dataclasses.replace(
-                    state, index=state.index.with_params(new_params))
-            diag = _host_pull(
-                (mult, cand_sum, n_changed,
-                 jnp.sum(jnp.where(valid, state.rho_self, 0.0)),
-                 state.index.n_moving, state.index.params.t_th,
-                 state.index.params.v_th))
-            history.append(self._history_row(
-                r, n, *diag, time.perf_counter() - t0))
-            if history[-1]["n_changed"] == 0:
-                converged = True
-                break
-
-        # --- Fused remainder: one jitted call, O(1) host syncs ------------
-        max_steps = self.max_iter - len(history)
-        if not converged and max_steps > 0:
-            last_changed = jnp.asarray(
-                history[-1]["n_changed"] if history else 1, jnp.int32)
-            t0 = time.perf_counter()
-            state, n_steps, ring = _run_fused(
-                self.algo, self.backend, bs, self.k, max_steps,
-                state, pdocs, valid, last_changed)
-            # The one device→host sync of the fused remainder: the executed
-            # step count and every diagnostic ring cross in a single pull.
-            steps, ring_h = _host_pull((n_steps, ring))
-            steps = int(steps)
-            per_iter = (time.perf_counter() - t0) / max(steps, 1)
-            for i in range(steps):
-                history.append(self._history_row(
-                    len(history) + 1, n, ring_h["mult"][i], ring_h["cand"][i],
-                    ring_h["changed"][i], ring_h["objective"][i],
-                    ring_h["n_moving"][i], ring_h["t_th"][i],
-                    ring_h["v_th"][i], per_iter))
-            converged = steps > 0 and int(ring_h["changed"][steps - 1]) == 0
-
-        if n_pad != n:
-            # Trim the padding rows so state arrays pair with the caller's
-            # docs again (dead rows carry ρ_self = 0, so Σ ρ_self — the
-            # objective — is identical before and after the trim).
-            state = dataclasses.replace(
-                state,
-                assign=state.assign[:n],
-                rho_self=state.rho_self[:n],
-                rho_self_prev=state.rho_self_prev[:n],
-            )
-        return LloydResult(
-            state=state,
-            assign=np.asarray(state.assign),
-            history=history,
-            params=state.index.params,
-            converged=converged,
-            n_iter=len(history),
+    bs = min(batch_size, n)
+    pdocs = pad_rows(docs, bs)
+    n_pad = pdocs.n_docs
+    valid = jnp.arange(n_pad) < n
+    if n_pad != n:
+        pad = n_pad - n
+        # Dead rows carry ρ_self = 0 — exactly the value every update
+        # step recomputes for them (no live tuples ⇒ zero similarity) —
+        # and the objective reduction masks on `valid` regardless, so
+        # padding never leaks into the history.
+        state = dataclasses.replace(
+            state,
+            assign=jnp.pad(state.assign, (0, pad)),
+            rho_self=jnp.pad(state.rho_self, (0, pad)),
+            rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad)),
         )
+
+    history = []
+    converged = False
+
+    # --- Prologue: the EstParams iterations, host-stepped -------------
+    # estimate_params needs host-side grid bookkeeping (dynamic-shape
+    # candidate grids), so iterations 1..max(est_iters) run outside the
+    # fused loop: still fully on device per step, with one diagnostic
+    # pull each — a constant ≤ max(est_iters) syncs.
+    prologue = 0
+    if params == "auto" and est_iters:
+        prologue = min(max(est_iters), max_iter)
+    for r in range(1, prologue + 1):
+        t0 = time.perf_counter()
+        state, (mult, cand_sum, n_changed, _) = _device_iteration(
+            algo, backend, pdocs, state, valid, bs=bs, k=k)
+        if r in est_iters:
+            # EstParams sees only the real rows (padding would skew the
+            # Mult-estimate tables).
+            new_params, _ = estimate_params(docs, df, state.index.means_t,
+                                            state.rho_self[:n], k=k,
+                                            grid=est_grid)
+            state = dataclasses.replace(
+                state, index=state.index.with_params(new_params))
+        diag = _host_pull(
+            (mult, cand_sum, n_changed,
+             jnp.sum(jnp.where(valid, state.rho_self, 0.0)),
+             state.index.n_moving, state.index.params.t_th,
+             state.index.params.v_th))
+        history.append(_history_row(
+            r, n, k, *diag, time.perf_counter() - t0))
+        if history[-1]["n_changed"] == 0:
+            converged = True
+            break
+
+    # --- Fused remainder: one jitted call, O(1) host syncs ------------
+    max_steps = max_iter - len(history)
+    if not converged and max_steps > 0:
+        last_changed = jnp.asarray(
+            history[-1]["n_changed"] if history else 1, jnp.int32)
+        t0 = time.perf_counter()
+        state, n_steps, ring = _run_fused(
+            algo, backend, bs, k, max_steps,
+            state, pdocs, valid, last_changed)
+        # The one device→host sync of the fused remainder: the executed
+        # step count and every diagnostic ring cross in a single pull.
+        steps, ring_h = _host_pull((n_steps, ring))
+        steps = int(steps)
+        per_iter = (time.perf_counter() - t0) / max(steps, 1)
+        for i in range(steps):
+            history.append(_history_row(
+                len(history) + 1, n, k, ring_h["mult"][i], ring_h["cand"][i],
+                ring_h["changed"][i], ring_h["objective"][i],
+                ring_h["n_moving"][i], ring_h["t_th"][i],
+                ring_h["v_th"][i], per_iter))
+        converged = steps > 0 and int(ring_h["changed"][steps - 1]) == 0
+
+    if n_pad != n:
+        # Trim the padding rows so state arrays pair with the caller's
+        # docs again (dead rows carry ρ_self = 0, so Σ ρ_self — the
+        # objective — is identical before and after the trim).
+        state = dataclasses.replace(
+            state,
+            assign=state.assign[:n],
+            rho_self=state.rho_self[:n],
+            rho_self_prev=state.rho_self_prev[:n],
+        )
+    return LloydResult(
+        state=state,
+        assign=np.asarray(state.assign),
+        history=history,
+        params=state.index.params,
+        converged=converged,
+        n_iter=len(history),
+    )
+
+
+def __getattr__(name):
+    # Back-compat: the estimator moved to repro.cluster.estimator (PR 3's
+    # API redesign); ``from repro.core.lloyd import SphericalKMeans`` keeps
+    # resolving without dragging the cluster facade into this module's
+    # import graph.
+    if name == "SphericalKMeans":
+        from repro.cluster.estimator import SphericalKMeans
+        return SphericalKMeans
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

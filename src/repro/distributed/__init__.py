@@ -3,10 +3,12 @@ from repro.distributed.kmeans import (
     dist_init_state,
     dist_assignment_update,
     dist_fit,
+    mesh_fit,
 )
 from repro.distributed.elastic import reshard_state, StepWatchdog
 
 __all__ = [
-    "DistKMeansState", "dist_init_state", "dist_assignment_update", "dist_fit",
+    "DistKMeansState", "dist_init_state", "dist_assignment_update",
+    "dist_fit", "mesh_fit",
     "reshard_state", "StepWatchdog",
 ]

@@ -20,13 +20,24 @@ One fused step = assignment + update:
      shard lives, psum over "model";
   5. exact invariant-centroid (ICP) flags from membership deltas.
 
+Every accumulator — assignment scan/kernels AND update segment reductions —
+comes from the shared :mod:`repro.core.backends` protocol: the shard-local
+step builds a local :class:`MeanIndex` view of its centroid slice and feeds
+it to the same ``Backend.accumulate`` the single-host engine uses, so this
+module owns collectives and sharding, never a private TAAT re-implementation.
+
 Object batching inside the shard keeps the (chunk × K_loc) similarity tile
 VMEM/HBM-friendly; chunk size is the software-pipelining knob measured in
 EXPERIMENTS.md §Perf.
+
+The public fitting entry point is :func:`mesh_fit` — the 'mesh' execution
+strategy behind ``repro.cluster.SphericalKMeans(mesh=...)``.  The historical
+``dist_fit(...)`` signature survives as a deprecation shim over it.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -53,106 +64,14 @@ class DistKMeansState:
     iteration: jax.Array  # ()       replicated
 
 
-def _taat_local(ids, vals, means_t, t_th, v_th, unroll=False, p_block=1):
-    """TAAT pass over one object chunk vs the local centroid shard.
-    Returns (sims, rho12, y) each (C, K_loc).
+def _local_index(means_t, moving, t_th, v_th):
+    """The shard's (D, K_loc) centroid slice as a MeanIndex — the view the
+    shared backend accumulators consume (thresholds are replicated, so the
+    region masks are identical on every shard)."""
+    from repro.core.meanindex import StructuralParams, build_mean_index
 
-    p_block > 1 (§Perf): gather p_block posting rows per scan step and fold
-    their contributions before touching the (C, K_loc) accumulators — the
-    accumulator read/write traffic (the dominant memory-term component)
-    drops ~p_block× while gather traffic is unchanged.
-    """
-    c, p = ids.shape
-    k_loc = means_t.shape[1]
-    pb = p_block
-
-    def body(carry, xs):
-        sims, rho12, y = carry
-        idp, vp = xs                              # (pb, C)
-        rows = means_t[idp]                       # (pb, C, K_loc)
-        contrib = vp[..., None] * rows
-        tail = (idp >= t_th)[..., None]
-        hi = rows >= v_th
-        exact = jnp.where(tail, hi, True)
-        return (sims + jnp.sum(contrib, 0),
-                rho12 + jnp.sum(jnp.where(exact, contrib, 0.0), 0),
-                y + jnp.sum(jnp.where(tail & ~hi, vp[..., None], 0.0), 0)), None
-
-    z = jnp.zeros((c, k_loc), jnp.float32)
-    ids, vals = _pad_p(ids, vals, pb)
-    pp = ids.shape[1]
-    xs = (ids.T.reshape(pp // pb, pb, c), vals.T.reshape(pp // pb, pb, c))
-    (sims, rho12, y), _ = lax.scan(body, (z, z, z), xs, unroll=unroll)
-    return sims, rho12, y
-
-
-def _pad_p(ids, vals, pb: int):
-    p = ids.shape[1]
-    rem = (-p) % pb
-    if rem:
-        ids = jnp.pad(ids, ((0, 0), (0, rem)))
-        vals = jnp.pad(vals, ((0, 0), (0, rem)))
-    return ids, vals
-
-
-def _gather_verify_local(ids, vals, nnz, means_t, t_th, v_th, rho_max, col_ok,
-                         unroll=False, p_block=1, p_tail: int = 16):
-    """Paper-faithful two-phase assignment (§Perf variant, Algs. 2–3):
-
-    Phase G: one TAAT pass accumulating only (rho12, y) — the full exact
-    similarity is NOT computed for every centroid (that is MIVI\'s cost).
-    Phase V: the exact Region-3 partial from a second pass over a compacted
-    live-suffix window.  ids ascend by df-rank within a row, so the >= t_th
-    entries are the last (ntH)_i LIVE positions; the caller guarantees
-    max_i (ntH)_i <= p_tail (computed after EstParams fixes t_th — the same
-    moment the paper restructures its index).  Exactness is preserved:
-    windows that reach below position 0 are validity-masked.
-
-    Returns (exact_masked, survivors).
-    """
-    c, p = ids.shape
-    k_loc = means_t.shape[1]
-    pb = p_block
-    z = jnp.zeros((c, k_loc), jnp.float32)
-
-    def g_body(carry, xs):
-        rho12, y = carry
-        idp, vp = xs
-        rows = means_t[idp]
-        contrib = vp[..., None] * rows
-        tail = (idp >= t_th)[..., None]
-        hi = rows >= v_th
-        exact = jnp.where(tail, hi, True)
-        return (rho12 + jnp.sum(jnp.where(exact, contrib, 0.0), 0),
-                y + jnp.sum(jnp.where(tail & ~hi, vp[..., None], 0.0), 0)), None
-
-    gi, gv = _pad_p(ids, vals, pb)
-    pp = gi.shape[1]
-    xs = (gi.T.reshape(pp // pb, pb, c), gv.T.reshape(pp // pb, pb, c))
-    (rho12, y), _ = lax.scan(g_body, (z, z), xs, unroll=unroll)
-    surv = ((rho12 + y * v_th) > rho_max[:, None]) & col_ok
-
-    # compacted live-suffix window [nnz - p_tail, nnz)
-    off = nnz[:, None] - p_tail + jnp.arange(p_tail)[None, :]
-    okw = off >= 0
-    idx = jnp.clip(off, 0, p - 1)
-    tids = jnp.take_along_axis(ids, idx, axis=1)
-    tvals = jnp.where(okw, jnp.take_along_axis(vals, idx, axis=1), 0.0)
-
-    def v_body(rho3, xs):
-        idp, vp = xs
-        rows = means_t[idp]
-        tail = (idp >= t_th)[..., None]
-        lo = rows < v_th
-        add = jnp.where(tail & lo, vp[..., None] * rows, 0.0)
-        return rho3 + jnp.sum(add, 0), None
-
-    ti, tv = _pad_p(tids, tvals, pb)
-    pt = ti.shape[1]
-    xsv = (ti.T.reshape(pt // pb, pb, c), tv.T.reshape(pt // pb, pb, c))
-    rho3, _ = lax.scan(v_body, z, xsv, unroll=unroll)
-    exact = jnp.where(surv, rho12 + rho3, -jnp.inf)
-    return exact, surv
+    params = StructuralParams(t_th=t_th, v_th=v_th)
+    return build_mean_index(means_t.T, params, moving=moving)
 
 
 def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
@@ -161,14 +80,16 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
                 taat_unroll: bool = False, two_phase: bool = False,
                 p_block: int = 1, p_tail: int = 16,
                 backend: str = "reference"):
-    from repro.core.backends import BACKENDS
+    from repro.core.backends import BACKENDS, gather_verify_scan
     from repro.core.meanindex import normalized_means
+    from repro.sparse import SparseDocs
 
     bk = BACKENDS[backend]
     n_loc, p = ids.shape
     d, k_loc = means_t.shape
     k0 = lax.axis_index("model") * k_loc
     xstate = (rho_self >= rho_prev) & (iteration >= 2) & valid
+    index_loc = _local_index(means_t, moving, t_th, v_th)
 
     # ---------------- assignment, chunked over local objects ---------------
     nc = n_loc // obj_chunk
@@ -176,26 +97,23 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     def chunk_fn(args):
         cids, cvals, cval, cassign, crho, cxs = args
         col_ok = moving[None, :] | ~cxs[:, None]
+        cnnz = jnp.sum(cvals != 0.0, axis=1)       # tf-idf: live ⇔ val > 0
         if two_phase and algo == "esicp":
-            cnnz = jnp.sum(cvals != 0.0, axis=1)   # tf-idf: live ⇔ val > 0
-            masked, surv = _gather_verify_local(
+            masked, surv = gather_verify_scan(
                 cids, cvals, cnnz, means_t, t_th, v_th, crho, col_ok,
                 unroll=taat_unroll, p_block=p_block, p_tail=p_tail)
         else:
-            if backend == "pallas":
-                # Kernel path on the local (chunk × K_loc) tile: the shard's
-                # slice of the mean-inverted index feeds the same kernels the
-                # single-device engine uses (core/backends.py).
-                from repro.kernels import ops
-                sims = ops.sparse_sim(cids, cvals, means_t)
-                rho12, y = (ops.esicp_gather(cids, cvals, means_t, t_th, v_th)
-                            if algo == "esicp" else (None, None))
-            else:
-                sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th,
-                                             unroll=taat_unroll,
-                                             p_block=p_block)
+            # The shared backend protocol on the local tile: the reference
+            # TAAT scan or the pallas kernels, exactly as the single-host
+            # engine runs them (core/backends.py).
+            cdocs = SparseDocs(ids=cids, vals=cvals, nnz=cnnz, dim=d)
+            mode = "esicp" if algo == "esicp" else "exact"
+            out = bk.accumulate(cdocs, index_loc, cxs, mode=mode, diag=False,
+                                unroll=taat_unroll, p_block=p_block)
+            sims = out["sims"]
             if algo == "esicp":
-                surv = ((rho12 + y * v_th) > crho[:, None]) & col_ok
+                surv = ((out["rho12"] + out["y"] * v_th)
+                        > crho[:, None]) & col_ok
             elif algo == "mivi":
                 surv = jnp.ones_like(col_ok)
             elif algo == "icp":
@@ -348,12 +266,22 @@ def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
     return new, diag
 
 
-def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
+def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
              backend: str = "reference", max_iter: int = 40,
              obj_chunk: int = 1024, seed: int = 0,
              est_iters=(1, 2), df=None, checkpoint_dir: str | None = None,
              checkpoint_every: int = 5, **step_kw):
-    """Full distributed Lloyd loop with EstParams and optional checkpointing."""
+    """Full distributed Lloyd loop with EstParams and optional checkpointing.
+
+    Returns ``(state, history, converged, params)`` — the final sharded
+    :class:`DistKMeansState` (object arrays still carry the shard-multiple
+    tail padding; rows ``[:docs.n_docs]`` are the real ones), the diagnostic
+    history, the convergence flag, and the final StructuralParams.
+
+    This is the 'mesh' execution strategy behind
+    ``repro.cluster.SphericalKMeans(mesh=...)`` — prefer the estimator,
+    which trims padding and wraps the result in a FittedModel.
+    """
     import numpy as np
     from repro.core.estparams import estimate_params
     from repro.core.meanindex import StructuralParams
@@ -373,13 +301,19 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
 
     state = dist_init_state(docs, k, mesh, seed=seed)
     if pad:
+        # Dead tail rows carry ρ_self = 0, matching the single-host padding
+        # convention (core/lloyd.py): the refresh recomputes 0 for them every
+        # iteration (no live tuples ⇒ zero similarity) and the objective
+        # reduction masks on `valid` regardless, so the pad value never leaks
+        # into diagnostics — unlike the previous -inf sentinel, which leaked
+        # NaN-prone -inf arithmetic into any unmasked consumer.
         state = dataclasses.replace(
             state,
             assign=jax.device_put(jnp.pad(state.assign, (0, pad)), sh(P(axes_obj))),
-            rho_self=jax.device_put(jnp.pad(state.rho_self, (0, pad),
-                                            constant_values=-jnp.inf), sh(P(axes_obj))),
-            rho_prev=jax.device_put(jnp.pad(state.rho_prev, (0, pad),
-                                            constant_values=-jnp.inf), sh(P(axes_obj))),
+            rho_self=jax.device_put(jnp.pad(state.rho_self, (0, pad)),
+                                    sh(P(axes_obj))),
+            rho_prev=jax.device_put(jnp.pad(state.rho_prev, (0, pad)),
+                                    sh(P(axes_obj))),
         )
     two_phase = step_kw.pop("two_phase", False)
     if two_phase:
@@ -432,6 +366,20 @@ def dist_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
         if history[-1]["n_changed"] == 0:
             converged = True
             break
+    return state, history, converged, params
+
+
+def dist_fit(docs, k: int, mesh: Mesh, **kw):
+    """Deprecated pre-redesign entry point; use
+    ``repro.cluster.SphericalKMeans(k, mesh=mesh, ...)`` (or :func:`mesh_fit`
+    for the raw sharded state).  Same kwargs, same ``(state, history,
+    converged)`` return value."""
+    warnings.warn(
+        "dist_fit is deprecated: construct repro.cluster.SphericalKMeans("
+        "k, mesh=mesh, chunk_size=...) and call fit(), or use "
+        "distributed.kmeans.mesh_fit for the raw sharded state.",
+        DeprecationWarning, stacklevel=2)
+    state, history, converged, _ = mesh_fit(docs, k, mesh, **kw)
     return state, history, converged
 
 
@@ -449,18 +397,23 @@ def make_assign_fn(mesh: Mesh, *, k: int, obj_chunk: int = 2048,
     po = P(axes_obj)
 
     def _local(ids, vals, valid, means_t, t_th, v_th):
+        from repro.core.backends import BACKENDS
+        from repro.sparse import SparseDocs
+
+        bk = BACKENDS[backend]
         n_loc, p = ids.shape
         d, k_loc = means_t.shape
         k0 = lax.axis_index("model") * k_loc
         nc = n_loc // obj_chunk
+        index_loc = _local_index(means_t, jnp.ones((k_loc,), bool), t_th, v_th)
 
         def chunk_fn(args):
             cids, cvals, cval = args
-            if backend == "pallas":
-                from repro.kernels import ops
-                sims = ops.sparse_sim(cids, cvals, means_t)
-            else:
-                sims, rho12, y = _taat_local(cids, cvals, means_t, t_th, v_th)
+            cdocs = SparseDocs(ids=cids, vals=cvals,
+                               nnz=jnp.sum(cvals != 0.0, axis=1), dim=d)
+            sims = bk.accumulate(cdocs, index_loc,
+                                 jnp.zeros((obj_chunk,), bool),
+                                 mode="exact", diag=False)["sims"]
             # serving has no previous similarity: bound via running best —
             # one exact pass, filter diagnostics only
             masked = jnp.where(jnp.ones_like(sims, bool), sims, -jnp.inf)

@@ -10,13 +10,18 @@ full-size caches are never allocated on the host.
 
 :class:`ClusterEngine` is the k-means analogue: a frozen mean-inverted index
 served as a lookup service, with the assignment accumulators produced by a
-pluggable backend (core/backends.py) — the same engine the Lloyd loop uses.
-``refit`` treats index (re)construction as a first-class serving operation
-(the SIVF companion paper's stance): one backend-owned update phase rebuilds
-the frozen index from a fresh corpus without a full training fit.
+pluggable backend (core/backends.py) — the same engine the Lloyd loop uses,
+and the same fused classify path (repro/cluster/classify.py) behind
+``SphericalKMeans.predict``.  ``refit`` treats index (re)construction as a
+first-class serving operation (the SIVF companion paper's stance): one
+backend-owned update phase rebuilds the frozen index from a fresh corpus
+without a full training fit.  ``ClusterEngine.from_model(model)`` /
+``engine.to_model()`` close the train→serve→refit loop on the one
+:class:`repro.cluster.FittedModel` artifact.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -43,29 +48,12 @@ def make_decode_fn(cfg: ModelConfig):
     return decode
 
 
-@partial(jax.jit, static_argnames=("backend", "bs", "dim"))
-def _classify_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
-    """Fused classification epoch: lax.map over reshaped batches, exact
-    similarities from the chosen backend, top-1 on device."""
-    from repro.sparse import SparseDocs
-    from repro.core.backends import resolve_backend
-
-    bk = resolve_backend(backend)
-    n = ids.shape[0]
-    nb = n // bs
-    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
-
-    def batch_fn(args):
-        bids, bvals, bnnz = args
-        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=dim)
-        out = bk.accumulate(bdocs, index, jnp.zeros((bs,), bool), mode="exact",
-                            diag=False)   # serving never reads Mult
-        sims = out["sims"]
-        best = jnp.argmax(sims, axis=1).astype(jnp.int32)
-        return best, jnp.take_along_axis(sims, best[:, None], axis=1)[:, 0]
-
-    a, s = jax.lax.map(batch_fn, (resh(ids), resh(vals), resh(nnz)))
-    return a.reshape(n), s.reshape(n)
+def _classify_fused(backend, ids, vals, nnz, dim, index, bs):
+    """The fused classification epoch, now shared with predict/transform —
+    see repro/cluster/classify.py (imported lazily: repro.cluster re-exports
+    this module's ClusterEngine, so a module-level import would cycle)."""
+    from repro.cluster.classify import _classify_fused as impl
+    return impl(backend, ids, vals, nnz, dim, index, bs)
 
 
 @partial(jax.jit, static_argnames=("backend", "k", "dim"))
@@ -95,28 +83,79 @@ class ClusterEngine:
     The single-host sibling of ``distributed.kmeans.make_assign_fn``: no
     update step, no ICP state, one device→host sync per request batch.
 
+    Construct from the fitted-model artifact —
+    ``ClusterEngine.from_model(model)`` — which also inherits the model's
+    backend.  Passing a raw MeanIndex still works but is deprecated: an
+    index without provenance cannot round-trip through ``to_model``'s
+    save/refit loop losslessly.
+
     backend: 'reference' | 'pallas' | 'auto' — accumulator engine,
     identical semantics to ``SphericalKMeans(backend=...)``.
     """
 
-    def __init__(self, index, *, backend: str = "auto",
+    def __init__(self, index=None, *, model=None, backend: str | None = None,
                  batch_size: int = 4096):
-        self.index = index
-        self.backend = backend
+        from repro.cluster.model import FittedModel
+
+        if model is None and isinstance(index, FittedModel):
+            model, index = index, None
+        if model is not None:
+            if index is not None:
+                raise TypeError("pass a FittedModel or an index, not both")
+            self._source = model
+            self.index = model.index
+            backend = backend or model.backend
+        else:
+            if index is None:
+                raise TypeError("ClusterEngine needs a FittedModel (or, "
+                                "deprecated, a raw MeanIndex)")
+            warnings.warn(
+                "ClusterEngine(index) is deprecated: build the engine from "
+                "the fitted-model artifact — ClusterEngine.from_model(model) "
+                "(repro.cluster).", DeprecationWarning, stacklevel=2)
+            self._source = None
+            self.index = index
+        self.backend = backend or "auto"
         self.batch_size = batch_size
+        self._last_assign = None
+        self._last_rho = None
+
+    @classmethod
+    def from_model(cls, model, *, backend: str | None = None,
+                   batch_size: int = 4096) -> ClusterEngine:
+        """The serving runtime over a FittedModel artifact (train→serve)."""
+        return cls(model=model, backend=backend, batch_size=batch_size)
+
+    def to_model(self):
+        """Export the engine's current index as a FittedModel (serve→refit):
+        after ``refit``, the artifact carries the rebuilt index plus the last
+        refit's membership/ρ — ready to ``save`` or to seed another runtime.
+        """
+        import dataclasses as _dc
+
+        from repro.cluster.model import FittedModel
+
+        labels = (self._last_assign if self._last_assign is not None
+                  else np.zeros((0,), np.int32))
+        rho = (self._last_rho if self._last_rho is not None
+               else np.zeros((0,), np.float32))
+        if self._source is not None:
+            if self._last_assign is None:
+                labels, rho = self._source.labels, self._source.rho_self
+            return _dc.replace(self._source, index=self.index, labels=labels,
+                               rho_self=rho, backend=self.backend)
+        return FittedModel(index=self.index, labels=labels, rho_self=rho,
+                           backend=self.backend, strategy="serving")
 
     def classify(self, docs):
-        """docs: SparseDocs -> (assign (N,) int32, sims (N,) float32)."""
-        from repro.sparse import pad_rows
+        """docs: SparseDocs -> (assign (N,) int32, sims (N,) float32).
 
-        n = docs.n_docs
-        if n == 0:
-            return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
-        bs = min(self.batch_size, n)
-        pdocs = pad_rows(docs, bs)
-        a, s = _classify_fused(self.backend, pdocs.ids, pdocs.vals,
-                               pdocs.nnz, pdocs.dim, self.index, bs)
-        return np.asarray(a)[:n], np.asarray(s)[:n]
+        The same fused path as ``SphericalKMeans.predict`` /
+        ``FittedModel.predict`` (repro/cluster/classify.py)."""
+        from repro.cluster.classify import classify_docs
+
+        return classify_docs(self.index, docs, backend=self.backend,
+                             batch_size=self.batch_size)
 
     def refit(self, docs, *, n_iter: int = 1):
         """Rebuild the frozen index from a fresh corpus (SIVF-style index
@@ -149,7 +188,9 @@ class ClusterEngine:
                                              pdocs.vals, pdocs.nnz, a,
                                              pdocs.dim, self.index,
                                              self.index.k)
-        return np.asarray(a)[:n], np.asarray(rho)[:n]
+        self._last_assign = np.asarray(a)[:n]
+        self._last_rho = np.asarray(rho)[:n]
+        return self._last_assign, self._last_rho
 
 
 class ServeLoop:

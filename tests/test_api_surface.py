@@ -1,0 +1,121 @@
+"""Snapshot of the ``repro.cluster`` public surface.
+
+Future PRs that change ``__all__``, a public signature, or the config/model
+field sets must edit this file in the same commit — the API changes
+deliberately, never accidentally.  (DESIGN.md §9 documents the surface and
+the deprecation policy these snapshots enforce.)
+"""
+import dataclasses
+import inspect
+
+import repro.cluster as rc
+
+EXPECTED_ALL = [
+    "ClusterConfig",
+    "ClusterEngine",
+    "FittedModel",
+    "MeshStrategy",
+    "STRATEGIES",
+    "SingleHostStrategy",
+    "SphericalKMeans",
+    "classify_docs",
+    "fit",
+    "load_model",
+    "resolve_strategy",
+    "transform_docs",
+]
+
+EXPECTED_SIGNATURES = {
+    "SphericalKMeans.__init__":
+        "(self, k: 'int', *, algo: 'str' = 'esicp', params='auto', "
+        "backend: 'str' = 'reference', batch_size: 'int' = 4096, "
+        "max_iter: 'int' = 60, est_grid: 'EstGrid | None' = None, "
+        "est_iters=(1, 2), seed: 'int' = 0, mesh=None, "
+        "chunk_size: 'int' = 1024, checkpoint_dir: 'str | None' = None, "
+        "checkpoint_every: 'int' = 5)",
+    "SphericalKMeans.fit": "(self, docs, df=None) -> 'SphericalKMeans'",
+    "SphericalKMeans.predict": "(self, docs) -> 'np.ndarray'",
+    "SphericalKMeans.transform": "(self, docs) -> 'np.ndarray'",
+    "SphericalKMeans.score": "(self, docs) -> 'float'",
+    "SphericalKMeans.fit_predict": "(self, docs, df=None) -> 'np.ndarray'",
+    "SphericalKMeans.fit_result": "(self) -> 'LloydResult'",
+    "SphericalKMeans.from_config":
+        "(cls, config: 'ClusterConfig') -> 'SphericalKMeans'",
+    "FittedModel.save": "(self, directory: 'str', *, step: 'int' = 0) -> 'str'",
+    "FittedModel.load":
+        "(cls, directory: 'str', *, step: 'int | None' = None) "
+        "-> 'FittedModel'",
+    "FittedModel.predict":
+        "(self, docs, *, batch_size: 'int' = 4096) -> 'np.ndarray'",
+    "FittedModel.transform":
+        "(self, docs, *, batch_size: 'int' = 4096) -> 'np.ndarray'",
+    "FittedModel.score":
+        "(self, docs, *, batch_size: 'int' = 4096) -> 'float'",
+    "ClusterEngine.__init__":
+        "(self, index=None, *, model=None, backend: 'str | None' = None, "
+        "batch_size: 'int' = 4096)",
+    "ClusterEngine.from_model":
+        "(cls, model, *, backend: 'str | None' = None, "
+        "batch_size: 'int' = 4096) -> 'ClusterEngine'",
+    "ClusterEngine.to_model": "(self)",
+    "ClusterEngine.classify": "(self, docs)",
+    "ClusterEngine.refit": "(self, docs, *, n_iter: 'int' = 1)",
+    "fit": "(docs, config: 'ClusterConfig', *, df=None) -> 'FittedModel'",
+    "load_model":
+        "(directory: 'str', *, step: 'int | None' = None) -> 'FittedModel'",
+    "classify_docs":
+        "(index, docs, *, backend: 'str' = 'auto', "
+        "batch_size: 'int' = 4096)",
+    "transform_docs":
+        "(index, docs, *, backend: 'str' = 'auto', "
+        "batch_size: 'int' = 4096)",
+}
+
+EXPECTED_CONFIG_FIELDS = [
+    "k", "algo", "backend", "params", "batch_size", "chunk_size", "max_iter",
+    "est_grid", "est_iters", "seed", "mesh", "checkpoint_dir",
+    "checkpoint_every",
+]
+
+EXPECTED_MODEL_FIELDS = [
+    "index", "labels", "rho_self", "history", "converged", "n_iter", "algo",
+    "backend", "strategy",
+]
+
+
+def _resolve(dotted):
+    obj = rc
+    owner = None
+    for part in dotted.split("."):
+        owner, obj = obj, inspect.getattr_static(obj, part)
+    return owner, obj
+
+
+def test_public_all_snapshot():
+    assert rc.__all__ == EXPECTED_ALL
+    for name in rc.__all__:
+        assert hasattr(rc, name)
+
+
+def test_public_signatures_snapshot():
+    for dotted, expected in EXPECTED_SIGNATURES.items():
+        owner, obj = _resolve(dotted)
+        if isinstance(obj, classmethod):
+            obj = obj.__func__
+        assert str(inspect.signature(obj)) == expected, dotted
+
+
+def test_config_and_model_fields_snapshot():
+    assert [f.name for f in dataclasses.fields(rc.ClusterConfig)] \
+        == EXPECTED_CONFIG_FIELDS
+    assert [f.name for f in dataclasses.fields(rc.FittedModel)] \
+        == EXPECTED_MODEL_FIELDS
+
+
+def test_core_reexport_is_the_same_estimator():
+    """The historical import path stays the canonical class."""
+    import repro.core
+    from repro.core.lloyd import SphericalKMeans as via_lloyd
+
+    assert repro.core.SphericalKMeans is rc.SphericalKMeans
+    assert via_lloyd is rc.SphericalKMeans

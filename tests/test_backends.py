@@ -37,11 +37,11 @@ BACKEND_NAMES = sorted(BACKENDS)          # ["pallas", "reference"]
 def mid_state(small_corpus):
     """A realistic mid-clustering state with nontrivial shared thresholds."""
     docs, df, perm, topics = small_corpus
-    res = SphericalKMeans(k=16, algo="mivi", max_iter=3, batch_size=1500,
-                          seed=11).fit(docs, df=df)
+    km = SphericalKMeans(k=16, algo="mivi", max_iter=3, batch_size=1500,
+                         seed=11).fit(docs, df=df)
     params = StructuralParams(t_th=jnp.asarray(int(0.8 * docs.dim), jnp.int32),
                               v_th=jnp.asarray(0.05, jnp.float32))
-    state = res.state
+    state = km.state_
     return docs, state.index.with_params(params), state
 
 
@@ -158,8 +158,8 @@ def test_fit_exactness_across_backends(small_corpus, backend):
                           seed=4).fit(docs, df=df)
     r = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=500,
                         seed=4, backend=backend).fit(docs, df=df)
-    assert r.n_iter == ref.n_iter
-    assert (r.assign == ref.assign).all()
+    assert r.n_iter_ == ref.n_iter_
+    assert (r.labels_ == ref.labels_).all()
 
 
 def test_tail_batch_padding_regression(small_corpus):
@@ -173,11 +173,11 @@ def test_tail_batch_padding_regression(small_corpus):
                            seed=4).fit(docs, df=df)
     tail = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=400,
                            seed=4).fit(docs, df=df)     # 1500 % 400 = 300
-    assert tail.n_iter == full.n_iter
-    assert tail.converged == full.converged
-    assert (tail.assign == full.assign).all()
-    np.testing.assert_allclose(tail.objective, full.objective, rtol=1e-6)
-    for ht, hf in zip(tail.history, full.history):
+    assert tail.n_iter_ == full.n_iter_
+    assert tail.converged_ == full.converged_
+    assert (tail.labels_ == full.labels_).all()
+    np.testing.assert_allclose(tail.objective_, full.objective_, rtol=1e-6)
+    for ht, hf in zip(tail.history_, full.history_):
         assert ht["n_changed"] == hf["n_changed"]
         assert ht["n_moving"] == hf["n_moving"]
         assert ht["t_th"] == hf["t_th"]
@@ -185,7 +185,7 @@ def test_tail_batch_padding_regression(small_corpus):
         np.testing.assert_allclose(ht["cpr"], hf["cpr"], rtol=1e-6)
         np.testing.assert_allclose(ht["objective"], hf["objective"],
                                    rtol=1e-6)
-    assert len(tail.assign) == docs.n_docs
+    assert len(tail.labels_) == docs.n_docs
 
 
 def test_fit_host_syncs_o1_per_fit(small_corpus, monkeypatch):
@@ -208,7 +208,7 @@ def test_fit_host_syncs_o1_per_fit(small_corpus, monkeypatch):
     monkeypatch.setattr(lloyd, "_host_pull", counting_pull)
     res = SphericalKMeans(k=12, algo="esicp", max_iter=8, batch_size=375,
                           seed=4).fit(docs, df=df)
-    assert res.n_iter > 3                  # more iterations than host syncs
+    assert res.n_iter_ > 3                 # more iterations than host syncs
     assert len(fused_calls) == 1           # iterations 3.. are one call
     assert len(pulls) == 3                 # 2 prologue + 1 fused remainder
 
@@ -219,7 +219,7 @@ def test_fused_fit_matches_per_iteration_loop(small_corpus):
     docs, df, perm, topics = small_corpus
     res = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=500,
                           seed=4).fit(docs, df=df)
-    assert res.converged
+    assert res.converged_
 
     # Reconstruct the pre-refactor loop: epoch + update stepped from the
     # host, EstParams at iterations 1-2, stop at the first 0-change epoch.
@@ -230,7 +230,8 @@ def test_fused_fit_matches_per_iteration_loop(small_corpus):
     from repro.sparse import pad_rows
 
     n = docs.n_docs
-    state = init_state(docs, 12, km._initial_params(docs.dim), seed=4)
+    state = init_state(docs, 12, lloyd.initial_params(km.params, docs.dim),
+                       seed=4)
     bs = 500
     pdocs = pad_rows(docs, bs)
     valid = jnp.arange(pdocs.n_docs) < n
@@ -248,12 +249,12 @@ def test_fused_fit_matches_per_iteration_loop(small_corpus):
         if int(changed) == 0:
             break
 
-    assert res.n_iter == len(history)
-    assert (res.assign == np.asarray(state.assign)[:n]).all()
+    assert res.n_iter_ == len(history)
+    assert (res.labels_ == np.asarray(state.assign)[:n]).all()
     np.testing.assert_allclose(
-        [h["objective"] for h in res.history], [h[1] for h in history],
+        [h["objective"] for h in res.history_], [h[1] for h in history],
         rtol=1e-6)
-    assert [h["n_changed"] for h in res.history] == [h[0] for h in history]
+    assert [h["n_changed"] for h in res.history_] == [h[0] for h in history]
 
 
 def test_resolve_backend():
@@ -273,12 +274,13 @@ def test_cluster_engine_parity(small_corpus, backend):
     docs, df, perm, topics = small_corpus
     res = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=1500,
                           seed=4).fit(docs, df=df)
-    assert res.converged
-    eng = ClusterEngine(res.state.index, backend=backend, batch_size=700)
+    assert res.converged_
+    eng = ClusterEngine.from_model(res.model_, backend=backend,
+                                   batch_size=700)
     assign, sims = eng.classify(docs)          # 1500 % 700 != 0 — tail path
-    assert (assign == res.assign).all()
-    np.testing.assert_allclose(sims, np.asarray(res.state.rho_self)[:docs.n_docs],
-                               rtol=1e-5, atol=1e-5)
+    assert (assign == res.labels_).all()
+    np.testing.assert_allclose(sims, res.model_.rho_self, rtol=1e-5,
+                               atol=1e-5)
 
 
 @pytest.mark.parametrize("backend", BACKEND_NAMES)
@@ -292,14 +294,15 @@ def test_cluster_engine_refit_rebuilds_index(small_corpus, backend):
     docs, df, perm, topics = small_corpus
     res = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=1500,
                           seed=4).fit(docs, df=df)
-    assert res.converged
-    eng = ClusterEngine(res.state.index, backend=backend, batch_size=700)
+    assert res.converged_
+    eng = ClusterEngine.from_model(res.model_, backend=backend,
+                                   batch_size=700)
     assign, rho = eng.refit(docs)              # tail path: 1500 % 700 != 0
-    assert (assign == res.assign).all()
+    assert (assign == res.labels_).all()
     np.testing.assert_allclose(np.asarray(eng.index.means_t),
-                               np.asarray(res.state.index.means_t),
+                               np.asarray(res.state_.index.means_t),
                                rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(rho, np.asarray(res.state.rho_self),
+    np.testing.assert_allclose(rho, np.asarray(res.state_.rho_self),
                                rtol=1e-5, atol=1e-5)
     # refit on a small slice: empty clusters keep their previous centroid
     # (unit columns, no NaNs), so serving survives partial refreshes.
@@ -315,15 +318,15 @@ def test_distributed_backend_pallas_smoke():
     """shard_map step with the kernel backend matches the reference backend."""
     from repro.data import make_corpus, CorpusSpec
     from repro.launch.mesh import make_test_mesh
-    from repro.distributed import dist_fit
+    from repro.distributed import mesh_fit
 
     docs, df, perm, topics = make_corpus(CorpusSpec(n_docs=256, vocab=256,
                                                     nt_mean=20, n_topics=6,
                                                     seed=13))
     mesh = make_test_mesh((2, 2), ("data", "model"))
-    ref, _, _ = dist_fit(docs, 8, mesh, algo="esicp", max_iter=4,
-                         obj_chunk=64, seed=1, df=df)
-    pal, _, _ = dist_fit(docs, 8, mesh, algo="esicp", max_iter=4,
-                         obj_chunk=64, seed=1, df=df, backend="pallas")
+    ref, _, _, _ = mesh_fit(docs, 8, mesh, algo="esicp", max_iter=4,
+                            obj_chunk=64, seed=1, df=df)
+    pal, _, _, _ = mesh_fit(docs, 8, mesh, algo="esicp", max_iter=4,
+                            obj_chunk=64, seed=1, df=df, backend="pallas")
     assert (np.asarray(ref.assign)[:docs.n_docs]
             == np.asarray(pal.assign)[:docs.n_docs]).all()

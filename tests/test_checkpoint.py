@@ -63,25 +63,27 @@ def test_async_checkpointer(tmp_path):
                                np.ones(5) * 3)
 
 
-def test_dist_fit_resume_from_checkpoint(tmp_path, small_corpus):
-    """Fault-tolerance loop: checkpoint mid-run, restore, verify payload."""
+def test_mesh_fit_resume_from_checkpoint(tmp_path, small_corpus):
+    """Fault-tolerance loop: checkpoint mid-run, restore, verify payload —
+    driven through the unified estimator (mesh strategy + checkpoint_dir)."""
     from repro.launch.mesh import make_test_mesh
-    from repro.distributed import dist_fit
+    from repro.cluster import SphericalKMeans
     docs, df, perm, topics = small_corpus
     sub = docs.slice_rows(0, 512)
     mesh = make_test_mesh((2, 2), ("data", "model"))
     d = str(tmp_path)
-    state, hist, _ = dist_fit(sub, 8, mesh, algo="esicp", max_iter=6,
-                              obj_chunk=128, seed=1, df=df,
-                              checkpoint_dir=d, checkpoint_every=2)
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=6, chunk_size=128,
+                         mesh=mesh, seed=1, checkpoint_dir=d,
+                         checkpoint_every=2).fit(sub, df=df)
     assert latest_step(d) is not None
-    example = {"means_t": jnp.zeros_like(state.means_t),
-               "assign": jnp.zeros_like(state.assign),
-               "rho_self": jnp.zeros_like(state.rho_self),
-               "rho_prev": jnp.zeros_like(state.rho_prev),
-               "moving": jnp.zeros_like(state.moving),
+    k, dim, n_pad = 8, sub.dim, 512
+    example = {"means_t": jnp.zeros((dim, k)),
+               "assign": jnp.zeros((n_pad,), jnp.int32),
+               "rho_self": jnp.zeros((n_pad,)),
+               "rho_prev": jnp.zeros((n_pad,)),
+               "moving": jnp.zeros((k,), bool),
                "iteration": jnp.asarray(0),
                "t_th": jnp.asarray(0), "v_th": jnp.asarray(0.0)}
     restored, step = restore_checkpoint(d, example)
-    assert restored["means_t"].shape == state.means_t.shape
+    assert restored["means_t"].shape == (dim, k)
     assert int(restored["iteration"]) == step

@@ -1,0 +1,250 @@
+"""The unified ``repro.cluster`` API: one estimator, one artifact.
+
+Acceptance criteria of the API redesign:
+
+  * ``FittedModel`` round-trips through ``save``/``load`` with predict
+    parity on both backends;
+  * one artifact drives all three runtimes — ``SphericalKMeans.predict``,
+    ``ClusterEngine.from_model(...).classify``, and the mesh assign path
+    agree exactly on the same corpus;
+  * ``mesh=`` routes the *same* estimator through the distributed loop,
+    including when N is not a shard×chunk multiple (the ρ_self tail-padding
+    regression, mirroring the single-host test in test_backends.py);
+  * every legacy entry point still works and fires a DeprecationWarning.
+"""
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.cluster import (ClusterConfig, ClusterEngine, FittedModel,
+                           SphericalKMeans, fit, load_model)
+from repro.core.lloyd import LloydResult
+from repro.data import make_corpus, CorpusSpec
+from repro.launch.mesh import make_test_mesh
+
+
+@pytest.fixture(scope="module")
+def fitted(small_corpus):
+    docs, df, perm, topics = small_corpus
+    km = SphericalKMeans(k=12, algo="esicp", max_iter=20, batch_size=500,
+                         seed=4).fit(docs, df=df)
+    assert km.converged_
+    return docs, df, km
+
+
+# ---------------------------------------------------------------------------
+# FittedModel round-trip.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_fitted_model_roundtrip(tmp_path, small_corpus, backend):
+    """fit → save → load → predict parity, on both backends."""
+    docs, df, perm, topics = small_corpus
+    km = SphericalKMeans(k=10, algo="esicp", max_iter=12, batch_size=500,
+                         seed=7, backend=backend).fit(docs, df=df)
+    model = km.model_
+    path = str(tmp_path / "model")
+    model.save(path)
+    loaded = load_model(path)
+
+    assert loaded.backend == backend
+    assert loaded.algo == "esicp"
+    assert loaded.k == model.k and loaded.dim == model.dim
+    assert loaded.n_iter == model.n_iter
+    assert loaded.converged == model.converged
+    assert loaded.history == model.history
+    assert (loaded.labels == model.labels).all()
+    np.testing.assert_array_equal(np.asarray(loaded.index.means_t),
+                                  np.asarray(model.index.means_t))
+    assert (np.asarray(loaded.index.moving)
+            == np.asarray(model.index.moving)).all()
+    assert int(loaded.params.t_th) == int(model.params.t_th)
+    assert (loaded.predict(docs) == model.predict(docs)).all()
+
+
+def test_model_load_rejects_non_model_checkpoint(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    d = str(tmp_path)
+    save_checkpoint(d, {"w": jnp.zeros((3,))}, step=0)
+    with pytest.raises(ValueError, match="fitted-model"):
+        FittedModel.load(d)
+
+
+# ---------------------------------------------------------------------------
+# One artifact, three runtimes.
+# ---------------------------------------------------------------------------
+
+def test_cross_runtime_parity(fitted):
+    """model.predict == ClusterEngine.from_model(model).classify ==
+    the distributed assign path on a 1-device mesh — one artifact, three
+    runtimes, identical assignments."""
+    from repro.distributed.kmeans import make_assign_fn
+
+    docs, df, km = fitted
+    model = km.model_
+
+    pred = model.predict(docs)
+    assert (pred == km.labels_).all()          # converged fixed point
+
+    engine = ClusterEngine.from_model(model)
+    served, sims = engine.classify(docs)
+    assert (served == pred).all()
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    n = docs.n_docs
+    chunk = 250
+    pad = (-n) % chunk
+    sh = lambda s: NamedSharding(mesh, s)
+    ids = jax.device_put(jnp.pad(docs.ids, ((0, pad), (0, 0))),
+                         sh(P(("data",), None)))
+    vals = jax.device_put(jnp.pad(docs.vals, ((0, pad), (0, 0))),
+                          sh(P(("data",), None)))
+    valid = jax.device_put(jnp.arange(n + pad) < n, sh(P(("data",))))
+    means_t = jax.device_put(model.index.means_t, sh(P(None, "model")))
+    assign_fn = make_assign_fn(mesh, k=model.k, obj_chunk=chunk)
+    mesh_assign, mesh_sims = assign_fn(ids, vals, valid, means_t,
+                                       model.params.t_th, model.params.v_th)
+    assert (np.asarray(mesh_assign)[:n] == pred).all()
+    np.testing.assert_allclose(np.asarray(mesh_sims)[:n], sims,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mesh_strategy_produces_same_artifact(small_corpus):
+    """ClusterConfig(mesh=...) drives the same estimator through the
+    distributed loop and yields an equivalent FittedModel."""
+    docs, df, perm, topics = small_corpus
+    single = SphericalKMeans(k=12, algo="esicp", max_iter=25, batch_size=500,
+                             seed=3).fit(docs, df=df)
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    dist = SphericalKMeans(k=12, algo="esicp", max_iter=25, chunk_size=125,
+                           mesh=mesh, seed=3).fit(docs, df=df)
+    assert dist.model_.strategy == "mesh"
+    assert single.model_.strategy == "single_host"
+    assert (dist.labels_ == single.labels_).all()
+    np.testing.assert_allclose(dist.model_.rho_self, single.model_.rho_self,
+                               rtol=1e-5, atol=1e-5)
+    # the artifacts are interchangeable across runtimes
+    assert (dist.model_.predict(docs) == single.model_.predict(docs)).all()
+
+
+def test_mesh_tail_padding_regression():
+    """N not a shard×chunk multiple: the distributed fit pads the object
+    arrays (ρ_self pad = 0, matching the core convention — not the old
+    -inf) and still reproduces the single-host clustering exactly, with a
+    finite valid-masked objective.  Mirrors the core tail-batch test."""
+    docs, df, perm, topics = make_corpus(
+        CorpusSpec(n_docs=300, vocab=256, nt_mean=20, n_topics=6, seed=13))
+    ref = SphericalKMeans(k=8, algo="mivi", max_iter=15, batch_size=128,
+                          seed=1).fit(docs, df=df)
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    # 2 data shards × chunk 64 → multiple 128; 300 % 128 = 44 → padded tail
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=15, chunk_size=64,
+                         mesh=mesh, seed=1).fit(docs, df=df)
+    assert km.converged_
+    assert len(km.labels_) == docs.n_docs
+    assert (km.labels_ == ref.labels_).all()
+    for h in km.history_:
+        assert np.isfinite(h["objective"])
+    np.testing.assert_allclose(km.history_[-1]["objective"],
+                               ref.history_[-1]["objective"], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old paths keep working and warn.
+# ---------------------------------------------------------------------------
+
+def test_fit_returns_estimator_and_legacy_result_attrs_warn(fitted):
+    docs, df, km = fitted
+    assert isinstance(km, SphericalKMeans)     # fit returned self
+
+    with pytest.warns(DeprecationWarning):
+        res = km.fit_result()
+    assert isinstance(res, LloydResult)
+    assert (res.assign == km.labels_).all()
+
+    with pytest.warns(DeprecationWarning):
+        legacy_assign = km.assign
+    assert (legacy_assign == km.labels_).all()
+    with pytest.warns(DeprecationWarning):
+        assert km.history == km.history_
+    with pytest.warns(DeprecationWarning):
+        assert km.n_iter == km.n_iter_
+    with pytest.warns(DeprecationWarning):
+        assert km.converged == km.converged_
+    with pytest.warns(DeprecationWarning):
+        assert km.objective == km.objective_
+    # ctor attrs are NOT shadowed by the legacy forwarding
+    assert km.params == "auto"
+    with pytest.raises(AttributeError):
+        km.no_such_attribute
+
+
+def test_dist_fit_shim_warns_and_matches(small_corpus):
+    from repro.distributed import dist_fit
+
+    docs, df, perm, topics = small_corpus
+    sub = docs.slice_rows(0, 512)
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=10, chunk_size=128,
+                         mesh=mesh, seed=2).fit(sub, df=df)
+    with pytest.warns(DeprecationWarning):
+        state, hist, conv = dist_fit(sub, 8, mesh, algo="esicp", max_iter=10,
+                                     obj_chunk=128, seed=2, df=df)
+    assert (np.asarray(state.assign)[:sub.n_docs] == km.labels_).all()
+
+
+def test_cluster_engine_index_ctor_warns_and_matches(fitted):
+    docs, df, km = fitted
+    model = km.model_
+    with pytest.warns(DeprecationWarning):
+        legacy = ClusterEngine(model.index, backend=model.backend)
+    modern = ClusterEngine.from_model(model)
+    a_legacy, _ = legacy.classify(docs)
+    a_modern, _ = modern.classify(docs)
+    assert (a_legacy == a_modern).all()
+
+
+def test_make_kmeans_shim_warns():
+    from benchmarks.common import make_kmeans
+
+    with pytest.warns(DeprecationWarning):
+        km = make_kmeans(4, max_iter=2)
+    assert isinstance(km, SphericalKMeans)
+
+
+# ---------------------------------------------------------------------------
+# Engine round trip + config validation.
+# ---------------------------------------------------------------------------
+
+def test_engine_to_model_closes_refit_loop(tmp_path, fitted):
+    """train → serve → refit → artifact → serve again, one noun throughout."""
+    docs, df, km = fitted
+    engine = ClusterEngine.from_model(km.model_)
+    assign, rho = engine.refit(docs)
+    model2 = engine.to_model()
+    assert (model2.labels == assign).all()
+    np.testing.assert_allclose(model2.rho_self, rho, rtol=1e-6)
+    path = str(tmp_path / "refit-model")
+    model2.save(path)
+    reloaded = FittedModel.load(path)
+    assert (ClusterEngine.from_model(reloaded).classify(docs)[0]
+            == assign).all()
+
+
+def test_facade_fit_and_config_validation(small_corpus):
+    docs, df, perm, topics = small_corpus
+    model = fit(docs, ClusterConfig(k=8, max_iter=8, batch_size=500, seed=1),
+                df=df)
+    assert isinstance(model, FittedModel)
+    assert model.k == 8
+    with pytest.raises(ValueError, match="algorithm"):
+        ClusterConfig(k=8, algo="nope").validate()
+    with pytest.raises(ValueError):
+        ClusterConfig(k=0).validate()
+    with pytest.raises(ValueError):
+        ClusterConfig(k=8, backend="cuda").validate()
+    assert ClusterConfig(k=8).strategy == "single_host"

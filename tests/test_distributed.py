@@ -8,8 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch.mesh import make_test_mesh
-from repro.core import SphericalKMeans
-from repro.distributed import dist_fit, reshard_state, StepWatchdog
+from repro.cluster import SphericalKMeans
+from repro.distributed import mesh_fit, reshard_state, StepWatchdog
 
 
 @pytest.fixture(scope="module")
@@ -20,15 +20,17 @@ def corpus_small():
 
 
 def test_dist_matches_single_device(corpus_small):
+    """mesh= routes the *same* estimator through the distributed loop."""
     docs, df, perm, topics = corpus_small
     mesh = make_test_mesh((4, 2), ("data", "model"))
     ref = SphericalKMeans(k=16, algo="mivi", max_iter=25, batch_size=512,
                           seed=5).fit(docs, df=df)
-    state, hist, conv = dist_fit(docs, 16, mesh, algo="esicp", max_iter=25,
-                                 obj_chunk=128, seed=5, df=df)
-    assert conv
-    assign = np.asarray(state.assign)[:docs.n_docs]
-    assert (assign == ref.assign).all()
+    km = SphericalKMeans(k=16, algo="esicp", max_iter=25, chunk_size=128,
+                         mesh=mesh, seed=5).fit(docs, df=df)
+    assert km.converged_
+    assert km.model_.strategy == "mesh"
+    assert len(km.labels_) == docs.n_docs
+    assert (km.labels_ == ref.labels_).all()
 
 
 def test_dist_multipod_axes(corpus_small):
@@ -36,17 +38,18 @@ def test_dist_multipod_axes(corpus_small):
     mesh3 = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
     ref = SphericalKMeans(k=16, algo="mivi", max_iter=20, batch_size=512,
                           seed=2).fit(docs, df=df)
-    state, hist, conv = dist_fit(docs, 16, mesh3, algo="esicp", max_iter=20,
-                                 obj_chunk=128, seed=2, df=df)
+    state, hist, conv, params = mesh_fit(docs, 16, mesh3, algo="esicp",
+                                         max_iter=20, obj_chunk=128, seed=2,
+                                         df=df)
     assign = np.asarray(state.assign)[:docs.n_docs]
-    assert (assign == ref.assign).all()
+    assert (assign == ref.labels_).all()
 
 
 def test_elastic_reshard(corpus_small):
     docs, df, perm, topics = corpus_small
     mesh_a = make_test_mesh((4, 2), ("data", "model"))
-    state, hist, _ = dist_fit(docs, 16, mesh_a, algo="esicp", max_iter=3,
-                              obj_chunk=128, seed=5, df=df)
+    state, hist, _, _ = mesh_fit(docs, 16, mesh_a, algo="esicp", max_iter=3,
+                                 obj_chunk=128, seed=5, df=df)
     # node failure: continue on a smaller mesh (2×2), same model axis width
     mesh_b = make_test_mesh((2, 2), ("data", "model"))
     state_b = reshard_state(state, mesh_b)
@@ -107,7 +110,7 @@ def test_assign_service_matches_core(corpus_small):
     docs, df, perm, topics = corpus_small
     fit = SphericalKMeans(k=16, algo="esicp", max_iter=8, batch_size=512,
                           seed=5).fit(docs, df=df)
-    idx = fit.state.index
+    idx = fit.state_.index
     mesh = make_test_mesh((4, 2), ("data", "model"))
     n = docs.n_docs
     pad = (-n) % (4 * 128)

@@ -12,7 +12,7 @@ def test_estimator_tracks_actual(small_corpus):
     docs, df, perm, topics = small_corpus
     warm = SphericalKMeans(k=24, algo="mivi", max_iter=3, batch_size=750,
                            seed=0).fit(docs, df=df)
-    state = warm.state
+    state = warm.state_
     grid = EstGrid(n_v=6, n_s=12)
     est, aux = estimate_params(docs, df, state.index.means_t, state.rho_self,
                                k=24, grid=grid)
@@ -39,10 +39,10 @@ def test_structural_params_regime(small_corpus):
     docs, df, perm, topics = small_corpus
     warm = SphericalKMeans(k=24, algo="mivi", max_iter=3, batch_size=750,
                            seed=0).fit(docs, df=df)
-    est, aux = estimate_params(docs, df, warm.state.index.means_t,
-                               warm.state.rho_self, k=24)
+    est, aux = estimate_params(docs, df, warm.state_.index.means_t,
+                               warm.state_.rho_self, k=24)
     assert int(est.t_th) >= int(0.8 * docs.dim)     # grid floor = int(0.80·D)
-    vals = warm.state.index.means_t[warm.state.index.means_t > 0]
+    vals = warm.state_.index.means_t[warm.state_.index.means_t > 0]
     assert float(est.v_th) <= float(jnp.max(vals))
     assert float(est.v_th) > 0
 
@@ -51,8 +51,8 @@ def test_j_table_components_nonnegative(small_corpus):
     docs, df, perm, topics = small_corpus
     warm = SphericalKMeans(k=24, algo="mivi", max_iter=2, batch_size=750,
                            seed=0).fit(docs, df=df)
-    _, aux = estimate_params(docs, df, warm.state.index.means_t,
-                             warm.state.rho_self, k=24,
+    _, aux = estimate_params(docs, df, warm.state_.index.means_t,
+                             warm.state_.rho_self, k=24,
                              grid=EstGrid(n_v=5, n_s=8))
     assert (np.asarray(aux["phi1"]) >= 0).all()
     assert (np.asarray(aux["phi2"]) >= 0).all()

@@ -25,31 +25,31 @@ def test_exactness(fitted, algo):
     docs, df, ref = fitted
     r = SphericalKMeans(k=24, algo=algo, max_iter=25, batch_size=750,
                         seed=3).fit(docs, df=df)
-    assert r.n_iter == ref.n_iter
-    assert (r.assign == ref.assign).all()
-    assert abs(r.objective - ref.objective) < 1e-3 * abs(ref.objective)
+    assert r.n_iter_ == ref.n_iter_
+    assert (r.labels_ == ref.labels_).all()
+    assert abs(r.objective_ - ref.objective_) < 1e-3 * abs(ref.objective_)
 
 
 def test_esicp_reduces_mult(fitted):
     docs, df, ref = fitted
     r = SphericalKMeans(k=24, algo="esicp", max_iter=25, batch_size=750,
                         seed=3).fit(docs, df=df)
-    total = lambda res: sum(h["mult"] for h in res.history)
+    total = lambda res: sum(h["mult"] for h in res.history_)
     assert total(r) < 0.7 * total(ref)
-    assert r.history[-1]["cpr"] < 0.25
+    assert r.history_[-1]["cpr"] < 0.25
 
 
 def test_objective_monotone(fitted):
     docs, df, ref = fitted
-    objs = [h["objective"] for h in ref.history]
+    objs = [h["objective"] for h in ref.history_]
     diffs = np.diff(objs)
     assert (diffs >= -1e-3 * abs(objs[0])).all(), "Lloyd objective decreased"
 
 
 def test_convergence_reached(fitted):
     _, _, ref = fitted
-    assert ref.converged
-    assert ref.history[-1]["n_changed"] == 0
+    assert ref.converged_
+    assert ref.history_[-1]["n_changed"] == 0
 
 
 def test_estparams_lands_in_tail(fitted):
@@ -57,5 +57,5 @@ def test_estparams_lands_in_tail(fitted):
     r = SphericalKMeans(k=24, algo="esicp", max_iter=6, batch_size=750,
                         seed=3).fit(docs, df=df)
     # paper: t_th close to D (≈ 0.9 D); our grid floor is 0.80 D
-    assert int(r.params.t_th) >= 0.5 * docs.dim
-    assert 0.0 < float(r.params.v_th) < 1.0
+    assert int(r.params_.t_th) >= 0.5 * docs.dim
+    assert 0.0 < float(r.params_.v_th) < 1.0
