@@ -64,5 +64,27 @@ def time_call(fn, *args, repeat: int = 3, **kw):
     return out, best
 
 
-def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
-    return f"{name},{us_per_call:.2f},{derived}"
+def time_call_warm(fn, *args, repeat: int = 3, **kw):
+    """Like :func:`time_call` but measures — and excludes — warmup.
+
+    The first call (compile + trace + cache population) is timed separately
+    and NOT eligible as the reported best, so per-case JSON rows record
+    steady-state kernel time with the one-off cost in a ``warmup`` field
+    instead of polluting ``us_per_call`` (the update_pallas 12.8 s/call vs
+    47 ms regression this fixes was exactly that pollution).
+
+    Returns (out, best_steady_seconds, warmup_seconds).
+    """
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    warmup = time.perf_counter() - t0
+    out, best = time_call(fn, *args, repeat=repeat, **kw)
+    return out, best, warmup
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "",
+            warmup_us: float | None = None) -> str:
+    """``name,us_per_call,derived[,warmup_us]`` — the optional 4th column
+    carries the per-case warmup (compile) time for JSON-emitting suites."""
+    row = f"{name},{us_per_call:.2f},{derived}"
+    return row if warmup_us is None else f"{row},{warmup_us:.2f}"

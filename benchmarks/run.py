@@ -36,15 +36,21 @@ JSON_SUITES = {"fused": "BENCH_fused_iteration.json"}
 
 
 def write_bench_json(rows, path: str) -> str:
-    """``name,us_per_call,derived`` CSV rows -> JSON perf-trajectory file.
+    """``name,us_per_call,derived[,warmup_us]`` CSV rows -> JSON file.
 
-    The derived column of JSON-emitting suites carries the backend name.
+    The derived column of JSON-emitting suites carries the backend name;
+    the optional 4th column is the per-case warmup (compile/trace) time,
+    recorded as a ``warmup_us`` field so steady-state ``us_per_call`` is
+    never conflated with one-off compilation again.
     """
     entries = []
     for row in rows:
-        name, us, derived = row.split(",", 2)
-        entries.append({"name": name, "us_per_call": float(us),
-                        "backend": derived})
+        name, us, rest = row.split(",", 2)
+        derived, _, warmup = rest.partition(",")
+        entry = {"name": name, "us_per_call": float(us), "backend": derived}
+        if warmup:
+            entry["warmup_us"] = float(warmup)
+        entries.append(entry)
     with open(path, "w") as f:
         json.dump(entries, f, indent=2)
         f.write("\n")

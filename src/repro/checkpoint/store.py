@@ -156,13 +156,18 @@ class AsyncCheckpointer:
             err, self._error = self._error, None
             raise err
 
-    def save(self, tree, *, step: int):
+    def save(self, tree, *, step: int, extra: dict | None = None):
+        """``extra`` rides the same commit as the payload (see
+        :func:`save_checkpoint`) — e.g. the streaming fit's resume cursor
+        sidecar — snapshotted here so later caller mutation can't tear it."""
         self.wait()                       # one in-flight save max
         host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+        extra = None if extra is None else dict(extra)
 
         def work():
             try:
-                save_checkpoint(self.directory, host_tree, step=step, keep=self.keep)
+                save_checkpoint(self.directory, host_tree, step=step,
+                                keep=self.keep, extra=extra)
             except BaseException as e:    # surfaced on next wait()
                 self._error = e
 

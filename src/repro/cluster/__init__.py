@@ -30,7 +30,8 @@ from repro.cluster.classify import classify_docs, transform_docs
 from repro.cluster.model import FittedModel, load_model
 from repro.cluster.estimator import SphericalKMeans
 from repro.cluster.strategies import (STRATEGIES, MeshStrategy,
-                                      SingleHostStrategy, resolve_strategy)
+                                      SingleHostStrategy, StreamingStrategy,
+                                      resolve_strategy)
 from repro.serve.engine import ClusterEngine
 
 
@@ -47,6 +48,7 @@ __all__ = [
     "STRATEGIES",
     "SingleHostStrategy",
     "SphericalKMeans",
+    "StreamingStrategy",
     "classify_docs",
     "fit",
     "load_model",

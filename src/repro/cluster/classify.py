@@ -61,10 +61,45 @@ def _transform_fused(backend: str, ids, vals, nnz, dim: int, index, bs: int):
     return s.reshape(n, -1)
 
 
+def _store_tiles(store, batch_size: int):
+    """(tile size, per-chunk padder) for scanning a store's (C, P) chunks —
+    the SAME tile policy as the streaming fit (core/lloyd._tile_bs): an
+    unaligned chunk is padded with dead rows (inert by the ρ_self = 0
+    convention) rather than shrinking the tile, and callers trim per-chunk
+    outputs back to C."""
+    from repro.core.lloyd import _tile_bs
+    from repro.sparse import pad_rows
+
+    bs = _tile_bs(store.chunk_size, batch_size)
+    padder = ((lambda d: pad_rows(d, bs)) if store.chunk_size % bs
+              else (lambda d: d))
+    return bs, padder
+
+
 def classify_docs(index, docs, *, backend: str = "auto",
                   batch_size: int = 4096):
-    """docs vs a frozen MeanIndex -> (assign (N,) int32, sims (N,) float32)."""
+    """docs vs a frozen MeanIndex -> (assign (N,) int32, sims (N,) float32).
+
+    ``docs`` may be a resident SparseDocs or an out-of-core DocStore: store
+    chunks stream through the double-buffered prefetcher and the SAME fused
+    per-chunk epoch, so serving stays chunk-for-chunk identical to the
+    resident path (parity-tested).
+    """
     from repro.sparse import pad_rows
+    from repro.sparse.store import ChunkPrefetcher, DocStore
+
+    if isinstance(docs, DocStore):
+        store = docs
+        bs, padder = _store_tiles(store, batch_size)
+        parts_a, parts_s = [], []
+        for ci, cdocs in ChunkPrefetcher(store):
+            cdocs = padder(cdocs)
+            a, s = _classify_fused(backend, cdocs.ids, cdocs.vals, cdocs.nnz,
+                                   store.dim, index, bs)
+            parts_a.append(np.asarray(a)[:store.chunk_size])
+            parts_s.append(np.asarray(s)[:store.chunk_size])
+        return (np.concatenate(parts_a)[:store.n_docs],
+                np.concatenate(parts_s)[:store.n_docs])
 
     n = docs.n_docs
     if n == 0:
@@ -78,8 +113,22 @@ def classify_docs(index, docs, *, backend: str = "auto",
 
 def transform_docs(index, docs, *, backend: str = "auto",
                    batch_size: int = 4096):
-    """docs vs a frozen MeanIndex -> dense (N, K) cosine similarities."""
+    """docs vs a frozen MeanIndex -> dense (N, K) cosine similarities.
+
+    Accepts a DocStore like :func:`classify_docs` (chunk-streamed)."""
     from repro.sparse import pad_rows
+    from repro.sparse.store import ChunkPrefetcher, DocStore
+
+    if isinstance(docs, DocStore):
+        store = docs
+        bs, padder = _store_tiles(store, batch_size)
+        parts = []
+        for ci, cdocs in ChunkPrefetcher(store):
+            cdocs = padder(cdocs)
+            parts.append(np.asarray(_transform_fused(
+                backend, cdocs.ids, cdocs.vals, cdocs.nnz, store.dim,
+                index, bs))[:store.chunk_size])
+        return np.concatenate(parts)[:store.n_docs]
 
     n = docs.n_docs
     if n == 0:

@@ -22,20 +22,25 @@ class ClusterConfig:
 
     k:          number of clusters.
     algo:       'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'.
+    algo_mode:  'full' (exact Lloyd, the paper's setting) | 'minibatch'
+                (Sculley-style streaming updates over DocStore chunks —
+                always runs on the 'streaming' strategy).
     backend:    'reference' | 'pallas' | 'auto' — accumulator engine for
                 assignment AND update (core/backends.py).
     params:     'auto' (EstParams at ``est_iters``, the paper's default),
                 a StructuralParams for fixed thresholds, or None (trivial).
-    batch_size: single-host fused-epoch batch (rows per ``lax.map`` step).
-    chunk_size: mesh runtime per-shard object chunk (the software-pipelining
-                knob; ``obj_chunk`` in distributed/kmeans.py).
+    batch_size: single-host fused-epoch batch (rows per scan tile).
+    chunk_size: object-chunk rows: per-shard chunk on the mesh runtime
+                (``obj_chunk`` in distributed/kmeans.py) and the DocStore
+                chunk when the streaming strategy wraps resident docs.
     est_grid:   EstParams candidate grid (None -> EstGrid()).
     est_iters:  iterations that re-estimate (t_th, v_th).
     seed:       centroid-seeding PRNG seed.
     mesh:       optional jax Mesh — set it and the *same* estimator runs
                 through the distributed loop (the 'mesh' strategy).
-    checkpoint_dir/checkpoint_every: optional fault-tolerant checkpointing
-                for long mesh fits (checkpoint/store.py).
+    checkpoint_dir/checkpoint_every: optional fault-tolerant checkpointing:
+                every N iterations on the mesh runtime, every N chunks
+                (mid-epoch, resumable) on the streaming runtime.
     """
 
     k: int
@@ -49,6 +54,7 @@ class ClusterConfig:
     est_iters: tuple = (1, 2)
     seed: int = 0
     mesh: Any = None
+    algo_mode: str = "full"
     checkpoint_dir: str | None = None
     checkpoint_every: int = 5
 
@@ -57,8 +63,13 @@ class ClusterConfig:
 
     @property
     def strategy(self) -> str:
-        """Execution-strategy name this config resolves to."""
-        return "mesh" if self.mesh is not None else "single_host"
+        """Execution-strategy name this config resolves to.  A DocStore
+        input additionally promotes 'single_host' to 'streaming' at
+        ``resolve_strategy`` time (the data's residency, not the config,
+        decides)."""
+        if self.mesh is not None:
+            return "mesh"
+        return "streaming" if self.algo_mode == "minibatch" else "single_host"
 
     def replace(self, **changes) -> ClusterConfig:
         return dataclasses.replace(self, **changes)
@@ -81,6 +92,13 @@ class ClusterConfig:
                 f"got {self.params!r}")
         if self.batch_size < 1 or self.chunk_size < 1 or self.max_iter < 1:
             raise ValueError("batch_size, chunk_size, max_iter must be >= 1")
+        if self.algo_mode not in ("full", "minibatch"):
+            raise ValueError(f"algo_mode must be 'full' or 'minibatch', "
+                             f"got {self.algo_mode!r}")
+        if self.algo_mode == "minibatch" and self.mesh is not None:
+            raise ValueError(
+                "algo_mode='minibatch' runs on the streaming strategy; "
+                "it cannot be combined with mesh=")
         if self.mesh is not None:
             # The shard-local step implements the shared-bound algorithms
             # only (distributed/kmeans.py); fail here, not deep inside

@@ -66,7 +66,8 @@ class SphericalKMeans:
                  backend: str = "reference", batch_size: int = 4096,
                  max_iter: int = 60, est_grid: EstGrid | None = None,
                  est_iters=(1, 2), seed: int = 0, mesh=None,
-                 chunk_size: int = 1024, checkpoint_dir: str | None = None,
+                 chunk_size: int = 1024, algo_mode: str = "full",
+                 checkpoint_dir: str | None = None,
                  checkpoint_every: int = 5):
         self.k = k
         self.algo = algo
@@ -79,6 +80,7 @@ class SphericalKMeans:
         self.seed = seed
         self.mesh = mesh
         self.chunk_size = chunk_size
+        self.algo_mode = algo_mode
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
 
@@ -92,7 +94,7 @@ class SphericalKMeans:
             params=self.params, batch_size=self.batch_size,
             chunk_size=self.chunk_size, max_iter=self.max_iter,
             est_grid=self.est_grid, est_iters=self.est_iters,
-            seed=self.seed, mesh=self.mesh,
+            seed=self.seed, mesh=self.mesh, algo_mode=self.algo_mode,
             checkpoint_dir=self.checkpoint_dir,
             checkpoint_every=self.checkpoint_every)
 
@@ -103,14 +105,18 @@ class SphericalKMeans:
                    max_iter=config.max_iter, est_grid=config.est_grid,
                    est_iters=config.est_iters, seed=config.seed,
                    mesh=config.mesh, chunk_size=config.chunk_size,
+                   algo_mode=config.algo_mode,
                    checkpoint_dir=config.checkpoint_dir,
                    checkpoint_every=config.checkpoint_every)
 
     # -- the estimator surface ---------------------------------------------
     def fit(self, docs, df=None) -> SphericalKMeans:
-        """Cluster ``docs``; returns ``self`` (sklearn contract)."""
+        """Cluster ``docs`` — a resident :class:`repro.sparse.SparseDocs`
+        OR an out-of-core :class:`repro.sparse.DocStore` (which routes the
+        fit through the streaming strategy); returns ``self`` (sklearn
+        contract)."""
         cfg = self.config.validate()
-        strategy = resolve_strategy(cfg)
+        strategy = resolve_strategy(cfg, docs)
         result = strategy.fit(docs, cfg, df=df)
         self._fit_result = result
         self.model_ = FittedModel(
@@ -123,6 +129,7 @@ class SphericalKMeans:
             algo=cfg.algo,
             backend=resolve_backend(cfg.backend).name,
             strategy=strategy.name,
+            cursor=getattr(result, "cursor", None),
         )
         self.labels_ = self.model_.labels
         self.history_ = self.model_.history

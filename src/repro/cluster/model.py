@@ -38,6 +38,10 @@ class FittedModel:
     history:  per-iteration diagnostics (mult, cpr, n_changed, objective, …).
     algo/backend/strategy: provenance — which algorithm, accumulator engine,
               and execution runtime produced the artifact.
+    cursor:   streaming fits only — (next_epoch, next_chunk) where a
+              resumed fit would continue; None for converged/resident
+              fits.  A non-None cursor marks a usable-but-unconverged
+              artifact (e.g. a max_iter-capped streaming fit).
     """
 
     index: MeanIndex
@@ -51,6 +55,7 @@ class FittedModel:
     algo: str = "esicp"
     backend: str = "auto"
     strategy: str = "single_host"
+    cursor: tuple | None = None
 
     # -- derived -----------------------------------------------------------
     @property
@@ -113,6 +118,7 @@ class FittedModel:
             "converged": bool(self.converged),
             "n_iter": int(self.n_iter),
             "history": self.history,
+            "cursor": None if self.cursor is None else list(self.cursor),
         }
         # keep=None: an artifact writer must never garbage-collect other
         # steps sharing the directory (e.g. a fit's training checkpoints).
@@ -148,7 +154,9 @@ class FittedModel:
                    n_iter=extra["n_iter"],
                    algo=extra["algo"],
                    backend=extra["backend"],
-                   strategy=extra["strategy"])
+                   strategy=extra["strategy"],
+                   cursor=(None if extra.get("cursor") is None
+                           else tuple(extra["cursor"])))
 
 
 def load_model(directory: str, *, step: int | None = None) -> FittedModel:

@@ -1,19 +1,27 @@
 """Pluggable execution strategies: one estimator, several runtimes.
 
 A strategy turns (docs, ClusterConfig) into a :class:`LloydResult`; the
-estimator wraps that into the :class:`FittedModel` artifact.  Both built-in
-strategies run the *same* algorithm and the *same* backend accumulators
+estimator wraps that into the :class:`FittedModel` artifact.  Every built-in
+strategy runs the *same* algorithm and the *same* backend accumulators
 (core/backends.py) — they differ only in where the arrays live:
 
 ``single_host``
     The fused on-device Lloyd fit (core/lloyd.py): one jitted while_loop,
-    O(1) host syncs per fit.
+    O(1) host syncs per fit.  Requires the corpus resident on device.
+
+``streaming``
+    The out-of-core chunk-scan fit (core/lloyd.streaming_fit) over a
+    :class:`repro.sparse.DocStore`: chunks stream host→device through the
+    double-buffered prefetcher, O(1) host syncs per epoch, resumable from
+    mid-epoch checkpoints.  Selected by passing a DocStore to ``fit`` or
+    by ``ClusterConfig(algo_mode='minibatch')``.
 
 ``mesh``
     The pod-mesh loop (distributed/kmeans.py): objects sharded over the
     object axes, the mean-inverted index over 'model', shard-local
     accumulators from the shared backend protocol, one (max, argmin-id)
-    all-reduce per assignment.  Selected by ``ClusterConfig(mesh=...)``.
+    all-reduce per assignment.  Selected by ``ClusterConfig(mesh=...)``;
+    also accepts a DocStore (chunks stream into the sharded object arrays).
 
 The registry is open: registering a new runtime (e.g. multi-pod pipelined,
 async parameter-server) is one class with a ``fit`` method — no new front
@@ -26,9 +34,10 @@ from typing import Protocol
 import numpy as np
 
 from repro.cluster.config import ClusterConfig
-from repro.core.lloyd import LloydResult, lloyd_fit
+from repro.core.lloyd import LloydResult, lloyd_fit, streaming_fit
 from repro.core.meanindex import build_mean_index
 from repro.core.update import KMeansState
+from repro.sparse.store import DocStore, as_store
 
 
 class Strategy(Protocol):
@@ -48,6 +57,28 @@ class SingleHostStrategy:
             params=config.params, batch_size=config.batch_size,
             max_iter=config.max_iter, est_grid=config.est_grid,
             est_iters=config.est_iters, seed=config.seed, df=df)
+
+
+class StreamingStrategy:
+    """The out-of-core chunk-scan fit over a DocStore (DESIGN.md §10).
+
+    Resident SparseDocs are wrapped as an in-memory store
+    (``config.chunk_size`` rows per chunk) — which is how
+    ``algo_mode='minibatch'`` runs on ordinary corpora too.
+    """
+
+    name = "streaming"
+
+    def fit(self, docs, config: ClusterConfig, df=None) -> LloydResult:
+        store = as_store(docs, chunk_size=config.chunk_size)
+        return streaming_fit(
+            store, k=config.k, algo=config.algo, backend=config.backend,
+            params=config.params, algo_mode=config.algo_mode,
+            batch_size=config.batch_size, max_iter=config.max_iter,
+            est_grid=config.est_grid, est_iters=config.est_iters,
+            seed=config.seed, df=df,
+            checkpoint_dir=config.checkpoint_dir,
+            checkpoint_every=config.checkpoint_every)
 
 
 class MeshStrategy:
@@ -94,10 +125,25 @@ class MeshStrategy:
 
 STRATEGIES: dict[str, Strategy] = {
     "single_host": SingleHostStrategy(),
+    "streaming": StreamingStrategy(),
     "mesh": MeshStrategy(),
 }
 
 
-def resolve_strategy(config: ClusterConfig) -> Strategy:
-    """ClusterConfig -> the strategy its ``mesh`` field selects."""
-    return STRATEGIES[config.strategy]
+def resolve_strategy(config: ClusterConfig, docs=None) -> Strategy:
+    """(ClusterConfig, optional input corpus) -> execution strategy.
+
+    The config picks the name (``mesh=`` → 'mesh', ``algo_mode='minibatch'``
+    → 'streaming', else 'single_host'); an out-of-core :class:`DocStore`
+    input promotes 'single_host' to 'streaming', since the fused resident
+    fit cannot hold the corpus on device.
+    """
+    name = config.strategy
+    if name == "single_host" and isinstance(docs, DocStore):
+        name = "streaming"
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown execution strategy {name!r}; "
+            f"valid strategies: {sorted(STRATEGIES)}") from None

@@ -79,14 +79,9 @@ def _phi3_chunk(ids, vals, nnz, dvbar, colsum, rho_a, s_grid, *, k: int):
     return jnp.sum(nt_h[:, :, None] * factor, axis=0)    # (S', H)
 
 
-def estimate_params(docs: SparseDocs, df: jax.Array, means_t: jax.Array,
-                    rho_self: jax.Array, *, k: int,
-                    grid: EstGrid = EstGrid()) -> tuple[StructuralParams, dict]:
-    """Returns the minimising (t_th, v_th) and an aux dict with the J table.
-
-    rho_self: (N,) ρ_{a(i)} against the current means — the update step's
-    refreshed self-similarities (Alg. 6), exactly what Alg. 7 consumes.
-    """
+def _est_tables(df: jax.Array, means_t: jax.Array, grid: EstGrid):
+    """The corpus-independent half of Alg. 7: candidate grids + φ1/φ2 from
+    the df/mean statistics, and the per-term tables φ̃3 consumes."""
     d = means_t.shape[0]
     s_min = int(grid.s_min_frac * d)
     s_grid = jnp.unique(jnp.linspace(s_min, d, grid.n_s).astype(jnp.int32))
@@ -105,17 +100,12 @@ def estimate_params(docs: SparseDocs, df: jax.Array, means_t: jax.Array,
     sfx = jnp.concatenate([sfx, jnp.zeros((1, len(v_grid)))], axis=0)
     phi2 = sfx[s_grid]                                     # (S', H)
 
-    # φ̃3: chunked over objects
     dvbar = delta_v_bar(means_t, v_grid)                   # (D, H)
     colsum = jnp.sum(means_t, axis=1)                      # (D,)
-    n = docs.n_docs
-    phi3 = jnp.zeros((len(s_grid), len(v_grid)))
-    for start in range(0, n, grid.chunk):
-        end = min(start + grid.chunk, n)
-        phi3 = phi3 + _phi3_chunk(docs.ids[start:end], docs.vals[start:end],
-                                  docs.nnz[start:end], dvbar, colsum,
-                                  rho_self[start:end], s_grid, k=k)
+    return s_grid, v_grid, phi1, phi2, dvbar, colsum
 
+
+def _est_minimize(s_grid, v_grid, phi1, phi2, phi3):
     j_table = phi1[:, None] + phi2 + phi3
     flat = int(jnp.argmin(j_table))
     si, hi = np.unravel_index(flat, j_table.shape)
@@ -124,3 +114,57 @@ def estimate_params(docs: SparseDocs, df: jax.Array, means_t: jax.Array,
     aux = {"J": j_table, "s_grid": s_grid, "v_grid": v_grid,
            "phi1": phi1, "phi2": phi2, "phi3": phi3}
     return params, aux
+
+
+def estimate_params(docs: SparseDocs, df: jax.Array, means_t: jax.Array,
+                    rho_self: jax.Array, *, k: int,
+                    grid: EstGrid = EstGrid()) -> tuple[StructuralParams, dict]:
+    """Returns the minimising (t_th, v_th) and an aux dict with the J table.
+
+    rho_self: (N,) ρ_{a(i)} against the current means — the update step's
+    refreshed self-similarities (Alg. 6), exactly what Alg. 7 consumes.
+    """
+    s_grid, v_grid, phi1, phi2, dvbar, colsum = _est_tables(df, means_t, grid)
+
+    # φ̃3: chunked over objects
+    n = docs.n_docs
+    phi3 = jnp.zeros((len(s_grid), len(v_grid)))
+    for start in range(0, n, grid.chunk):
+        end = min(start + grid.chunk, n)
+        phi3 = phi3 + _phi3_chunk(docs.ids[start:end], docs.vals[start:end],
+                                  docs.nnz[start:end], dvbar, colsum,
+                                  rho_self[start:end], s_grid, k=k)
+
+    return _est_minimize(s_grid, v_grid, phi1, phi2, phi3)
+
+
+def estimate_params_store(store, df: jax.Array, means_t: jax.Array,
+                          rho_self: jax.Array, *, k: int,
+                          grid: EstGrid = EstGrid()):
+    """Alg. 7 over an out-of-core :class:`repro.sparse.DocStore`.
+
+    φ1/φ2 need only the df/mean statistics; φ̃3 — already an object-chunked
+    sum in the resident path — accumulates store chunk by store chunk, so
+    the estimate uses the ENTIRE corpus without it ever being resident.
+    Dead tail rows contribute exactly 0 (no live tuples ⇒ zero suffix sums
+    and (ntH) = 0), so whole chunks are fed as-is.  A one-chunk store
+    reproduces :func:`estimate_params` on the resident corpus bit for bit.
+
+    rho_self: (store.n_rows,) — the streaming fit's refreshed ρ, pad rows
+    at the 0 convention.
+    """
+    s_grid, v_grid, phi1, phi2, dvbar, colsum = _est_tables(df, means_t, grid)
+
+    c = store.chunk_size
+    phi3 = jnp.zeros((len(s_grid), len(v_grid)))
+    for ci in range(store.n_chunks):
+        cdocs = store.chunk(ci)
+        rho_c = rho_self[ci * c:(ci + 1) * c]
+        for start in range(0, c, grid.chunk):
+            end = min(start + grid.chunk, c)
+            phi3 = phi3 + _phi3_chunk(cdocs.ids[start:end],
+                                      cdocs.vals[start:end],
+                                      cdocs.nnz[start:end], dvbar, colsum,
+                                      rho_c[start:end], s_grid, k=k)
+
+    return _est_minimize(s_grid, v_grid, phi1, phi2, phi3)

@@ -33,9 +33,12 @@ import numpy as np
 from jax import lax
 
 from repro.sparse import SparseDocs, pad_rows
-from repro.core.meanindex import StructuralParams
+from repro.core.backends import resolve_backend
+from repro.core.meanindex import (StructuralParams, build_mean_index,
+                                  normalized_means)
 from repro.core.assignment import assign_batch
-from repro.core.update import update_step, init_state, KMeansState
+from repro.core.update import (KMeansState, init_state, init_state_from_store,
+                               moving_flags, update_step)
 from repro.core.estparams import estimate_params, EstGrid
 
 # Single host-sync points — module-level so tests can wrap them and count
@@ -46,11 +49,14 @@ _host_pull = jax.device_get
 @partial(jax.jit, static_argnames=("algo", "backend", "bs"))
 def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
                  assign, rho_self, xstate, valid, bs: int):
-    """One full assignment epoch, on device.
+    """One full assignment epoch over a resident slab, on device.
 
-    Returns (assign (N,), mult (), cand_sum (), n_changed ()) — the
-    per-batch Python loop and its per-batch host syncs collapse into a
-    single ``lax.map`` whose scalar diagnostics are reduced on device.
+    A chunk-scan: ``lax.scan`` over ``bs``-row tiles whose *carry* is the
+    scalar diagnostic accumulators (Mult, |Z| sum, #changed) and whose
+    stacked output is the per-tile assignment — no per-batch host syncs,
+    and no (nb,)-shaped diagnostic intermediates to reduce afterwards.
+    The same scan body serves every tile (uniform shapes), which is what
+    lets the streaming fit reuse this function per DocStore chunk.
     (Per-object ρ is not returned: the update step refreshes ρ_self against
     the *new* means anyway.)
     """
@@ -58,18 +64,23 @@ def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
     nb = n // bs
     resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
 
-    def batch_fn(args):
-        bids, bvals, bnnz, bassign, brho, bxs, bvalid = args
+    def tile_fn(carry, xs):
+        bids, bvals, bnnz, bassign, brho, bxs, bvalid = xs
         bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=docs.dim)
         res = assign_batch(algo, backend, bdocs, index, bassign, brho, bxs)
-        cand = jnp.where(bvalid, res.n_candidates, 0)
-        changed = res.changed & bvalid
-        return (res.assign, jnp.sum(cand), jnp.sum(changed), res.mult)
+        mult, cand, changed = carry
+        carry = (mult + res.mult,
+                 cand + jnp.sum(jnp.where(bvalid, res.n_candidates, 0)),
+                 changed + jnp.sum(res.changed & bvalid))
+        return carry, res.assign
 
-    a, cand, changed, mult = lax.map(
-        batch_fn, (resh(docs.ids), resh(docs.vals), resh(docs.nnz),
-                   resh(assign), resh(rho_self), resh(xstate), resh(valid)))
-    return a.reshape(n), jnp.sum(mult), jnp.sum(cand), jnp.sum(changed)
+    carry0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+              jnp.zeros((), jnp.int32))
+    (mult, cand, changed), a = lax.scan(
+        tile_fn, carry0,
+        (resh(docs.ids), resh(docs.vals), resh(docs.nnz),
+         resh(assign), resh(rho_self), resh(xstate), resh(valid)))
+    return a.reshape(n), mult, cand, changed
 
 
 def _device_iteration(algo, backend, docs, state, valid, *, bs, k):
@@ -155,6 +166,9 @@ class LloydResult:
     params: StructuralParams
     converged: bool
     n_iter: int
+    # Streaming fits only: (next_epoch, next_chunk) where a resumed fit
+    # would continue — None for converged / resident fits.
+    cursor: tuple | None = None
 
     @property
     def objective(self) -> float:
@@ -306,6 +320,392 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
         params=state.index.params,
         converged=converged,
         n_iter=len(history),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming (out-of-core) fit over a DocStore — DESIGN.md §10.
+#
+# The corpus never becomes one resident (N, P) array: each epoch is a
+# chunk-scan over the store's uniform (C, P) chunks, fed by the async
+# double-buffered prefetcher.  Only the small per-document state (assign,
+# ρ_self, ρ_prev — one scalar each) and the (K, D) accumulators stay on
+# device.  Host-sync discipline: every per-chunk call is an async dispatch;
+# the ONE `_host_pull` per epoch reads the epoch diagnostics + convergence
+# flag (O(1) syncs per epoch — the streaming analogue of §8's O(1) per fit,
+# and the floor once the host must feed chunks).
+# ---------------------------------------------------------------------------
+
+STREAM_CKPT_FORMAT = "repro.cluster/stream-ckpt-v1"
+
+
+def _tile_bs(chunk_size: int, batch_size: int) -> int:
+    """Tile size for scanning a (C, P) chunk: min(batch_size, C).  When the
+    chunk is not a tile multiple, the chunk STEPS pad it with dead rows
+    (ρ_self = 0 convention, valid-masked) rather than shrinking the tile —
+    a prime chunk_size must not silently degrade into a per-row scan."""
+    return max(min(batch_size, chunk_size), 1)
+
+
+def _pad_chunk(cdocs: SparseDocs, extras: tuple, bs: int):
+    """Pad a chunk (and its per-row companions) to a ``bs`` row multiple
+    with dead rows; no-op when already aligned.  Static shapes only, so
+    this folds into the jitted chunk step."""
+    c = cdocs.ids.shape[0]
+    pad = (-c) % bs
+    if pad == 0:
+        return cdocs, extras
+    return (pad_rows(cdocs, bs),
+            tuple(jnp.pad(e, (0, pad)) for e in extras))
+
+
+# One jitted slice-writer shared by every per-document array update: `start`
+# is traced, so all chunks of a fit share a single compiled program.
+_set_slice = jax.jit(
+    lambda buf, val, start: lax.dynamic_update_slice_in_dim(buf, val, start, 0))
+
+
+@partial(jax.jit, static_argnames=("algo", "backend", "bs", "k"))
+def _stream_chunk_step(algo: str, backend: str, cdocs: SparseDocs, index,
+                       a_c, rho_c, xs_c, valid_c, lam, mult, cand, changed,
+                       *, bs: int, k: int):
+    """Full-batch streaming: one chunk's share of the epoch.
+
+    Runs the identical chunk-scan `_fused_epoch` on the (C, P) tile and
+    folds the chunk's cluster sums into the epoch λ accumulator via the
+    backend (``init=`` is the chunked-caller hook on
+    ``Backend.accumulate_means``).  One chunk == the whole corpus is the
+    resident ``update_step`` bit for bit (parity-tested)."""
+    n_c = cdocs.ids.shape[0]
+    cdocs, (a_c, rho_c, xs_c, valid_c) = _pad_chunk(
+        cdocs, (a_c, rho_c, xs_c, valid_c), bs)
+    a_new, m, c, ch = _fused_epoch(algo, backend, cdocs, index, a_c, rho_c,
+                                   xs_c, valid_c, bs)
+    mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
+    bk = resolve_backend(backend)
+    lam = bk.accumulate_means(cdocs.ids, mvals, a_new, k=k, dim=cdocs.dim,
+                              init=lam)
+    return a_new[:n_c], lam, mult + m, cand + c, changed + ch
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _stream_update_index(lam, means_t_prev, assign, prev_assign, params, *,
+                         k: int):
+    """Epoch finalize: λ → unit means → fresh index + exact ICP flags (the
+    non-chunked half of ``update_step``)."""
+    means = normalized_means(lam, means_t_prev)
+    return build_mean_index(means, params,
+                            moving=moving_flags(assign, prev_assign, k))
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _stream_rho_chunk(backend: str, cdocs: SparseDocs, a_c, means_t):
+    """ρ_self refresh for one chunk vs the NEW means (Alg. 6 lines 6–7) —
+    row-independent, so the chunked refresh equals the resident one."""
+    bk = resolve_backend(backend)
+    mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
+    return bk.self_sims(cdocs.ids, mvals, a_c, means_t)
+
+
+@partial(jax.jit, static_argnames=("backend", "bs", "k"))
+def _stream_minibatch_chunk(backend: str, cdocs: SparseDocs, index, a_old,
+                            valid_c, m_mean, counts, *, bs: int, k: int):
+    """Sculley-style mini-batch step on one chunk.
+
+    Exact nearest-centroid assignment (the shared classify accumulators),
+    then per-center running means with per-center counts: applying the
+    per-sample rule c ← (1−η)c + ηx, η = 1/N_c, over a batch telescopes to
+
+        M_j ← (N_j·M_j + Σ_{x∈chunk, a(x)=j} x) / (N_j + n_j)
+
+    — the batched form reuses ``Backend.accumulate_means`` for the sums.
+    Centers the chunk never touched keep their running mean; the served
+    index is the L2-projection of M onto the unit sphere."""
+    bk = resolve_backend(backend)
+    n_c = cdocs.ids.shape[0]
+    cdocs, (a_old, valid_c) = _pad_chunk(cdocs, (a_old, valid_c), bs)
+    c = cdocs.ids.shape[0]
+    nb = c // bs
+    resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
+
+    def tile(carry, xs):
+        bids, bvals, bnnz = xs
+        bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=cdocs.dim)
+        sims = bk.accumulate(bdocs, index, jnp.zeros((bs,), bool),
+                             mode="exact", diag=False)["sims"]
+        return carry, jnp.argmax(sims, axis=1).astype(jnp.int32)
+
+    _, a = lax.scan(tile, 0,
+                    (resh(cdocs.ids), resh(cdocs.vals), resh(cdocs.nnz)))
+    a = a.reshape(c)
+    a = jnp.where(valid_c, a, k)            # dead rows select no centroid
+    changed = jnp.sum((a != a_old) & valid_c)
+    mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
+    sums = bk.accumulate_means(cdocs.ids, mvals, a, k=k, dim=cdocs.dim)
+    n_j = jnp.zeros((k,), jnp.float32).at[a].add(
+        jnp.where(valid_c, 1.0, 0.0))       # a == k scatters are dropped
+    new_counts = counts + n_j
+    upd = (counts[:, None] * m_mean + sums) \
+        / jnp.maximum(new_counts[:, None], 1.0)
+    m_mean = jnp.where((n_j > 0)[:, None], upd, m_mean)
+    norms = jnp.sqrt(jnp.sum(m_mean**2, axis=1, keepdims=True))
+    index_new = build_mean_index(m_mean / jnp.maximum(norms, 1e-12),
+                                 index.params)
+    return a[:n_c], changed, m_mean, new_counts, index_new
+
+
+def _stream_ckpt_save(directory, *, step, state, lam, mult, cand, changed,
+                      assign_work, m_mean, counts, cursor, history,
+                      algo_mode):
+    from repro.checkpoint.store import save_checkpoint
+
+    tree = {
+        "assign": state.assign, "rho_self": state.rho_self,
+        "rho_prev": state.rho_self_prev, "iteration": state.iteration,
+        "means_t": state.index.means_t, "moving": state.index.moving,
+        "t_th": state.index.params.t_th, "v_th": state.index.params.v_th,
+        "lam": lam, "mult": mult, "cand": cand, "changed": changed,
+        "assign_work": assign_work, "m_mean": m_mean, "counts": counts,
+    }
+    save_checkpoint(directory, tree, step=step,
+                    extra={"format": STREAM_CKPT_FORMAT,
+                           "cursor": list(cursor), "history": history,
+                           "algo_mode": algo_mode})
+
+
+def _stream_ckpt_restore(directory, *, n_rows, k, dim):
+    from repro.checkpoint.store import load_extra, restore_checkpoint
+
+    extra = load_extra(directory)
+    if not extra or extra.get("format") != STREAM_CKPT_FORMAT:
+        raise ValueError(f"{directory} holds no {STREAM_CKPT_FORMAT} "
+                         f"checkpoint (found "
+                         f"{extra.get('format') if extra else None!r})")
+    example = {
+        "assign": np.zeros((n_rows,), np.int32),
+        "rho_self": np.zeros((n_rows,), np.float32),
+        "rho_prev": np.zeros((n_rows,), np.float32),
+        "iteration": np.asarray(0, np.int32),
+        "means_t": np.zeros((dim, k), np.float32),
+        "moving": np.zeros((k,), bool),
+        "t_th": np.asarray(0, np.int32),
+        "v_th": np.asarray(0.0, np.float32),
+        "lam": np.zeros((k, dim), np.float32),
+        "mult": np.asarray(0.0, np.float32),
+        "cand": np.asarray(0, np.int32),
+        "changed": np.asarray(0, np.int32),
+        "assign_work": np.zeros((n_rows,), np.int32),
+        "m_mean": np.zeros((k, dim), np.float32),
+        "counts": np.zeros((k,), np.float32),
+    }
+    tree, _ = restore_checkpoint(directory, example)
+    tree = {name: jnp.asarray(v) for name, v in tree.items()}
+    params = StructuralParams(t_th=tree["t_th"].astype(jnp.int32),
+                              v_th=tree["v_th"].astype(jnp.float32))
+    index = build_mean_index(tree["means_t"].T, params,
+                             moving=tree["moving"])
+    state = KMeansState(index=index, assign=tree["assign"],
+                        rho_self=tree["rho_self"],
+                        rho_self_prev=tree["rho_prev"],
+                        iteration=tree["iteration"])
+    return (state, tree, tuple(extra["cursor"]), list(extra["history"]),
+            extra.get("algo_mode", "full"))
+
+
+def streaming_fit(store, *, k: int, algo: str = "esicp",
+                  backend: str = "reference", params="auto",
+                  algo_mode: str = "full", batch_size: int = 4096,
+                  max_iter: int = 60, est_grid: EstGrid | None = None,
+                  est_iters=(1, 2), seed: int = 0, df=None,
+                  prefetch_depth: int = 2, checkpoint_dir: str | None = None,
+                  checkpoint_every: int = 0,
+                  resume: bool = False) -> LloydResult:
+    """Lloyd over an out-of-core :class:`repro.sparse.DocStore`.
+
+    algo_mode='full': the exact chunk-scan Lloyd epoch — assignment pass
+        (per-chunk `_fused_epoch` + λ accumulation) → index rebuild → ρ_self
+        refresh pass.  A one-chunk store reproduces ``lloyd_fit(docs)``
+        bit for bit (labels and every history diagnostic; parity-tested).
+    algo_mode='minibatch': Sculley-style streaming k-means — one pass over
+        the chunks per iteration, centers updated after every chunk with
+        per-center counts/learning rates.  Exact nearest-centroid
+        assignment (structural pruning thresholds don't apply to centers
+        that move every chunk), so ``algo``/``params``/``est_iters`` are
+        ignored in this mode.
+
+    EstParams in full mode estimates (t_th, v_th) from the FULL corpus,
+    chunk-streamed (:func:`repro.core.estparams.estimate_params_store`) —
+    φ̃3 was an object-chunked sum already, so out-of-core costs nothing.
+
+    Checkpointing: with ``checkpoint_dir``, a resumable snapshot commits
+    every ``checkpoint_every`` chunks *inside* the epoch (0 → epoch
+    boundaries only) plus one at each epoch boundary; ``resume=True``
+    restores the latest snapshot — including mid-epoch ones — and
+    continues to the identical final labels (tested).
+    """
+    from repro.sparse.store import ChunkPrefetcher
+
+    if algo_mode not in ("full", "minibatch"):
+        raise ValueError(f"algo_mode must be 'full' or 'minibatch', "
+                         f"got {algo_mode!r}")
+    backend = resolve_backend(backend).name
+    est_grid = est_grid or EstGrid()
+    est_iters = tuple(est_iters)
+    n, c, n_rows = store.n_docs, store.chunk_size, store.n_rows
+    n_chunks = store.n_chunks
+    bs = _tile_bs(c, batch_size)
+    valid = jnp.arange(n_rows) < n
+    # df feeds EstParams only — don't trigger DocStore.df's full corpus
+    # scan for modes that never estimate (minibatch / fixed thresholds).
+    need_df = algo_mode == "full" and params == "auto" and bool(est_iters)
+    if df is None and need_df:
+        df = store.df
+    df = None if df is None else jnp.asarray(df)
+
+    minibatch = algo_mode == "minibatch"
+    zeros_lam = jnp.zeros((k, store.dim), jnp.float32)
+
+    if resume:
+        if not checkpoint_dir:
+            raise ValueError("resume=True needs checkpoint_dir")
+        state, tree, (start_epoch, start_chunk), history, ckpt_mode = \
+            _stream_ckpt_restore(checkpoint_dir, n_rows=n_rows, k=k,
+                                 dim=store.dim)
+        if ckpt_mode != algo_mode:
+            # Shapes alias across modes, so a silent continue would finish
+            # with wrong labels — fail loudly instead.
+            raise ValueError(
+                f"checkpoint under {checkpoint_dir} was written by an "
+                f"algo_mode={ckpt_mode!r} fit; cannot resume it with "
+                f"algo_mode={algo_mode!r}")
+        lam, mult, cand, changed = (tree["lam"], tree["mult"], tree["cand"],
+                                    tree["changed"])
+        assign_work, m_mean, counts = (tree["assign_work"], tree["m_mean"],
+                                       tree["counts"])
+    else:
+        init_params = initial_params(None if minibatch else params,
+                                     store.dim)
+        state = init_state_from_store(store, k, init_params, seed=seed)
+        m_mean = state.index.means_t.T      # (K, D) running means (seeds)
+        counts = jnp.zeros((k,), jnp.float32)
+        lam, mult, cand, changed = (zeros_lam, jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.int32),
+                                    jnp.zeros((), jnp.int32))
+        assign_work = state.assign
+        history = []
+        start_epoch, start_chunk = 1, 0
+
+    def maybe_ckpt(r, next_chunk, *, force=False):
+        if not checkpoint_dir:
+            return
+        due = force or (checkpoint_every and next_chunk
+                        and next_chunk % checkpoint_every == 0)
+        if not due:
+            return
+        _stream_ckpt_save(
+            checkpoint_dir, step=(r - 1) * (n_chunks + 1) + next_chunk,
+            state=state, lam=lam, mult=mult, cand=cand, changed=changed,
+            assign_work=assign_work, m_mean=m_mean, counts=counts,
+            cursor=(r, next_chunk), history=history, algo_mode=algo_mode)
+
+    converged = False
+    r = start_epoch - 1
+    for r in range(start_epoch, max_iter + 1):
+        t0 = time.perf_counter()
+        first = start_chunk if r == start_epoch else 0
+        # Minibatch centers evolve per chunk; on a mid-epoch resume the
+        # checkpointed index (saved after every chunk step) IS the current
+        # center state, so picking it up here covers both cases.
+        mb_index = state.index
+        if first == 0:
+            lam, mult, cand, changed = (zeros_lam,
+                                        jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32),
+                                        jnp.zeros((), jnp.int32))
+            assign_work = state.assign
+
+        xs_full = state.xstate
+        # ---- pass A: assignment (+ λ / center updates), chunk-streamed ----
+        order = range(first, n_chunks)
+        for ci, cdocs in ChunkPrefetcher(store, depth=prefetch_depth,
+                                         order=order):
+            s = ci * c
+            sl = slice(s, s + c)
+            if minibatch:
+                a_new, ch, m_mean, counts, mb_index = _stream_minibatch_chunk(
+                    backend, cdocs, mb_index, state.assign[sl], valid[sl],
+                    m_mean, counts, bs=bs, k=k)
+                changed = changed + ch
+                cand = cand + jnp.sum(valid[sl]).astype(jnp.int32) * k
+                # keep the evolving centers checkpointable: the saved
+                # means_t must be the post-chunk centers
+                state = dataclasses.replace(state, index=mb_index)
+            else:
+                a_new, lam, mult, cand, changed = _stream_chunk_step(
+                    algo, backend, cdocs, state.index, state.assign[sl],
+                    state.rho_self[sl], xs_full[sl], valid[sl],
+                    lam, mult, cand, changed, bs=bs, k=k)
+            assign_work = _set_slice(assign_work, a_new, s)
+            maybe_ckpt(r, ci + 1)
+
+        # ---- finalize: index rebuild (full) + ρ_self refresh pass ---------
+        if minibatch:
+            index = mb_index
+        else:
+            index = _stream_update_index(lam, state.index.means_t,
+                                         assign_work, state.assign,
+                                         state.index.params, k=k)
+        rho_parts = []
+        for ci, cdocs in ChunkPrefetcher(store, depth=prefetch_depth):
+            sl = slice(ci * c, (ci + 1) * c)
+            rho_parts.append(_stream_rho_chunk(backend, cdocs,
+                                               assign_work[sl],
+                                               index.means_t))
+        rho_new = jnp.concatenate(rho_parts)
+        state = KMeansState(index=index, assign=assign_work,
+                            rho_self=rho_new,
+                            rho_self_prev=state.rho_self,
+                            iteration=state.iteration + 1)
+
+        if not minibatch and params == "auto" and r in est_iters:
+            # Full-corpus estimate, chunk-streamed (φ̃3 is an object-chunked
+            # sum already); bit-for-bit the resident estimate on a
+            # one-chunk store.
+            from repro.core.estparams import estimate_params_store
+
+            new_params, _ = estimate_params_store(
+                store, df, state.index.means_t, state.rho_self, k=k,
+                grid=est_grid)
+            state = dataclasses.replace(
+                state, index=state.index.with_params(new_params))
+
+        # ---- the ONE host sync of the epoch -------------------------------
+        diag = _host_pull(
+            (mult, cand, changed,
+             jnp.sum(jnp.where(valid, state.rho_self, 0.0)),
+             state.index.n_moving, state.index.params.t_th,
+             state.index.params.v_th))
+        history.append(_history_row(r, n, k, *diag,
+                                    time.perf_counter() - t0))
+        maybe_ckpt(r + 1, 0, force=bool(checkpoint_dir))
+        if history[-1]["n_changed"] == 0:
+            converged = True
+            break
+
+    state = dataclasses.replace(
+        state,
+        assign=state.assign[:n],
+        rho_self=state.rho_self[:n],
+        rho_self_prev=state.rho_self_prev[:n],
+    )
+    return LloydResult(
+        state=state,
+        assign=np.asarray(state.assign),
+        history=history,
+        params=state.index.params,
+        converged=converged,
+        n_iter=len(history),
+        cursor=None if converged else (r + 1, 0),
     )
 
 

@@ -83,6 +83,23 @@ def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
     )
 
 
+def seed_rows(n_docs: int, k: int, *, seed: int = 0) -> jax.Array:
+    """(K,) distinct document indices — THE seeding draw.  Shared by the
+    resident and the DocStore paths so a one-chunk store fit starts from
+    the bitwise-identical centroids as ``fit(docs)``."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.choice(key, n_docs, shape=(k,), replace=False)
+
+
+def seed_centroids(sel: SparseDocs, k: int) -> jax.Array:
+    """(K, D) unit-norm means from K seed documents (scatter + L2)."""
+    means = jnp.zeros((k, sel.dim), jnp.float32)
+    rows = jnp.arange(k)[:, None]
+    means = means.at[rows, sel.ids].add(jnp.where(sel.row_mask(), sel.vals, 0.0))
+    norms = jnp.sqrt(jnp.sum(means**2, axis=1, keepdims=True))
+    return means / jnp.maximum(norms, 1e-12)
+
+
 def init_state(docs: SparseDocs, k: int, params: StructuralParams, *, seed: int = 0) -> KMeansState:
     """Random seeding: K distinct documents as initial centroids.
 
@@ -90,14 +107,9 @@ def init_state(docs: SparseDocs, k: int, params: StructuralParams, *, seed: int 
     independent, so random seeding matches k-means++ quality at far lower
     cost; seeding strategies are explicitly out of the paper's scope (§I).
     """
-    key = jax.random.PRNGKey(seed)
-    pick = jax.random.choice(key, docs.n_docs, shape=(k,), replace=False)
+    pick = seed_rows(docs.n_docs, k, seed=seed)
     sel = SparseDocs(ids=docs.ids[pick], vals=docs.vals[pick], nnz=docs.nnz[pick], dim=docs.dim)
-    means = jnp.zeros((k, docs.dim), jnp.float32)
-    rows = jnp.arange(k)[:, None]
-    means = means.at[rows, sel.ids].add(jnp.where(sel.row_mask(), sel.vals, 0.0))
-    norms = jnp.sqrt(jnp.sum(means**2, axis=1, keepdims=True))
-    means = means / jnp.maximum(norms, 1e-12)
+    means = seed_centroids(sel, k)
     index = build_mean_index(means, params)
     n = docs.n_docs
     return KMeansState(
@@ -105,5 +117,29 @@ def init_state(docs: SparseDocs, k: int, params: StructuralParams, *, seed: int 
         assign=jnp.zeros((n,), jnp.int32),
         rho_self=jnp.full((n,), -jnp.inf, jnp.float32),
         rho_self_prev=jnp.full((n,), -jnp.inf, jnp.float32),
+        iteration=jnp.asarray(0, jnp.int32),
+    )
+
+
+def init_state_from_store(store, k: int, params: StructuralParams, *,
+                          seed: int = 0) -> KMeansState:
+    """:func:`init_state` for an out-of-core corpus: the same PRNG draw and
+    the same centroid construction, but the K seed rows are gathered from
+    the store's chunks (a host gather touching only their chunks) and the
+    per-document arrays cover every store row — real rows start at
+    ρ_self = -inf, the dead tail rows at the repo-wide pad value 0."""
+    import numpy as np
+
+    pick = seed_rows(store.n_docs, k, seed=seed)
+    sel = store.gather_rows(np.asarray(pick))
+    index = build_mean_index(seed_centroids(sel, k), params)
+    n_rows = store.n_rows
+    valid = jnp.arange(n_rows) < store.n_docs
+    rho0 = jnp.where(valid, -jnp.inf, 0.0).astype(jnp.float32)
+    return KMeansState(
+        index=index,
+        assign=jnp.zeros((n_rows,), jnp.int32),
+        rho_self=rho0,
+        rho_self_prev=rho0,
         iteration=jnp.asarray(0, jnp.int32),
     )

@@ -37,6 +37,7 @@ strategy behind ``repro.cluster.SphericalKMeans(mesh=...)``.  The historical
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from functools import partial
 
@@ -229,24 +230,91 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
 # ---------------------------------------------------------------------------
 
 def dist_init_state(docs, k: int, mesh: Mesh, *, seed: int = 0) -> DistKMeansState:
-    """Seed K centroids from random documents, shard everything onto `mesh`."""
-    from repro.core.update import init_state
-    from repro.core.meanindex import StructuralParams
+    """Seed K centroids from random documents, shard everything onto `mesh`.
+
+    ``docs`` may be a resident SparseDocs or an out-of-core
+    :class:`repro.sparse.DocStore` — seeding gathers only the K picked
+    rows from their chunks (the same PRNG draw and centroid construction
+    as the single-host path, so runtimes agree from iteration 0).
+    """
+    import numpy as np
+
+    from repro.core.meanindex import StructuralParams, build_mean_index
+    from repro.core.update import init_state, seed_centroids, seed_rows
+    from repro.sparse.store import DocStore
 
     n_model = mesh.shape["model"]
     if k % n_model:
         raise ValueError(f"K={k} must divide over the model axis ({n_model})")
-    core = init_state(docs, k, StructuralParams.trivial(docs.dim), seed=seed)
+    if isinstance(docs, DocStore):
+        pick = seed_rows(docs.n_docs, k, seed=seed)
+        sel = docs.gather_rows(np.asarray(pick))
+        index = build_mean_index(seed_centroids(sel, k),
+                                 StructuralParams.trivial(docs.dim))
+        n = docs.n_docs
+        means_t = index.means_t
+        assign = jnp.zeros((n,), jnp.int32)
+        rho_self = jnp.full((n,), -jnp.inf, jnp.float32)
+        rho_prev = jnp.full((n,), -jnp.inf, jnp.float32)
+    else:
+        core = init_state(docs, k, StructuralParams.trivial(docs.dim),
+                          seed=seed)
+        means_t, assign = core.index.means_t, core.assign
+        rho_self, rho_prev = core.rho_self, core.rho_self_prev
     axes_obj = object_axes(mesh)
     sh = lambda spec: NamedSharding(mesh, spec)
     return DistKMeansState(
-        means_t=jax.device_put(core.index.means_t, sh(P(None, "model"))),
-        assign=jax.device_put(core.assign, sh(P(axes_obj))),
-        rho_self=jax.device_put(core.rho_self, sh(P(axes_obj))),
-        rho_prev=jax.device_put(core.rho_self_prev, sh(P(axes_obj))),
+        means_t=jax.device_put(means_t, sh(P(None, "model"))),
+        assign=jax.device_put(assign, sh(P(axes_obj))),
+        rho_self=jax.device_put(rho_self, sh(P(axes_obj))),
+        rho_prev=jax.device_put(rho_prev, sh(P(axes_obj))),
         moving=jax.device_put(jnp.ones((k,), bool), sh(P("model"))),
         iteration=jnp.asarray(0, jnp.int32),
     )
+
+
+@functools.lru_cache(maxsize=None)
+def _fill_rows_fn():
+    """One jitted slice-writer per dtype trace: fills a sharded object
+    buffer chunk by chunk, so a DocStore streams host→devices without the
+    corpus ever being resident on the host as one block.  The buffer is
+    DONATED — the whole point is an in-place fill of a corpus-sized array;
+    without aliasing every chunk would copy the full buffer and double the
+    peak (no-op on CPU, where XLA has no donation support)."""
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(
+        lambda buf, chunk, start: lax.dynamic_update_slice_in_dim(
+            buf, chunk, start, 0),
+        donate_argnums=donate)
+
+
+def _place_store_sharded(store, mesh: Mesh, multiple: int):
+    """Stream a DocStore's chunks into mesh-sharded (ids, vals, valid)
+    object arrays padded to a ``multiple`` of rows (the per-host shard view
+    the shard-local step consumes)."""
+    from repro.sparse.store import ChunkPrefetcher
+
+    axes_obj = object_axes(mesh)
+    n, p, c = store.n_docs, store.pad_width, store.chunk_size
+    pad = (-n) % multiple
+    n_pad = n + pad
+    sh = lambda spec: NamedSharding(mesh, spec)
+    ids = jax.device_put(jnp.zeros((n_pad, p), jnp.int32),
+                         sh(P(axes_obj, None)))
+    vals = jax.device_put(jnp.zeros((n_pad, p), jnp.float32),
+                          sh(P(axes_obj, None)))
+    fill = _fill_rows_fn()
+    for ci, cdocs in ChunkPrefetcher(store):
+        start = ci * c
+        if start >= n_pad:
+            break
+        m = min(c, n_pad - start)
+        cid, cval = (cdocs.ids, cdocs.vals) if m == c else \
+            (cdocs.ids[:m], cdocs.vals[:m])
+        ids = fill(ids, cid, start)
+        vals = fill(vals, cval, start)
+    valid = jax.device_put(jnp.arange(n_pad) < n, sh(P(axes_obj)))
+    return ids, vals, valid, pad
 
 
 def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
@@ -273,6 +341,11 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
              checkpoint_every: int = 5, **step_kw):
     """Full distributed Lloyd loop with EstParams and optional checkpointing.
 
+    ``docs`` may be a resident SparseDocs or an out-of-core
+    :class:`repro.sparse.DocStore` whose chunks are streamed into the
+    sharded object arrays (per-host shards of the data plane; see
+    :func:`_place_store_sharded`).
+
     Returns ``(state, history, converged, params)`` — the final sharded
     :class:`DistKMeansState` (object arrays still carry the shard-multiple
     tail padding; rows ``[:docs.n_docs]`` are the real ones), the diagnostic
@@ -285,19 +358,28 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     import numpy as np
     from repro.core.estparams import estimate_params
     from repro.core.meanindex import StructuralParams
+    from repro.sparse.store import DocStore
 
+    store = docs if isinstance(docs, DocStore) else None
     n = docs.n_docs
     axes_obj = object_axes(mesh)
     n_obj_shards = int(np.prod([mesh.shape[a] for a in axes_obj]))
-    pad = (-n) % (n_obj_shards * obj_chunk)
+    multiple = n_obj_shards * obj_chunk
     sh = lambda spec: NamedSharding(mesh, spec)
 
-    ids = jnp.pad(docs.ids, ((0, pad), (0, 0)))
-    vals = jnp.pad(docs.vals, ((0, pad), (0, 0)))
-    valid = jnp.arange(n + pad) < n
-    ids = jax.device_put(ids, sh(P(axes_obj, None)))
-    vals = jax.device_put(vals, sh(P(axes_obj, None)))
-    valid = jax.device_put(valid, sh(P(axes_obj)))
+    if store is not None:
+        # Out-of-core ingest: chunks stream host→devices into the sharded
+        # object arrays — the aggregate device memory of the mesh holds the
+        # corpus, the host only ever one chunk (+ the prefetched next).
+        ids, vals, valid, pad = _place_store_sharded(store, mesh, multiple)
+    else:
+        pad = (-n) % multiple
+        ids = jnp.pad(docs.ids, ((0, pad), (0, 0)))
+        vals = jnp.pad(docs.vals, ((0, pad), (0, 0)))
+        valid = jnp.arange(n + pad) < n
+        ids = jax.device_put(ids, sh(P(axes_obj, None)))
+        vals = jax.device_put(vals, sh(P(axes_obj, None)))
+        valid = jax.device_put(valid, sh(P(axes_obj)))
 
     state = dist_init_state(docs, k, mesh, seed=seed)
     if pad:
@@ -340,11 +422,32 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
         state, diag = dist_assignment_update(step_fn, state, ids, vals, valid,
                                              params.t_th, params.v_th)
         if algo == "esicp" and r in est_iters:
-            params, _ = estimate_params(docs, df, state.means_t[:, :k],
-                                        state.rho_self[:n], k=k)
+            if store is not None:
+                # Full-corpus estimate, chunk-streamed (the same path the
+                # streaming strategy uses); ρ rows beyond the store's tail
+                # are the dead-row 0 convention and contribute nothing.
+                from repro.core.estparams import estimate_params_store
+
+                rho_rows = state.rho_self[:n]
+                rho_rows = jnp.pad(rho_rows, (0, store.n_rows - n))
+                params, _ = estimate_params_store(
+                    store, df, state.means_t[:, :k], rho_rows, k=k)
+            else:
+                params, _ = estimate_params(docs, df, state.means_t[:, :k],
+                                            state.rho_self[:n], k=k)
             if two_phase and r == max(est_iters):
-                nt_h = int(jnp.max(jnp.sum(
-                    (docs.ids >= params.t_th) & docs.row_mask(), axis=1)))
+                if store is not None:
+                    t = int(params.t_th)
+                    slots = np.arange(store.pad_width)[None, :]
+                    nt_h = 0
+                    for j in range(store.n_chunks):
+                        cid, _, cnnz = store.host_chunk(j)
+                        tail = (np.asarray(cid) >= t) \
+                            & (slots < np.asarray(cnnz)[:, None])
+                        nt_h = max(nt_h, int(tail.sum(axis=1).max(initial=0)))
+                else:
+                    nt_h = int(jnp.max(jnp.sum(
+                        (docs.ids >= params.t_th) & docs.row_mask(), axis=1)))
                 pb = step_kw.get("p_block", 1)
                 p_tail = max(nt_h + ((-nt_h) % max(pb, 1)), pb)
                 step_fn = make_step_fn(mesh, algo=algo, k=k,

@@ -148,10 +148,13 @@ class ClusterEngine:
                            backend=self.backend, strategy="serving")
 
     def classify(self, docs):
-        """docs: SparseDocs -> (assign (N,) int32, sims (N,) float32).
+        """docs: SparseDocs | DocStore -> (assign (N,) int32, sims (N,)).
 
         The same fused path as ``SphericalKMeans.predict`` /
-        ``FittedModel.predict`` (repro/cluster/classify.py)."""
+        ``FittedModel.predict`` (repro/cluster/classify.py).  An
+        out-of-core :class:`repro.sparse.DocStore` streams chunk by chunk
+        through the prefetcher — the engine can classify corpora larger
+        than device memory."""
         from repro.cluster.classify import classify_docs
 
         return classify_docs(self.index, docs, backend=self.backend,

@@ -20,6 +20,12 @@ from repro.sparse.matrix import (
     l1_tail,
     pad_rows,
 )
+from repro.sparse.store import (
+    ChunkPrefetcher,
+    DocStore,
+    DocStoreBuilder,
+    as_store,
+)
 
 __all__ = [
     "SparseDocs",
@@ -32,4 +38,8 @@ __all__ = [
     "remap_terms_by_df",
     "l1_tail",
     "pad_rows",
+    "ChunkPrefetcher",
+    "DocStore",
+    "DocStoreBuilder",
+    "as_store",
 ]

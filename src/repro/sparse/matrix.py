@@ -6,7 +6,7 @@ because corpus construction happens once, off the accelerator.
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property, partial
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -23,21 +23,31 @@ class SparseDocs:
     vals: (N, P) float32, 0.0 on padding.
     nnz:  (N,) int32, number of live tuples per row.
     dim:  vocabulary size D (static).
+    _df:  optional (D,) int32 document frequencies — an explicit pytree leaf
+          (None when unknown), so a df seeded by :func:`with_df` survives
+          every jit boundary / donation round-trip.  Read through the ``df``
+          property, which falls back to counting.
     """
 
     ids: jax.Array
     vals: jax.Array
     nnz: jax.Array
     dim: int
+    _df: jax.Array | None = None
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
-        return (self.ids, self.vals, self.nnz), self.dim
+        # _df rides as a child: None flattens to the empty subtree, an array
+        # to one leaf — either way tree_unflatten hands it straight back, so
+        # (unlike the old cached_property, whose instance-__dict__ cache was
+        # silently dropped by every unflatten) the seeded df is carried
+        # through jit, scan, and donation.
+        return (self.ids, self.vals, self.nnz, self._df), self.dim
 
     @classmethod
     def tree_unflatten(cls, dim, leaves):
-        ids, vals, nnz = leaves
-        return cls(ids=ids, vals=vals, nnz=nnz, dim=dim)
+        ids, vals, nnz, df = leaves
+        return cls(ids=ids, vals=vals, nnz=nnz, dim=dim, _df=df)
 
     # -- conveniences ------------------------------------------------------
     @property
@@ -52,19 +62,28 @@ class SparseDocs:
         """(N, P) bool — True on live tuples."""
         return jnp.arange(self.pad_width)[None, :] < self.nnz[:, None]
 
-    @cached_property
+    @property
     def df(self) -> jax.Array:
-        """(D,) document frequency of each term, computed once per corpus.
+        """(D,) document frequency of each term.
 
-        Every df consumer on the fit path (tf-idf, df-rank remapping,
-        EstParams) shares this cache instead of re-counting from scratch.
-        cached_property stores via the instance ``__dict__``, so the frozen
-        dataclass and the pytree flatten/unflatten round-trip (which builds
-        fresh instances) are both unaffected.
+        Returns the explicit ``_df`` leaf when one was carried in (corpus
+        builders seed it via :func:`with_df`; it survives jit round-trips as
+        a pytree child).  Otherwise counts once and memoises the result in
+        the instance ``__dict__`` — a host-side convenience cache only, never
+        relied on across pytree boundaries.
         """
-        return df_counts(self)
+        if self._df is not None:
+            return self._df
+        cached = self.__dict__.get("_df_cache")
+        if cached is None:
+            cached = df_counts(self)
+            self.__dict__["_df_cache"] = cached
+        return cached
 
     def slice_rows(self, start: int, size: int) -> "SparseDocs":
+        # _df deliberately NOT carried: a row subset has its own document
+        # frequencies, and consumers that want the corpus-level counts pass
+        # them explicitly (df=...).
         return SparseDocs(
             ids=jax.lax.dynamic_slice_in_dim(self.ids, start, size, 0),
             vals=jax.lax.dynamic_slice_in_dim(self.vals, start, size, 0),
@@ -101,11 +120,11 @@ def to_dense(docs: SparseDocs) -> jax.Array:
 
 
 def with_df(docs: SparseDocs, df: jax.Array) -> SparseDocs:
-    """Pre-seed the ``docs.df`` cache with counts the caller already holds
+    """Attach counts the caller already holds as the explicit ``_df`` leaf
     (corpus builders compute df before the df-rank remap; the permuted
-    counts are exactly the remapped corpus's df).  Returns ``docs``."""
-    docs.__dict__["df"] = df
-    return docs
+    counts are exactly the remapped corpus's df).  Returns a new SparseDocs
+    whose df survives jit/donation round-trips (regression-tested)."""
+    return dataclasses.replace(docs, _df=jnp.asarray(df))
 
 
 def df_counts(docs: SparseDocs) -> jax.Array:
@@ -152,7 +171,10 @@ def remap_terms_by_df(docs: SparseDocs, df: jax.Array | None = None):
     order = jnp.argsort(sort_key, axis=1, stable=True)
     new_ids = jnp.take_along_axis(jnp.where(live, new_ids, 0), order, axis=1)
     new_vals = jnp.take_along_axis(jnp.where(live, docs.vals, 0.0), order, axis=1)
-    docs2 = dataclasses.replace(docs, ids=new_ids, vals=new_vals)
+    # The permuted counts ARE the remapped corpus's df — carry them as the
+    # explicit leaf so downstream consumers never recount.
+    docs2 = dataclasses.replace(docs, ids=new_ids, vals=new_vals,
+                                _df=jnp.asarray(df)[perm])
     return docs2, perm
 
 
@@ -169,8 +191,10 @@ def pad_rows(docs: SparseDocs, multiple: int) -> SparseDocs:
     if pad == 0:
         return docs
     zpad = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    # Dead rows hold no live tuples, so the corpus df is unchanged — carry
+    # the explicit leaf through the padding.
     return SparseDocs(ids=zpad(docs.ids), vals=zpad(docs.vals),
-                      nnz=zpad(docs.nnz), dim=docs.dim)
+                      nnz=zpad(docs.nnz), dim=docs.dim, _df=docs._df)
 
 
 @partial(jax.jit, static_argnames=())

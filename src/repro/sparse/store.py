@@ -1,0 +1,466 @@
+"""Out-of-core corpus store: fixed-shape SparseDocs chunks (DESIGN.md §10).
+
+The paper's regime is 8.7M-document PubMed — far beyond one device's HBM as
+a resident ``(N, P)`` padded array.  A :class:`DocStore` keeps the corpus on
+the host (memmapped ``.npy`` chunk files, or plain numpy arrays for small
+corpora) as a sequence of *uniform* ``(C, P)`` chunks:
+
+  * every chunk has the identical static shape, so ONE jitted per-chunk
+    step serves the whole corpus — no shape-polymorphic retracing;
+  * the final chunk is padded with dead rows (``nnz = 0``, ids/vals 0) under
+    the repo-wide ``ρ_self = 0`` tail convention (core/lloyd.py): dead rows
+    accumulate nothing and are valid-masked out of every diagnostic;
+  * only the small per-document state (assign, ρ_self — 4 bytes/doc each)
+    stays device-resident during a fit; the ``(N, P)`` tuple arrays stream
+    through a double-buffered host→device prefetcher.
+
+:class:`DocStoreBuilder` is the one-pass streaming ingest: callers append
+raw (term-id, value) rows in any number of batches; the builder spills raw
+chunks to disk while accumulating the global document frequencies, then
+``finalize`` streams each spilled chunk once more through the paper's
+preprocessing — tf-idf (Eq. 15), the df-rank term remap (Table I), L2
+normalisation — without ever materialising the corpus in memory.
+
+``DocStore.from_docs(docs)`` wraps a resident :class:`SparseDocs` as a
+trivial in-memory store (one chunk by default), which is how
+``SphericalKMeans.fit(docs)`` keeps its exact semantics on the chunked
+code path (bitwise-parity-tested in tests/test_store.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.matrix import SparseDocs
+
+_META = "store.json"
+STORE_FORMAT = "repro.sparse/doc-store-v1"
+
+
+def _chunk_paths(directory: str, ci: int) -> dict:
+    stem = os.path.join(directory, f"chunk_{ci:05d}")
+    return {name: f"{stem}.{name}.npy" for name in ("ids", "vals", "nnz")}
+
+
+class DocStore:
+    """N documents as ``ceil(N / C)`` uniform ``(C, P)`` host chunks.
+
+    Two backings share one interface:
+
+      * **memory** — a list of ``(ids, vals, nnz)`` numpy chunk tuples
+        (``from_docs``): full chunks are views into the resident arrays;
+        only the padded final chunk is copied;
+      * **disk** — a directory of per-chunk ``.npy`` files plus a
+        ``store.json`` manifest (``open`` / ``DocStoreBuilder``); chunk
+        arrays are memmapped, so reading chunk *i* touches only its bytes.
+
+    ``chunk(i)`` returns the chunk as a host-backed :class:`SparseDocs`;
+    :class:`ChunkPrefetcher` overlaps the host read + H2D copy of chunk
+    *i+1* with the device compute on chunk *i*.
+    """
+
+    def __init__(self, *, n_docs: int, dim: int, chunk_size: int,
+                 pad_width: int, chunks: list | None = None,
+                 directory: str | None = None, df: np.ndarray | None = None):
+        if (chunks is None) == (directory is None):
+            raise ValueError("exactly one of chunks= / directory= backs a store")
+        self.n_docs = int(n_docs)
+        self.dim = int(dim)
+        self.chunk_size = int(chunk_size)
+        self.pad_width = int(pad_width)
+        self._chunks = chunks
+        self.directory = directory
+        self._df = None if df is None else np.asarray(df)
+        self.n_chunks = -(-self.n_docs // self.chunk_size)
+        if self.n_chunks < 1:
+            raise ValueError("a DocStore needs at least one document")
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        """Total rows including the dead tail of the final chunk."""
+        return self.n_chunks * self.chunk_size
+
+    @property
+    def df(self) -> np.ndarray:
+        """(D,) global document frequencies (counted once if not stored)."""
+        if self._df is None:
+            df = np.zeros((self.dim,), np.int64)
+            for ci in range(self.n_chunks):
+                ids, vals, nnz = self.host_chunk(ci)
+                live = np.arange(self.pad_width)[None, :] < nnz[:, None]
+                df += np.bincount(ids[live].ravel(), minlength=self.dim)
+            self._df = df.astype(np.int32)
+        return self._df
+
+    def chunk_valid(self, ci: int) -> np.ndarray:
+        """(C,) bool — True on rows backed by a real document."""
+        start = ci * self.chunk_size
+        return (start + np.arange(self.chunk_size)) < self.n_docs
+
+    # -- chunk access ------------------------------------------------------
+    def host_chunk(self, ci: int):
+        """(ids, vals, nnz) numpy arrays of chunk ``ci`` (memmapped on disk
+        stores — reading is lazy per chunk)."""
+        if not 0 <= ci < self.n_chunks:
+            raise IndexError(f"chunk {ci} out of range [0, {self.n_chunks})")
+        if self._chunks is not None:
+            return self._chunks[ci]
+        paths = _chunk_paths(self.directory, ci)
+        return tuple(np.load(paths[k], mmap_mode="r")
+                     for k in ("ids", "vals", "nnz"))
+
+    def chunk(self, ci: int) -> SparseDocs:
+        """Chunk ``ci`` as a SparseDocs (host → default-device arrays)."""
+        ids, vals, nnz = self.host_chunk(ci)
+        return SparseDocs(ids=jnp.asarray(ids, jnp.int32),
+                          vals=jnp.asarray(vals, jnp.float32),
+                          nnz=jnp.asarray(nnz, jnp.int32), dim=self.dim)
+
+    def __iter__(self):
+        for ci in range(self.n_chunks):
+            yield ci, self.chunk(ci)
+
+    def gather_rows(self, indices) -> SparseDocs:
+        """The given global rows as one small SparseDocs (host gather) —
+        centroid seeding reads K rows without touching the other chunks."""
+        indices = np.asarray(indices)
+        ids = np.zeros((len(indices), self.pad_width), np.int32)
+        vals = np.zeros((len(indices), self.pad_width), np.float32)
+        nnz = np.zeros((len(indices),), np.int32)
+        order = np.argsort(indices // self.chunk_size, kind="stable")
+        ci_prev, chunk = -1, None
+        for pos in order:
+            gi = int(indices[pos])
+            if not 0 <= gi < self.n_docs:
+                raise IndexError(f"row {gi} out of range [0, {self.n_docs})")
+            ci, ri = divmod(gi, self.chunk_size)
+            if ci != ci_prev:
+                chunk, ci_prev = self.host_chunk(ci), ci
+            ids[pos], vals[pos], nnz[pos] = (chunk[0][ri], chunk[1][ri],
+                                             chunk[2][ri])
+        return SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                          nnz=jnp.asarray(nnz), dim=self.dim)
+
+    def to_docs(self) -> SparseDocs:
+        """Concatenate every chunk into one resident SparseDocs (small
+        stores / tests only — this is exactly what a DocStore avoids)."""
+        parts = [self.host_chunk(ci) for ci in range(self.n_chunks)]
+        docs = SparseDocs(
+            ids=jnp.asarray(np.concatenate([p[0] for p in parts])[:self.n_docs]),
+            vals=jnp.asarray(np.concatenate([p[1] for p in parts])[:self.n_docs]),
+            nnz=jnp.asarray(np.concatenate([p[2] for p in parts])[:self.n_docs]),
+            dim=self.dim)
+        return dataclasses.replace(docs, _df=jnp.asarray(self.df))
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_docs(cls, docs: SparseDocs, *, chunk_size: int | None = None,
+                  df=None) -> "DocStore":
+        """Wrap a resident corpus as an in-memory store.
+
+        chunk_size=None (the default) yields ONE chunk covering the whole
+        corpus — the trivial store through which ``fit(docs)`` keeps its
+        exact resident semantics on the chunked code path.
+        """
+        n, p = docs.ids.shape
+        c = int(chunk_size or n)
+        ids = np.asarray(docs.ids, np.int32)
+        vals = np.asarray(docs.vals, np.float32)
+        nnz = np.asarray(docs.nnz, np.int32)
+        chunks = []
+        for start in range(0, n, c):
+            m = min(c, n - start)
+            if m == c:           # full chunk: a view, no copy
+                chunks.append((ids[start:start + c], vals[start:start + c],
+                               nnz[start:start + c]))
+                continue
+            cidx = np.zeros((c, p), np.int32)
+            cval = np.zeros((c, p), np.float32)
+            cnnz = np.zeros((c,), np.int32)
+            cidx[:m], cval[:m], cnnz[:m] = (ids[start:start + m],
+                                            vals[start:start + m],
+                                            nnz[start:start + m])
+            chunks.append((cidx, cval, cnnz))
+        if df is None and docs._df is not None:
+            df = docs._df
+        return cls(n_docs=n, dim=docs.dim, chunk_size=c, pad_width=p,
+                   chunks=chunks,
+                   df=None if df is None else np.asarray(df))
+
+    @classmethod
+    def open(cls, directory: str) -> "DocStore":
+        with open(os.path.join(directory, _META)) as f:
+            meta = json.load(f)
+        if meta.get("format") != STORE_FORMAT:
+            raise ValueError(f"{directory} holds no {STORE_FORMAT} store "
+                             f"(found {meta.get('format')!r})")
+        df_path = os.path.join(directory, "df.npy")
+        df = np.load(df_path) if os.path.exists(df_path) else None
+        return cls(n_docs=meta["n_docs"], dim=meta["dim"],
+                   chunk_size=meta["chunk_size"], pad_width=meta["pad_width"],
+                   directory=directory, df=df)
+
+    def save(self, directory: str) -> "DocStore":
+        """Persist an in-memory store as a disk store (chunk files + df +
+        manifest); returns the reopened disk-backed store."""
+        os.makedirs(directory, exist_ok=True)
+        for ci in range(self.n_chunks):
+            ids, vals, nnz = self.host_chunk(ci)
+            paths = _chunk_paths(directory, ci)
+            np.save(paths["ids"], np.asarray(ids, np.int32))
+            np.save(paths["vals"], np.asarray(vals, np.float32))
+            np.save(paths["nnz"], np.asarray(nnz, np.int32))
+        np.save(os.path.join(directory, "df.npy"), np.asarray(self.df))
+        with open(os.path.join(directory, _META), "w") as f:
+            json.dump({"format": STORE_FORMAT, "n_docs": self.n_docs,
+                       "dim": self.dim, "chunk_size": self.chunk_size,
+                       "pad_width": self.pad_width,
+                       "n_chunks": self.n_chunks}, f)
+        return DocStore.open(directory)
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingest.
+# ---------------------------------------------------------------------------
+
+class DocStoreBuilder:
+    """One-pass streaming corpus ingest → preprocessed on-disk DocStore.
+
+    ``append`` takes raw (ids, vals) row batches in corpus order, spilling
+    full raw chunks to ``<directory>/raw_*`` while folding their live ids
+    into the global df counts — the corpus is never resident.  ``finalize``
+    then streams every raw chunk once through the paper's preprocessing
+    with the now-known global statistics:
+
+      1. tf-idf:  ``val *= log(N / df_term)``          (Eq. 15);
+      2. df-rank remap: ids → ascending-df rank, rows re-sorted so the
+         ``id >= t_th`` suffix is contiguous            (Table I);
+      3. L2 normalisation onto the unit sphere;
+      4. tail padding: the final chunk is topped up with dead rows
+         (nnz = 0) under the ρ_self = 0 convention.
+
+    The raw spill files are deleted on successful finalize.
+    """
+
+    def __init__(self, directory: str, *, dim: int, chunk_size: int,
+                 pad_width: int):
+        self.directory = directory
+        self.dim = int(dim)
+        self.chunk_size = int(chunk_size)
+        self.pad_width = int(pad_width)
+        os.makedirs(directory, exist_ok=True)
+        self._df = np.zeros((dim,), np.int64)
+        self._buf = []            # pending rows: list of (ids, vals, nnz)
+        self._buffered = 0
+        self._n_docs = 0
+        self._n_raw = 0
+        self._finalized = False
+
+    def append(self, ids, vals, nnz=None) -> "DocStoreBuilder":
+        """Add a batch of rows: ids (B, p<=P) int, vals (B, p) float; nnz
+        defaults to the per-row count of non-zero vals."""
+        if self._finalized:
+            raise RuntimeError("builder already finalized")
+        ids = np.asarray(ids, np.int32)
+        vals = np.asarray(vals, np.float32)
+        if ids.shape != vals.shape or ids.ndim != 2:
+            raise ValueError("ids/vals must be matching (B, p) arrays")
+        if ids.shape[1] > self.pad_width:
+            raise ValueError(f"rows have {ids.shape[1]} tuple slots > "
+                             f"pad_width {self.pad_width}")
+        nnz = (np.sum(vals != 0.0, axis=1).astype(np.int32)
+               if nnz is None else np.asarray(nnz, np.int32))
+        b, p = ids.shape
+        wide_i = np.zeros((b, self.pad_width), np.int32)
+        wide_v = np.zeros((b, self.pad_width), np.float32)
+        wide_i[:, :p], wide_v[:, :p] = ids, vals
+        live = np.arange(self.pad_width)[None, :] < nnz[:, None]
+        if int(wide_i[live].max(initial=0)) >= self.dim:
+            raise ValueError("term id out of range for dim")
+        self._df += np.bincount(wide_i[live].ravel(), minlength=self.dim)
+        self._buf.append((wide_i, np.where(live, wide_v, 0.0), nnz))
+        self._buffered += b
+        self._n_docs += b
+        while self._buffered >= self.chunk_size:
+            self._spill()
+        return self
+
+    def _take(self, n: int):
+        out, taken = [], 0
+        while taken < n:
+            ids, vals, nnz = self._buf[0]
+            take = min(n - taken, len(nnz))
+            out.append((ids[:take], vals[:take], nnz[:take]))
+            if take == len(nnz):
+                self._buf.pop(0)
+            else:
+                self._buf[0] = (ids[take:], vals[take:], nnz[take:])
+            taken += take
+        self._buffered -= n
+        return (np.concatenate([o[0] for o in out]),
+                np.concatenate([o[1] for o in out]),
+                np.concatenate([o[2] for o in out]))
+
+    def _spill(self):
+        ids, vals, nnz = self._take(min(self.chunk_size, self._buffered))
+        stem = os.path.join(self.directory, f"raw_{self._n_raw:05d}")
+        np.save(f"{stem}.ids.npy", ids)
+        np.save(f"{stem}.vals.npy", vals)
+        np.save(f"{stem}.nnz.npy", nnz)
+        self._n_raw += 1
+
+    def finalize(self, *, tf_idf: bool = True, normalize: bool = True,
+                 remap: bool = True) -> DocStore:
+        """Stream the spilled chunks through preprocessing; returns the
+        opened disk-backed DocStore (ids ascend by df-rank per row when
+        ``remap``, matching :func:`repro.sparse.remap_terms_by_df`)."""
+        if self._finalized:
+            raise RuntimeError("builder already finalized")
+        if self._n_docs == 0:
+            raise ValueError("no documents appended")
+        if self._buffered:
+            self._spill()
+        self._finalized = True
+
+        df = self._df
+        perm = np.argsort(df, kind="stable")       # perm[new] = old
+        inv = np.argsort(perm, kind="stable")      # inv[old] = new
+        idf = np.log(float(self._n_docs)
+                     / np.maximum(df.astype(np.float64), 1.0)).astype(np.float32)
+        c, p = self.chunk_size, self.pad_width
+
+        n_out = 0
+        for ri in range(self._n_raw):
+            stem = os.path.join(self.directory, f"raw_{ri:05d}")
+            ids = np.load(f"{stem}.ids.npy")
+            vals = np.load(f"{stem}.vals.npy")
+            nnz = np.load(f"{stem}.nnz.npy")
+            live = np.arange(p)[None, :] < nnz[:, None]
+            if tf_idf:
+                vals = np.where(live, vals * idf[ids], 0.0).astype(np.float32)
+            if remap:
+                new_ids = inv[ids]
+                key = np.where(live, new_ids, self.dim)
+                order = np.argsort(key, axis=1, kind="stable")
+                ids = np.take_along_axis(
+                    np.where(live, new_ids, 0), order, axis=1).astype(np.int32)
+                vals = np.take_along_axis(
+                    np.where(live, vals, np.float32(0.0)), order, axis=1)
+            if normalize:
+                norm = np.sqrt(np.sum(vals.astype(np.float64) ** 2, axis=1)
+                               + 1e-12)
+                vals = (vals / norm[:, None].astype(np.float32)).astype(
+                    np.float32)
+            if len(nnz) < c:                         # dead-row tail padding
+                pad = c - len(nnz)
+                ids = np.concatenate([ids, np.zeros((pad, p), np.int32)])
+                vals = np.concatenate([vals, np.zeros((pad, p), np.float32)])
+                nnz = np.concatenate([nnz, np.zeros((pad,), np.int32)])
+            paths = _chunk_paths(self.directory, ri)
+            np.save(paths["ids"], ids)
+            np.save(paths["vals"], vals)
+            np.save(paths["nnz"], nnz)
+            n_out += 1
+            for name in ("ids", "vals", "nnz"):
+                os.remove(f"{stem}.{name}.npy")
+
+        np.save(os.path.join(self.directory, "df.npy"),
+                (df[perm] if remap else df).astype(np.int32))
+        with open(os.path.join(self.directory, _META), "w") as f:
+            json.dump({"format": STORE_FORMAT, "n_docs": self._n_docs,
+                       "dim": self.dim, "chunk_size": c, "pad_width": p,
+                       "n_chunks": n_out}, f)
+        return DocStore.open(self.directory)
+
+    def abort(self):
+        """Delete everything the builder wrote (crash-cleanup helper)."""
+        shutil.rmtree(self.directory, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Async host→device prefetch.
+# ---------------------------------------------------------------------------
+
+class ChunkPrefetcher:
+    """Double-buffered host→device chunk feed.
+
+    A background thread reads chunk ``i+1`` from the store (a memmap page-in
+    on disk stores) and enqueues its ``jax.device_put`` — an *async* H2D
+    copy — while the consumer computes on chunk ``i``; ``depth`` bounds the
+    number of chunks resident on device at once (default 2 = classic double
+    buffering).  Iterating yields ``(chunk_index, SparseDocs-on-device)`` in
+    ``order`` (default: sequential).  Producer exceptions re-raise at the
+    consumer's next pull, so a torn disk read cannot hang the fit.
+    """
+
+    def __init__(self, store: DocStore, *, depth: int = 2, order=None,
+                 device=None):
+        self.store = store
+        self.depth = max(int(depth), 1)
+        self.order = list(range(store.n_chunks)) if order is None else list(order)
+        self.device = device
+
+    def __iter__(self):
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+        _END, _ERR = object(), object()
+
+        def put(item) -> bool:
+            # Bounded-wait puts so an abandoned consumer (exception or
+            # early break in the driving loop) cannot park this thread on
+            # a full queue forever, pinning `depth` prefetched chunks.
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def produce():
+            try:
+                for ci in self.order:
+                    if stop.is_set():
+                        return
+                    docs = self.store.chunk(ci)
+                    if self.device is not None:
+                        docs = jax.device_put(docs, self.device)
+                    if not put((ci, docs)):
+                        return
+                put(_END)
+            except BaseException as e:          # rethrown at the consumer
+                put((_ERR, e))
+
+        t = threading.Thread(target=produce, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _END:
+                    break
+                if isinstance(item, tuple) and item[0] is _ERR:
+                    raise item[1]
+                yield item
+        finally:
+            # Runs on exhaustion AND on generator close (consumer bailed):
+            # unblock the producer, then drop whatever it already staged.
+            stop.set()
+            t.join()
+            while not q.empty():
+                q.get_nowait()
+
+
+def as_store(docs, *, chunk_size: int | None = None) -> DocStore:
+    """Coerce SparseDocs | DocStore → DocStore (the strategies' front gate)."""
+    if isinstance(docs, DocStore):
+        return docs
+    return DocStore.from_docs(docs, chunk_size=chunk_size)

@@ -18,6 +18,7 @@ EXPECTED_ALL = [
     "STRATEGIES",
     "SingleHostStrategy",
     "SphericalKMeans",
+    "StreamingStrategy",
     "classify_docs",
     "fit",
     "load_model",
@@ -25,13 +26,19 @@ EXPECTED_ALL = [
     "transform_docs",
 ]
 
+# The execution-strategy registry (satellite of the out-of-core PR): the
+# streaming runtime is a first-class strategy, and unknown names fail with
+# the full valid list.
+EXPECTED_STRATEGIES = ["mesh", "single_host", "streaming"]
+
 EXPECTED_SIGNATURES = {
     "SphericalKMeans.__init__":
         "(self, k: 'int', *, algo: 'str' = 'esicp', params='auto', "
         "backend: 'str' = 'reference', batch_size: 'int' = 4096, "
         "max_iter: 'int' = 60, est_grid: 'EstGrid | None' = None, "
         "est_iters=(1, 2), seed: 'int' = 0, mesh=None, "
-        "chunk_size: 'int' = 1024, checkpoint_dir: 'str | None' = None, "
+        "chunk_size: 'int' = 1024, algo_mode: 'str' = 'full', "
+        "checkpoint_dir: 'str | None' = None, "
         "checkpoint_every: 'int' = 5)",
     "SphericalKMeans.fit": "(self, docs, df=None) -> 'SphericalKMeans'",
     "SphericalKMeans.predict": "(self, docs) -> 'np.ndarray'",
@@ -73,13 +80,13 @@ EXPECTED_SIGNATURES = {
 
 EXPECTED_CONFIG_FIELDS = [
     "k", "algo", "backend", "params", "batch_size", "chunk_size", "max_iter",
-    "est_grid", "est_iters", "seed", "mesh", "checkpoint_dir",
+    "est_grid", "est_iters", "seed", "mesh", "algo_mode", "checkpoint_dir",
     "checkpoint_every",
 ]
 
 EXPECTED_MODEL_FIELDS = [
     "index", "labels", "rho_self", "history", "converged", "n_iter", "algo",
-    "backend", "strategy",
+    "backend", "strategy", "cursor",
 ]
 
 
@@ -110,6 +117,25 @@ def test_config_and_model_fields_snapshot():
         == EXPECTED_CONFIG_FIELDS
     assert [f.name for f in dataclasses.fields(rc.FittedModel)] \
         == EXPECTED_MODEL_FIELDS
+
+
+def test_strategy_registry_snapshot_and_error_lists_valid_names():
+    """The registry holds exactly the three runtimes, and resolving an
+    unknown strategy names every valid one in the error (deprecation
+    hygiene: callers learn the streaming runtime exists)."""
+    import pytest
+
+    assert sorted(rc.STRATEGIES) == EXPECTED_STRATEGIES
+    for name, strategy in rc.STRATEGIES.items():
+        assert strategy.name == name
+
+    class _BogusConfig:          # e.g. a subclass overriding .strategy
+        strategy = "async-parameter-server"
+
+    with pytest.raises(ValueError) as ei:
+        rc.resolve_strategy(_BogusConfig())
+    for name in EXPECTED_STRATEGIES:
+        assert name in str(ei.value)
 
 
 def test_core_reexport_is_the_same_estimator():

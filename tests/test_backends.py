@@ -213,6 +213,30 @@ def test_fit_host_syncs_o1_per_fit(small_corpus, monkeypatch):
     assert len(pulls) == 3                 # 2 prologue + 1 fused remainder
 
 
+def test_streaming_fit_host_syncs_o1_per_epoch(small_corpus, monkeypatch):
+    """The chunk-scan extension of the host-sync discipline: a streaming
+    fit over a multi-chunk DocStore pulls EXACTLY once per epoch — the
+    convergence/diagnostics read — however many chunks stream through
+    (per-chunk steps are async dispatches, never device_get)."""
+    from repro.sparse import DocStore
+
+    docs, df, perm, topics = small_corpus
+    store = DocStore.from_docs(docs, chunk_size=375)      # 4 chunks
+    assert store.n_chunks >= 4
+    pulls = []
+    real_pull = lloyd._host_pull
+
+    def counting_pull(x):
+        pulls.append(1)
+        return real_pull(x)
+
+    monkeypatch.setattr(lloyd, "_host_pull", counting_pull)
+    res = SphericalKMeans(k=12, algo="esicp", max_iter=12, batch_size=375,
+                          seed=4).fit(store, df=df)
+    assert res.n_iter_ >= 3
+    assert len(pulls) == res.n_iter_       # one sync per epoch, O(1)/epoch
+
+
 def test_fused_fit_matches_per_iteration_loop(small_corpus):
     """Converged results of the fused while_loop fit are identical to a
     host-stepped per-iteration loop over the same building blocks."""

@@ -21,3 +21,35 @@ def test_write_bench_json(tmp_path):
                        "us_per_call": 12.5, "backend": "reference"}
     assert {e["backend"] for e in data} == {"reference", "pallas"}
     assert all(e["us_per_call"] > 0 for e in data)
+
+
+def test_write_bench_json_warmup_column(tmp_path):
+    """The optional 4th CSV column becomes a ``warmup_us`` field, keeping
+    steady-state us_per_call separate from one-off compile time."""
+    rows = ["fused_iteration/update_pallas,8.00,pallas,12825990.89",
+            "fused_iteration/fit_per_iter,100.00,reference"]
+    path = write_bench_json(rows, str(tmp_path / "bench.json"))
+    data = json.loads(open(path).read())
+    assert data[0] == {"name": "fused_iteration/update_pallas",
+                       "us_per_call": 8.0, "backend": "pallas",
+                       "warmup_us": 12825990.89}
+    assert "warmup_us" not in data[1]          # 3-column rows stay as-is
+
+
+def test_time_call_warm_excludes_first_call():
+    from benchmarks.common import time_call_warm
+
+    calls = []
+
+    def fn():
+        import time
+        calls.append(1)
+        if len(calls) == 1:
+            time.sleep(0.05)           # "compile" on the first call only
+        return len(calls)
+
+    out, best, warmup = time_call_warm(fn, repeat=2)
+    assert len(calls) == 3             # 1 warmup + 2 timed
+    assert out == 3
+    assert warmup >= 0.05
+    assert best < warmup               # steady-state excludes the warmup

@@ -63,6 +63,20 @@ def test_async_checkpointer(tmp_path):
                                np.ones(5) * 3)
 
 
+def test_async_checkpointer_extra_sidecar(tmp_path):
+    """The async saver commits the JSON sidecar atomically with the payload
+    (the streaming fit's resume cursor rides this)."""
+    from repro.checkpoint.store import load_extra
+
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep=2)
+    extra = {"cursor": [2, 3], "note": "mid-epoch"}
+    ck.save(_tree(1), step=1, extra=extra)
+    extra["cursor"] = [9, 9]          # caller mutation must not tear the save
+    ck.wait()
+    assert load_extra(d, step=1)["cursor"] == [2, 3]
+
+
 def test_mesh_fit_resume_from_checkpoint(tmp_path, small_corpus):
     """Fault-tolerance loop: checkpoint mid-run, restore, verify payload —
     driven through the unified estimator (mesh strategy + checkpoint_dir)."""

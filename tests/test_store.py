@@ -1,0 +1,419 @@
+"""Out-of-core data plane: DocStore, streaming builder, prefetcher, and the
+chunk-scan / minibatch streaming fits (DESIGN.md §10).
+
+Acceptance criteria under test:
+
+  * a one-chunk DocStore fit is bitwise-identical to the resident
+    ``fit(docs)`` (labels AND every deterministic history diagnostic);
+  * a ≥ 4-chunk store completes in both full-batch (chunk-scan) and
+    minibatch modes; full-batch matches the resident clustering;
+  * minibatch monotonically improves the valid-masked objective;
+  * a fit is resumable from a MID-EPOCH checkpoint with identical final
+    labels and history;
+  * the seeded ``SparseDocs.df`` survives a jit round-trip (it is an
+    explicit pytree leaf now, not a silently-dropped property cache);
+  * classify/predict over a store equals the resident path on every
+    runtime surface (FittedModel, ClusterEngine, mesh).
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import ClusterConfig, ClusterEngine, SphericalKMeans
+from repro.core.lloyd import streaming_fit
+from repro.data import make_corpus, CorpusSpec
+from repro.sparse import (ChunkPrefetcher, DocStore, DocStoreBuilder,
+                          SparseDocs, df_counts, from_dense,
+                          l2_normalize_rows, remap_terms_by_df, tf_idf,
+                          with_df)
+
+
+@pytest.fixture(scope="module")
+def tiny_corpus():
+    return make_corpus(CorpusSpec(n_docs=400, vocab=512, nt_mean=20,
+                                  n_topics=8, seed=0))
+
+
+@pytest.fixture(scope="module")
+def resident_fit(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=20, batch_size=100,
+                         seed=1).fit(docs, df=df)
+    assert km.converged_
+    return km
+
+
+# ---------------------------------------------------------------------------
+# SparseDocs.df as an explicit leaf.
+# ---------------------------------------------------------------------------
+
+def test_df_survives_jit_roundtrip(tiny_corpus):
+    """Regression: the seeded df used to live in a cached_property's
+    instance __dict__, which every tree_unflatten (jit boundaries,
+    donation) silently dropped.  As an explicit optional leaf it must come
+    back from a jit round-trip carried, not recounted."""
+    docs, df, perm, topics = tiny_corpus
+    seeded = with_df(docs, df)
+    assert seeded._df is not None
+
+    out = jax.jit(lambda d: d)(seeded)
+    assert out._df is not None                       # survived unflatten
+    np.testing.assert_array_equal(np.asarray(out.df), np.asarray(df))
+
+    # the leaf also survives being a scan carry / closure constant
+    out2 = jax.jit(lambda d: d.slice_rows(0, 8) and d)(seeded)
+    assert out2._df is not None
+
+    # None stays None (no phantom leaf), and .df still counts on demand
+    bare = SparseDocs(ids=docs.ids, vals=docs.vals, nnz=docs.nnz,
+                      dim=docs.dim)
+    bare_out = jax.jit(lambda d: d)(bare)
+    assert bare_out._df is None
+    np.testing.assert_array_equal(np.asarray(bare_out.df),
+                                  np.asarray(df_counts(docs)))
+
+
+def test_remap_carries_permuted_df():
+    docs = from_dense(np.eye(6, dtype=np.float32) * 2.0)
+    df = df_counts(docs)
+    remapped, perm = remap_terms_by_df(docs, df=df)
+    assert remapped._df is not None
+    np.testing.assert_array_equal(np.asarray(remapped.df),
+                                  np.asarray(df)[np.asarray(perm)])
+
+
+# ---------------------------------------------------------------------------
+# DocStore + builder.
+# ---------------------------------------------------------------------------
+
+def test_builder_matches_resident_preprocessing(tmp_path):
+    """Streaming ingest (spill + finalize) reproduces the jnp pipeline:
+    tf-idf → df-rank remap → L2, with the final chunk tail-padded dead."""
+    rng = np.random.default_rng(3)
+    n, d, p = 230, 64, 12
+    dense = np.zeros((n, d), np.float32)
+    for i in range(n):
+        cols = rng.choice(d, size=int(rng.integers(3, p)), replace=False)
+        dense[i, cols] = rng.integers(1, 5, size=len(cols)).astype(np.float32)
+
+    raw = from_dense(dense, pad_to=p)
+    df = df_counts(raw)
+    ref = l2_normalize_rows(tf_idf(raw, df=df))
+    ref, perm = remap_terms_by_df(ref, df=df)
+
+    builder = DocStoreBuilder(str(tmp_path / "store"), dim=d, chunk_size=64,
+                              pad_width=p)
+    for s in range(0, n, 37):                       # uneven append batches
+        e = min(s + 37, n)
+        builder.append(np.asarray(raw.ids[s:e]), np.asarray(raw.vals[s:e]),
+                       np.asarray(raw.nnz[s:e]))
+    store = builder.finalize()
+
+    assert store.n_docs == n and store.n_chunks == 4
+    assert store.n_rows == 4 * 64                   # uniform chunk shapes
+    out = store.to_docs()
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(np.asarray(out.vals), np.asarray(ref.vals),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out.nnz), np.asarray(ref.nnz))
+    np.testing.assert_array_equal(np.asarray(store.df),
+                                  np.asarray(df)[np.asarray(perm)])
+    # tail padding: dead rows, ρ_self = 0 convention (no live tuples)
+    _, _, last_nnz = store.host_chunk(store.n_chunks - 1)
+    assert (np.asarray(last_nnz)[n - 3 * 64:] == 0).all()
+    # raw spill files were cleaned up
+    assert not [f for f in os.listdir(store.directory)
+                if f.startswith("raw_")]
+
+    # save/open round-trip of the in-memory wrapper too
+    wrapped = DocStore.from_docs(out, chunk_size=100)
+    reopened = DocStore.open(wrapped.save(str(tmp_path / "resaved")).directory)
+    np.testing.assert_array_equal(np.asarray(reopened.host_chunk(0)[0]),
+                                  np.asarray(wrapped.host_chunk(0)[0]))
+
+
+def test_prefetcher_orders_and_propagates_errors(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    assert [ci for ci, _ in ChunkPrefetcher(store)] == [0, 1, 2, 3]
+    assert [ci for ci, _ in ChunkPrefetcher(store, order=[2, 0])] == [2, 0]
+    with pytest.raises(IndexError):
+        list(ChunkPrefetcher(store, order=[0, 99]))
+
+
+def test_prefetcher_abandoned_consumer_unblocks_producer(tiny_corpus):
+    """Breaking out of the chunk loop (a failed per-chunk step) must not
+    leave the producer thread parked on the full queue forever."""
+    import threading
+    import time
+
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=50)     # 8 chunks, depth 2
+    before = threading.active_count()
+    for ci, cdocs in ChunkPrefetcher(store):
+        break                                           # consumer bails
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before
+
+
+def test_gather_rows_matches_fancy_indexing(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=128)
+    pick = np.asarray([399, 0, 130, 130, 77])
+    sel = store.gather_rows(pick)
+    np.testing.assert_array_equal(np.asarray(sel.ids),
+                                  np.asarray(docs.ids)[pick])
+    np.testing.assert_array_equal(np.asarray(sel.vals),
+                                  np.asarray(docs.vals)[pick])
+
+
+# ---------------------------------------------------------------------------
+# Chunked-vs-resident parity.
+# ---------------------------------------------------------------------------
+
+def _assert_history_parity(h_ref, h_new, *, exact_floats=True):
+    assert len(h_ref) == len(h_new)
+    for hr, hn in zip(h_ref, h_new):
+        for key in ("iteration", "n_changed", "n_moving", "t_th"):
+            assert hr[key] == hn[key], key
+        for key in ("mult", "cpr", "objective", "v_th"):
+            if exact_floats:
+                assert hr[key] == hn[key], key
+            elif key in ("mult", "cpr"):
+                # Pruning diagnostics: chunked λ accumulation shifts the
+                # means by last-bit rounding, which can flip a marginal
+                # ES-filter survivor — assignments stay identical (asserted
+                # above), the visited-pair counts may jitter slightly.
+                np.testing.assert_allclose(hr[key], hn[key], rtol=1e-2,
+                                           err_msg=key)
+            else:
+                np.testing.assert_allclose(hr[key], hn[key], rtol=1e-6,
+                                           err_msg=key)
+
+
+def test_one_chunk_store_is_bitwise_identical(tiny_corpus, resident_fit):
+    """fit(one-chunk store) == fit(docs): labels bitwise, every
+    deterministic history field bitwise (elapsed_s is wall time)."""
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs)                # ONE chunk
+    assert store.n_chunks == 1
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=20, batch_size=100,
+                         seed=1).fit(store, df=df)
+    assert km.model_.strategy == "streaming"
+    assert km.n_iter_ == resident_fit.n_iter_
+    assert (km.labels_ == resident_fit.labels_).all()
+    np.testing.assert_array_equal(np.asarray(km.model_.rho_self),
+                                  np.asarray(resident_fit.model_.rho_self))
+    _assert_history_parity(resident_fit.history_, km.history_)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_multichunk_full_batch_matches_resident(tiny_corpus, backend):
+    """≥ 4 chunks, full-batch chunk-scan mode: the out-of-core epoch is
+    mathematically the resident epoch (same assignments, same means), so
+    the clustering must agree across chunkings and backends."""
+    docs, df, perm, topics = tiny_corpus
+    ref = SphericalKMeans(k=8, algo="esicp", max_iter=20, batch_size=100,
+                          seed=1, backend=backend).fit(docs, df=df)
+    store = DocStore.from_docs(docs, chunk_size=100)
+    assert store.n_chunks >= 4
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=20, batch_size=100,
+                         seed=1, backend=backend).fit(store, df=df)
+    assert km.converged_
+    assert len(km.labels_) == docs.n_docs
+    assert (km.labels_ == ref.labels_).all()
+    _assert_history_parity(ref.history_, km.history_, exact_floats=False)
+
+
+def test_multichunk_tail_padding_is_inert(tiny_corpus):
+    """n % chunk_size != 0: the dead tail rows of the final chunk change
+    nothing (the store-side mirror of the resident tail-batch test)."""
+    docs, df, perm, topics = tiny_corpus           # n = 400
+    even = DocStore.from_docs(docs, chunk_size=100)     # 400 % 100 == 0
+    ragged = DocStore.from_docs(docs, chunk_size=150)   # 400 % 150 == 100
+    a = SphericalKMeans(k=8, max_iter=20, batch_size=50,
+                        seed=1).fit(even, df=df)
+    b = SphericalKMeans(k=8, max_iter=20, batch_size=50,
+                        seed=1).fit(ragged, df=df)
+    assert (a.labels_ == b.labels_).all()
+    for h in b.history_:
+        assert np.isfinite(h["objective"])
+    np.testing.assert_allclose(a.objective_, b.objective_, rtol=1e-5)
+
+
+def test_minibatch_monotone_objective(tiny_corpus):
+    """Sculley-style minibatch: the valid-masked objective J must improve
+    monotonically across passes on the well-separated synthetic corpus."""
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    km = SphericalKMeans(k=8, algo_mode="minibatch", max_iter=15,
+                         batch_size=100, chunk_size=100,
+                         seed=1).fit(store, df=df)
+    obj = [h["objective"] for h in km.history_]
+    assert len(obj) >= 2
+    for prev, nxt in zip(obj, obj[1:]):
+        assert nxt >= prev - 1e-4 * abs(prev)      # monotone (float tol)
+    assert obj[-1] > obj[0]
+    # minibatch is exact-assignment: history mult is 0, cpr saturated
+    assert all(h["mult"] == 0 for h in km.history_)
+    # resident docs route through the same strategy via config.algo_mode
+    km2 = SphericalKMeans(k=8, algo_mode="minibatch", max_iter=15,
+                          batch_size=100, chunk_size=100,
+                          seed=1).fit(docs, df=df)
+    assert km2.model_.strategy == "streaming"
+    assert (km2.labels_ == km.labels_).all()
+
+
+# ---------------------------------------------------------------------------
+# Mid-epoch checkpoint / resume.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo_mode", ["full", "minibatch"])
+def test_resume_from_mid_epoch_checkpoint(tiny_corpus, tmp_path, algo_mode):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    ckpt = str(tmp_path / "ckpt")
+    full = streaming_fit(store, k=8, algo_mode=algo_mode, max_iter=20,
+                         batch_size=100, seed=1, df=df,
+                         checkpoint_dir=ckpt, checkpoint_every=3)
+    assert full.converged and full.cursor is None
+
+    from repro.checkpoint.store import all_steps
+    steps = all_steps(ckpt)
+    mid = [s for s in steps if s % (store.n_chunks + 1) != 0]
+    assert mid, "expected a surviving mid-epoch checkpoint"
+    target = mid[-1]
+    for s in steps:                    # rewind the run to the mid-epoch cut
+        if s > target:
+            shutil.rmtree(os.path.join(ckpt, f"step_{s:08d}"))
+
+    resumed = streaming_fit(store, k=8, algo_mode=algo_mode, max_iter=20,
+                            batch_size=100, seed=1, df=df,
+                            checkpoint_dir=ckpt, resume=True)
+    assert (resumed.assign == full.assign).all()
+    assert resumed.n_iter == full.n_iter
+    _assert_history_parity(full.history, resumed.history)
+
+
+def test_resume_requires_checkpoint_dir(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        streaming_fit(store, k=4, resume=True)
+
+
+def test_resume_rejects_algo_mode_mismatch(tiny_corpus, tmp_path):
+    """A minibatch checkpoint resumed in full mode (shapes alias!) must
+    fail loudly, not finish with silently wrong labels."""
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    ckpt = str(tmp_path / "ckpt")
+    streaming_fit(store, k=8, algo_mode="minibatch", max_iter=2,
+                  batch_size=100, seed=1, df=df, checkpoint_dir=ckpt,
+                  checkpoint_every=2)
+    with pytest.raises(ValueError, match="algo_mode"):
+        streaming_fit(store, k=8, algo_mode="full", max_iter=2,
+                      batch_size=100, seed=1, df=df, checkpoint_dir=ckpt,
+                      resume=True)
+
+
+def test_prime_chunk_size_pads_instead_of_degrading(tiny_corpus):
+    """chunk_size sharing no divisor with batch_size (e.g. a prime): the
+    chunk steps pad to the tile multiple with dead rows — same clustering,
+    no silent per-row-scan degradation."""
+    docs, df, perm, topics = tiny_corpus                # n = 400
+    ref = SphericalKMeans(k=8, max_iter=20, batch_size=100,
+                          seed=1).fit(docs, df=df)
+    store = DocStore.from_docs(docs, chunk_size=149)    # prime, 3 chunks
+    km = SphericalKMeans(k=8, max_iter=20, batch_size=100,
+                         seed=1).fit(store, df=df)
+    assert (km.labels_ == ref.labels_).all()
+    model = ref.model_
+    assert (model.predict(store) == model.predict(docs)).all()
+
+
+def test_uncoverged_streaming_fit_reports_cursor(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    km = SphericalKMeans(k=8, max_iter=2, batch_size=100,
+                         seed=1).fit(store, df=df)
+    assert not km.converged_
+    assert km.model_.cursor == (3, 0)              # resume at epoch 3
+
+
+# ---------------------------------------------------------------------------
+# Serving / artifact over a store.
+# ---------------------------------------------------------------------------
+
+def test_classify_and_predict_over_store(tiny_corpus, resident_fit,
+                                         tmp_path):
+    docs, df, perm, topics = tiny_corpus
+    model = resident_fit.model_
+    store = DocStore.from_docs(docs, chunk_size=150)
+
+    a_res = model.predict(docs)
+    a_store = model.predict(store)
+    assert (a_store == a_res).all()
+    np.testing.assert_allclose(model.transform(store), model.transform(docs),
+                               rtol=1e-5, atol=1e-6)
+
+    engine = ClusterEngine.from_model(model)
+    ea, es = engine.classify(store)
+    ra, rs = engine.classify(docs)
+    assert (ea == ra).all()
+    np.testing.assert_allclose(es, rs, rtol=1e-5, atol=1e-6)
+
+    # the artifact round-trips its cursor field
+    path = str(tmp_path / "model")
+    model.save(path)
+    from repro.cluster import FittedModel
+    assert FittedModel.load(path).cursor is None
+
+
+def test_mesh_fit_over_store_matches_mesh_fit_over_docs():
+    from repro.launch.mesh import make_test_mesh
+
+    docs, df, perm, topics = make_corpus(
+        CorpusSpec(n_docs=300, vocab=256, nt_mean=20, n_topics=6, seed=13))
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    ref = SphericalKMeans(k=8, algo="esicp", max_iter=15, chunk_size=64,
+                          mesh=mesh, seed=1).fit(docs, df=df)
+    store = DocStore.from_docs(docs, chunk_size=80)
+    km = SphericalKMeans(k=8, algo="esicp", max_iter=15, chunk_size=64,
+                         mesh=mesh, seed=1).fit(store)
+    assert km.model_.strategy == "mesh"
+    assert (km.labels_ == ref.labels_).all()
+    np.testing.assert_allclose(km.model_.rho_self, ref.model_.rho_self,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Config / strategy routing.
+# ---------------------------------------------------------------------------
+
+def test_config_validates_algo_mode():
+    with pytest.raises(ValueError, match="algo_mode"):
+        ClusterConfig(k=4, algo_mode="bogus").validate()
+    assert ClusterConfig(k=4, algo_mode="minibatch").strategy == "streaming"
+    assert ClusterConfig(k=4).strategy == "single_host"
+
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="streaming"):
+        ClusterConfig(k=4, algo_mode="minibatch", mesh=mesh).validate()
+
+
+def test_docstore_input_promotes_to_streaming(tiny_corpus):
+    from repro.cluster import resolve_strategy
+
+    docs, df, perm, topics = tiny_corpus
+    cfg = ClusterConfig(k=8)
+    assert resolve_strategy(cfg).name == "single_host"
+    assert resolve_strategy(cfg, docs).name == "single_host"
+    assert resolve_strategy(cfg, DocStore.from_docs(docs)).name == "streaming"
