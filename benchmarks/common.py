@@ -88,3 +88,36 @@ def csv_row(name: str, us_per_call: float, derived: str = "",
     carries the per-case warmup (compile) time for JSON-emitting suites."""
     row = f"{name},{us_per_call:.2f},{derived}"
     return row if warmup_us is None else f"{row},{warmup_us:.2f}"
+
+
+def exec_meta(backend: str = "") -> dict:
+    """Execution metadata every machine-readable bench row must carry.
+
+    ``platform`` is the live ``jax.default_backend()``; ``interpret`` flags
+    whether the timed path dispatched Pallas kernels in interpret mode (the
+    off-TPU default in kernels/ops.py) — true only for pallas-backend rows
+    off TPU, never for reference rows, which run plain XLA and remain valid
+    CPU baselines.  An interpret-mode timing is a *correctness-path*
+    measurement orders of magnitude off real kernel time — rows wear the
+    flag precisely so a multi-second interpreted ``update_pallas`` can
+    never be misread as a TPU regression.
+    """
+    import jax
+
+    platform = jax.default_backend()
+    return {"platform": platform,
+            "interpret": backend == "pallas" and platform != "tpu"}
+
+
+def bench_row(name: str, us_per_call: float, backend: str = "", *,
+              warmup_us: float | None = None, **extra) -> dict:
+    """Dict bench row for JSON-emitting suites: name/us_per_call/backend +
+    the execution metadata from :func:`exec_meta` + any suite-specific
+    fields (e.g. per-kernel ``speedup`` ratios)."""
+    row = {"name": name, "us_per_call": round(float(us_per_call), 2),
+           "backend": backend}
+    if warmup_us is not None:
+        row["warmup_us"] = round(float(warmup_us), 2)
+    row.update(exec_meta(backend))
+    row.update(extra)
+    return row

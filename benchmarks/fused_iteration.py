@@ -22,7 +22,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (corpus, csv_row, default_backend,
+from benchmarks.common import (bench_row, corpus, default_backend,
                                make_estimator, time_call_warm)
 from repro.core.update import update_step
 from repro.sparse import DocStore, SparseDocs
@@ -55,16 +55,16 @@ def run():
             return out
 
         _, best, warm = time_call_warm(one_update)
-        rows.append(csv_row(f"fused_iteration/update_{backend}",
-                            best * 1e6, backend, warmup_us=warm * 1e6))
+        rows.append(bench_row(f"fused_iteration/update_{backend}",
+                              best * 1e6, backend, warmup_us=warm * 1e6))
 
     # Fused fit: wall-time per Lloyd iteration with O(1) host syncs.
     backend = default_backend()
     km = make_estimator(job.k, algo="esicp", max_iter=8, batch_size=4096, seed=0)
     res, best, warm = time_call_warm(lambda: km.fit(docs, df=df), repeat=1)
-    rows.append(csv_row("fused_iteration/fit_per_iter",
-                        best * 1e6 / max(res.n_iter_, 1), backend,
-                        warmup_us=warm * 1e6))
+    rows.append(bench_row("fused_iteration/fit_per_iter",
+                          best * 1e6 / max(res.n_iter_, 1), backend,
+                          warmup_us=warm * 1e6))
 
     # Streaming chunk-scan fit: the same epoch over a 4-chunk DocStore —
     # measures the out-of-core overhead (prefetch + per-chunk dispatch) vs
@@ -74,7 +74,7 @@ def run():
                          seed=0)
     sres, sbest, swarm = time_call_warm(lambda: skm.fit(store, df=df),
                                         repeat=1)
-    rows.append(csv_row("fused_iteration/stream_fit_per_iter",
-                        sbest * 1e6 / max(sres.n_iter_, 1), backend,
-                        warmup_us=swarm * 1e6))
+    rows.append(bench_row("fused_iteration/stream_fit_per_iter",
+                          sbest * 1e6 / max(sres.n_iter_, 1), backend,
+                          warmup_us=swarm * 1e6))
     return rows

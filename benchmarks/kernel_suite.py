@@ -1,0 +1,115 @@
+"""Kernel microbenchmark suite: each Pallas clustering kernel vs its
+pure-jnp reference op at matched shapes (ISSUE 5 satellite).
+
+For every kernel — ``sparse_sim``, ``esicp_gather``, ``segment_update``,
+``rho_gather`` — three rows:
+
+    kernel_suite/<name>_reference        the jnp oracle (kernels/ref.py)
+    kernel_suite/<name>_pallas           the wrapper, inline occupancy
+    kernel_suite/<name>_pallas_planned   the wrapper fed a prepared
+                                         KernelPlan (cached head slabs +
+                                         precomputed occupancy)
+
+Pallas rows carry ``speedup`` (= reference best / pallas best) so the
+machine-readable ``BENCH_kernels.json`` tracks per-kernel ratios across
+PRs, plus the platform/interpret execution metadata from
+``benchmarks.common.exec_meta`` — off-TPU the kernels run in interpret
+mode, where the ratio measures the correctness path, not TPU performance
+(the ``interpret`` flag says exactly that).
+
+Shapes follow the reduced-PubMed regime (Zipf-skewed synthetic corpus →
+realistic occupancy); ``REPRO_BENCH_SMOKE=1`` shrinks them for CI.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_row, time_call_warm
+from repro.kernels import ops, ref
+from repro.kernels.plan import prepare_plan
+
+
+def _shapes():
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return dict(b=256, p=32, d=1024, k=128, repeat=2)
+    return dict(b=512, p=64, d=2048, k=256, repeat=3)
+
+
+def _corpus(b: int, p: int, d: int, k: int, seed: int = 0):
+    """Zipf-skewed synthetic tuples in df-rank order: high-df terms at the
+    HIGH ids (ascending-df layout), so the occupancy/head machinery sees
+    the skew it was built for."""
+    rng = np.random.default_rng(seed)
+    # Zipf ranks over [1, d]; rank 1 = most frequent → highest df-rank id.
+    ranks = np.minimum(rng.zipf(1.3, size=(b, p)), d)
+    ids = np.sort((d - ranks).astype(np.int32), axis=1)
+    vals = rng.random((b, p)).astype(np.float32)
+    nnz = rng.integers(p // 2, p + 1, b)
+    for i in range(b):
+        vals[i, nnz[i]:] = 0.0
+    means_t = np.where(rng.random((d, k)) < 0.15,
+                       rng.random((d, k)), 0.0).astype(np.float32)
+    assign = rng.integers(0, k, b).astype(np.int32)
+    return (jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(means_t),
+            jnp.asarray(assign))
+
+
+def _timed(fn, repeat):
+    def call():
+        return jax.block_until_ready(fn())
+
+    return time_call_warm(call, repeat=repeat)
+
+
+def run():
+    cfg = _shapes()
+    b, p, d, k, repeat = cfg["b"], cfg["p"], cfg["d"], cfg["k"], cfg["repeat"]
+    ids, vals, means_t, assign = _corpus(b, p, d, k)
+    t_th = jnp.asarray(int(0.8 * d), jnp.int32)
+    v_th = jnp.asarray(0.1, jnp.float32)
+    plan = prepare_plan(ids, vals, dim=d)
+    shape_meta = {"B": b, "P": p, "D": d, "K": k}
+
+    cases = {
+        "sparse_sim": (
+            lambda: ref.sparse_sim(ids, vals, means_t),
+            lambda: ops.sparse_sim(ids, vals, means_t),
+            lambda: ops.sparse_sim(ids, vals, means_t, plan=plan),
+        ),
+        "esicp_gather": (
+            lambda: ref.esicp_gather(ids, vals, means_t, t_th, v_th),
+            lambda: ops.esicp_gather(ids, vals, means_t, t_th, v_th),
+            lambda: ops.esicp_gather(ids, vals, means_t, t_th, v_th,
+                                     plan=plan),
+        ),
+        "segment_update": (
+            lambda: ref.segment_update(assign, ids, vals, k, d),
+            lambda: ops.segment_update(assign, ids, vals, k=k, d=d),
+            lambda: ops.segment_update(assign, ids, vals, k=k, d=d,
+                                       plan=plan),
+        ),
+        "rho_gather": (
+            lambda: ref.rho_gather(assign, ids, vals, means_t),
+            lambda: ops.rho_gather(assign, ids, vals, means_t),
+            lambda: ops.rho_gather(assign, ids, vals, means_t, plan=plan),
+        ),
+    }
+
+    rows = []
+    for name, (ref_fn, pal_fn, planned_fn) in cases.items():
+        _, ref_best, ref_warm = _timed(jax.jit(ref_fn), repeat)
+        rows.append(bench_row(f"kernel_suite/{name}_reference",
+                              ref_best * 1e6, "reference",
+                              warmup_us=ref_warm * 1e6, **shape_meta))
+        for suffix, fn in (("pallas", pal_fn), ("pallas_planned",
+                                                planned_fn)):
+            _, best, warm = _timed(fn, repeat)
+            rows.append(bench_row(f"kernel_suite/{name}_{suffix}",
+                                  best * 1e6, "pallas", warmup_us=warm * 1e6,
+                                  speedup=round(ref_best / best, 4),
+                                  **shape_meta))
+    return rows

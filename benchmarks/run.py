@@ -5,9 +5,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Run everything:
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --only table4,fig7
 
-The ``fused`` suite additionally writes ``BENCH_fused_iteration.json``
-(name, us_per_call, backend) so the update-phase perf trajectory is
-machine-readable across PRs.
+The ``fused`` and ``kernels`` suites additionally write
+``BENCH_fused_iteration.json`` / ``BENCH_kernels.json`` so the update-phase
+and per-kernel perf trajectories are machine-readable across PRs; their
+rows carry ``platform``/``interpret`` execution metadata (and the kernel
+suite per-kernel ``speedup`` ratios) so interpret-mode Pallas timings are
+flagged as such.
 """
 from __future__ import annotations
 
@@ -30,21 +33,40 @@ SUITES = [
     ("apph", "benchmarks.apph_seeding"),
     ("roofline", "benchmarks.roofline_report"),
     ("fused", "benchmarks.fused_iteration"),
+    ("kernels", "benchmarks.kernel_suite"),
 ]
 
-JSON_SUITES = {"fused": "BENCH_fused_iteration.json"}
+JSON_SUITES = {"fused": "BENCH_fused_iteration.json",
+               "kernels": "BENCH_kernels.json"}
+
+
+def _as_csv(row) -> str:
+    """Printable CSV line for a row — dict rows render their core columns
+    (full metadata lives in the JSON artifact)."""
+    if isinstance(row, str):
+        return row
+    line = f"{row['name']},{row['us_per_call']:.2f},{row.get('backend', '')}"
+    if "warmup_us" in row:
+        line += f",{row['warmup_us']:.2f}"
+    return line
 
 
 def write_bench_json(rows, path: str) -> str:
-    """``name,us_per_call,derived[,warmup_us]`` CSV rows -> JSON file.
+    """Bench rows -> JSON file.
 
-    The derived column of JSON-emitting suites carries the backend name;
-    the optional 4th column is the per-case warmup (compile/trace) time,
-    recorded as a ``warmup_us`` field so steady-state ``us_per_call`` is
-    never conflated with one-off compilation again.
+    Rows are either dicts (``benchmarks.common.bench_row`` — carry the
+    execution metadata ``platform``/``interpret`` and any suite extras such
+    as per-kernel ``speedup``) or legacy ``name,us_per_call,derived
+    [,warmup_us]`` CSV strings.  The derived column of CSV rows carries the
+    backend name; the optional 4th column is the per-case warmup
+    (compile/trace) time, recorded as a ``warmup_us`` field so steady-state
+    ``us_per_call`` is never conflated with one-off compilation again.
     """
     entries = []
     for row in rows:
+        if isinstance(row, dict):
+            entries.append(dict(row))
+            continue
         name, us, rest = row.split(",", 2)
         derived, _, warmup = rest.partition(",")
         entry = {"name": name, "us_per_call": float(us), "backend": derived}
@@ -74,7 +96,7 @@ def main() -> None:
             mod = __import__(module, fromlist=["run"])
             rows = mod.run()
             for row in rows:
-                print(row, flush=True)
+                print(_as_csv(row), flush=True)
             if name in JSON_SUITES:
                 write_bench_json(rows, JSON_SUITES[name])
             print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},elapsed",

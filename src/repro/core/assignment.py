@@ -70,10 +70,10 @@ def _nt_tail(docs: SparseDocs, t_th) -> jax.Array:
 # Algorithms.  Each takes the backend as its first argument.
 # ---------------------------------------------------------------------------
 
-def _mivi(bk, docs, index, prev_assign, rho_self, xstate):
+def _mivi(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """Alg. 1 — exact TAAT over the mean-inverted index, no filters."""
     no_icp = jnp.zeros_like(xstate)
-    out = bk.accumulate(docs, index, no_icp, mode="exact")
+    out = bk.accumulate(docs, index, no_icp, mode="exact", plan=plan)
     assign, rho = _finalize(out["sims"], prev_assign, rho_self)
     k = index.k
     return AssignResult(assign, rho,
@@ -81,10 +81,10 @@ def _mivi(bk, docs, index, prev_assign, rho_self, xstate):
                         mult=out["mult"], changed=assign != prev_assign)
 
 
-def _icp(bk, docs, index, prev_assign, rho_self, xstate):
+def _icp(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """Auxiliary filter only (Kaukoranta+): skip invariant centroids for
     'more similar' objects."""
-    out = bk.accumulate(docs, index, xstate, mode="exact")
+    out = bk.accumulate(docs, index, xstate, mode="exact", plan=plan)
     col_ok = col_ok_mask(index, xstate)
     sims = jnp.where(col_ok, out["sims"], -jnp.inf)
     assign, rho = _finalize(sims, prev_assign, rho_self)
@@ -92,9 +92,9 @@ def _icp(bk, docs, index, prev_assign, rho_self, xstate):
     return AssignResult(assign, rho, n_cand, out["mult"], assign != prev_assign)
 
 
-def _es_core(bk, docs, index, prev_assign, rho_self, xstate):
+def _es_core(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """ES upper bound + optional ICP: Algs. 2/3 (and 4/5 with scaling)."""
-    out = bk.accumulate(docs, index, xstate, mode="esicp")
+    out = bk.accumulate(docs, index, xstate, mode="esicp", plan=plan)
     v_th = index.params.v_th
     col_ok = col_ok_mask(index, xstate)
     survivors, n_cand = bk.es_filter(out["rho12"], out["y"], rho_self,
@@ -107,24 +107,25 @@ def _es_core(bk, docs, index, prev_assign, rho_self, xstate):
                         assign != prev_assign)
 
 
-def _esicp(bk, docs, index, prev_assign, rho_self, xstate):
-    return _es_core(bk, docs, index, prev_assign, rho_self, xstate)
+def _esicp(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
+    return _es_core(bk, docs, index, prev_assign, rho_self, xstate, plan)
 
 
-def _es(bk, docs, index, prev_assign, rho_self, xstate):
+def _es(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """Ablation: ES main filter without ICP (App. D)."""
     return _es_core(bk, docs, index, prev_assign, rho_self,
-                    jnp.zeros_like(xstate))
+                    jnp.zeros_like(xstate), plan)
 
 
-def _ta_icp(bk, docs, index, prev_assign, rho_self, xstate):
+def _ta_icp(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """TA-ICP (App. F-A): per-object threshold v_ta = ρ_max / ||x||_1."""
     l1 = jnp.sum(docs.vals, axis=1)                       # ||x_i||_1 (vals >= 0)
     # ρ_max = -inf encodes "no history" (iteration 1): clamp to 0 so the
     # threshold degenerates to v_ta = 0 (everything exact, nothing pruned)
     # instead of poisoning the bound with 0·(-inf) = NaN.
     v_ta = jnp.maximum(rho_self, 0.0) / jnp.maximum(l1, 1e-12)
-    out = bk.accumulate(docs, index, xstate, mode="ta", v_ta=v_ta)
+    out = bk.accumulate(docs, index, xstate, mode="ta", v_ta=v_ta,
+                        plan=plan)
     col_ok = col_ok_mask(index, xstate)
     ub = out["rho12"] + out["y"] * v_ta[:, None]
     # G_(ta) line 10: centroids with zero partial similarity are skipped —
@@ -138,11 +139,11 @@ def _ta_icp(bk, docs, index, prev_assign, rho_self, xstate):
                         assign != prev_assign)
 
 
-def _cs_icp(bk, docs, index, prev_assign, rho_self, xstate):
+def _cs_icp(bk, docs, index, prev_assign, rho_self, xstate, plan=None):
     """CS-ICP (App. F-B): Cauchy–Schwarz bound on the tail subspace."""
     tail_mask = (docs.ids >= index.params.t_th) & docs.row_mask()
     x_tail_l2 = jnp.sqrt(jnp.sum(jnp.where(tail_mask, docs.vals, 0.0) ** 2, axis=1))
-    out = bk.accumulate(docs, index, xstate, mode="cs")
+    out = bk.accumulate(docs, index, xstate, mode="cs", plan=plan)
     col_ok = col_ok_mask(index, xstate)
     ub = out["rho1"] + x_tail_l2[:, None] * jnp.sqrt(out["sq"])
     survivors = (ub > rho_self[:, None]) & col_ok
@@ -166,19 +167,25 @@ ALGORITHMS = {
 
 def assign_batch(algo: str, backend, docs: SparseDocs, index: MeanIndex,
                  prev_assign: jax.Array, rho_self: jax.Array,
-                 xstate: jax.Array) -> AssignResult:
+                 xstate: jax.Array, plan=None) -> AssignResult:
     """Un-jitted dispatch — the traceable core shared by ``assignment_step``
-    and the fused epoch in :mod:`repro.core.lloyd`."""
+    and the fused epoch in :mod:`repro.core.lloyd`.
+
+    ``plan`` is the backend's prepared epoch-invariant cache
+    (``Backend.prepare``) for exactly these ``docs``; None is always valid.
+    """
     if algo not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algo!r}; one of {sorted(ALGORITHMS)}")
     bk = resolve_backend(backend)
-    return ALGORITHMS[algo](bk, docs, index, prev_assign, rho_self, xstate)
+    return ALGORITHMS[algo](bk, docs, index, prev_assign, rho_self, xstate,
+                            plan)
 
 
 @partial(jax.jit, static_argnames=("algo", "backend"))
 def assignment_step(algo: str, docs: SparseDocs, index: MeanIndex,
                     prev_assign: jax.Array, rho_self: jax.Array,
-                    xstate: jax.Array, backend: str = "reference") -> AssignResult:
+                    xstate: jax.Array, backend: str = "reference",
+                    plan=None) -> AssignResult:
     """One assignment step over a batch of objects.
 
     prev_assign: (B,) int32 — a(i) from the previous iteration.
@@ -186,5 +193,8 @@ def assignment_step(algo: str, docs: SparseDocs, index: MeanIndex,
                  step (Alg. 6 lines 6–7), the shared pruning threshold ρ_max.
     xstate:      (B,) bool — Eq. (5) 'more similar' flag for the ICP filter.
     backend:     'reference' | 'pallas' | 'auto' (see core/backends.py).
+    plan:        optional prepared kernel plan for these docs
+                 (``Backend.prepare``; see kernels/plan.py).
     """
-    return assign_batch(algo, backend, docs, index, prev_assign, rho_self, xstate)
+    return assign_batch(algo, backend, docs, index, prev_assign, rho_self,
+                        xstate, plan)

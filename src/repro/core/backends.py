@@ -22,13 +22,18 @@ phases' accumulators are produced:
     The TA bound needs a *per-object* value threshold, which the
     shared-threshold gather kernel cannot express; that one mode delegates
     to the reference scan (see the AFM translation table in DESIGN.md §3).
+    ``prepare`` builds the epoch-invariant :class:`repro.kernels.plan.
+    KernelPlan` (occupancy map + cached high-df head slabs) that every
+    kernel of a fit reuses — documents never change across Lloyd
+    iterations, so their densified form is computed once per chunk per fit.
 
 Exactness contract: for every algorithm, both backends produce identical
 assignments and moving flags from identical state.  ``mult`` diagnostics are
-kept exactly equal too — the pallas backend counts visited (object-term,
-posting-entry) pairs with extra binarised ``sparse_sim`` calls rather than
-approximating.  Means and ρ_self agree to float32 reduction-order tolerance
-(the MXU accumulates in a different order than the sequential scatter).
+kept exactly equal too — the kernels carry the visited (object-term,
+posting-entry) pair count as a fused accumulator off the same one-hot walk
+that builds the value slab, so ``diag=True`` costs no extra kernel launch.
+Means and ρ_self agree to float32 reduction-order tolerance (the MXU
+accumulates in a different order than the sequential scatter).
 
 Selection: pass ``backend="reference" | "pallas" | "auto"`` anywhere a
 ``backend=`` argument is threaded (``SphericalKMeans``, ``assignment_step``,
@@ -78,24 +83,37 @@ class Backend(Protocol):
 
     ``self_sims`` — (B,) refreshed ρ_{a(i)} vs each object's own (new)
     centroid (lines 6–7); out-of-range assignments read ρ = 0.
+
+    Prepared plans — ``prepare`` builds whatever per-corpus(-chunk) cache
+    the backend can exploit across the iterations of one fit; every other
+    method accepts it back as ``plan=``.  Documents are constant across
+    Lloyd iterations, so anything derived from the tuples alone (dense
+    slabs, occupancy) is epoch-invariant.  ``None`` (the reference
+    backend's answer) means "nothing to cache"; callers pass it straight
+    through, and a plan built for a different row layout is ignored by the
+    consumer — plans are an optimisation, never a correctness input.
     """
 
     name: str
 
+    def prepare(self, docs: SparseDocs, *, tile_rows: int | None = None,
+                with_counts: bool = True): ...
+
     def accumulate(self, docs: SparseDocs, index: MeanIndex, xstate: jax.Array,
                    *, mode: str, v_ta: jax.Array | None = None,
                    diag: bool = True, unroll: bool | int = False,
-                   p_block: int = 1) -> dict: ...
+                   p_block: int = 1, plan=None) -> dict: ...
 
     def es_filter(self, rho12: jax.Array, y: jax.Array, rho_self: jax.Array,
                   col_ok: jax.Array, v_th: jax.Array): ...
 
     def accumulate_means(self, ids: jax.Array, vals: jax.Array,
                          assign: jax.Array, *, k: int, dim: int,
-                         init: jax.Array | None = None) -> jax.Array: ...
+                         init: jax.Array | None = None,
+                         plan=None) -> jax.Array: ...
 
     def self_sims(self, ids: jax.Array, vals: jax.Array, assign: jax.Array,
-                  means_t: jax.Array) -> jax.Array: ...
+                  means_t: jax.Array, *, plan=None) -> jax.Array: ...
 
 
 # ---------------------------------------------------------------------------
@@ -273,8 +291,13 @@ class ReferenceBackend:
 
     name = "reference"
 
+    def prepare(self, docs, *, tile_rows=None, with_counts=True):
+        # The scan gathers posting rows directly from the sparse tuples —
+        # there is no densified intermediate to cache.
+        return None
+
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
-                   unroll=False, p_block=1):
+                   unroll=False, p_block=1, plan=None):
         return reference_scan(docs, index, xstate, mode=mode, v_ta=v_ta,
                               diag=diag, unroll=unroll, p_block=p_block)
 
@@ -285,13 +308,14 @@ class ReferenceBackend:
         survivors = (ub > rho_self[:, None]) & col_ok
         return survivors, jnp.sum(survivors, axis=1).astype(jnp.int32)
 
-    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None):
+    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None,
+                         plan=None):
         # The dense scatter-add (Alg. 6 lines 2–5).  XLA drops out-of-bounds
         # scatter updates, so out-of-range assignments contribute nothing.
         acc = jnp.zeros((k, dim), jnp.float32) if init is None else init
         return acc.at[assign[:, None], ids].add(vals)
 
-    def self_sims(self, ids, vals, assign, means_t):
+    def self_sims(self, ids, vals, assign, means_t, *, plan=None):
         # Own-centroid gather (Alg. 6 lines 6–7); gathers clamp out-of-range
         # assignments, so they are masked to ρ = 0 explicitly.
         k = means_t.shape[1]
@@ -307,50 +331,69 @@ class ReferenceBackend:
 class PallasBackend:
     """Kernel-dispatching backend (interpret mode off-TPU).
 
-    The similarity/gather accumulators become densify-then-MXU kernels; the
-    Mult diagnostic — a *count* of posting entries a CPU implementation would
-    visit — is itself a sparse similarity with binarised operands, so it
-    reuses ``sparse_sim`` rather than growing a bespoke counting kernel:
+    The similarity/gather accumulators become densify-then-MXU kernels.  The
+    Mult diagnostic — a *count* of posting entries a CPU implementation
+    would visit — rides the SAME launches as a fused accumulator
 
         count[b, k] = Σ_p live[b, p] · W[ids[b, p], k]
 
-    with W the region/nonzero indicator of the mean matrix.
+    (W the region/nonzero indicator of the mean matrix, built in-kernel from
+    the means block): the one-hot walk that densifies the value slab yields
+    the live-count slab for free, so ``diag=True`` issues no extra kernel
+    launch and no host-side (D, K) region mask exists anymore.  The ES mode
+    also pulls the full exact similarity out of the same gather launch.
+
+    ``prepare`` densifies the high-df head region once per chunk per fit and
+    precomputes the (B-tile, D-block) occupancy map (kernels/plan.py) —
+    the caches every kernel of the fit then reuses via ``plan=``.
     """
 
     name = "pallas"
 
-    def _live01(self, docs):
-        # Match the reference scan's live test (vals != 0), not row_mask():
-        # an explicit 0.0 stored inside the live region must not be counted.
-        return (docs.vals != 0.0).astype(jnp.float32)
+    def prepare(self, docs, *, tile_rows=None, with_counts=True):
+        from repro.kernels.plan import prepare_plan
+
+        # The cache is built from row_mask()-masked vals — the operand
+        # convention of the update phase.  The assignment phase feeds the
+        # kernels raw docs.vals; the two coincide under the repo-wide
+        # invariant that slots at index >= nnz hold val 0 (corpus builders,
+        # pad_rows and the DocStoreBuilder all enforce it), which is the
+        # precondition for one cached slab serving both phases.
+        vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
+        return prepare_plan(docs.ids, vals, dim=docs.dim,
+                            tile_rows=tile_rows, with_counts=with_counts)
 
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
-                   unroll=False, p_block=1):
+                   unroll=False, p_block=1, plan=None):
         # unroll / p_block are reference-scan tiling knobs; the kernels tile
         # via their own block specs, so both are accepted and ignored here.
         from repro.kernels import ops
 
         if mode == "ta":
             # Per-object v_ta threshold: not expressible as a shared-threshold
-            # mask over the (D_blk, K_blk) means block, so no kernel exists.
+            # mask over the (D_blk, K_sup) means block, so no kernel exists.
             return reference_scan(docs, index, xstate, mode="ta", v_ta=v_ta)
 
         means_t = index.means_t
         t_th = index.params.t_th
         v_th = index.params.v_th
         col_ok = col_ok_mask(index, xstate)
-        live01 = self._live01(docs)
-        nz = means_t > 0
 
-        out = {"sims": ops.sparse_sim(docs.ids, docs.vals, means_t)}
+        out = {}
         if not diag:
             out["mult"] = jnp.zeros((), jnp.float32)
         if mode == "exact" or mode == "cs":
+            res = ops.sparse_sim(docs.ids, docs.vals, means_t, diag=diag,
+                                 plan=plan)
             if diag:
-                counts = ops.sparse_sim(docs.ids, live01,
-                                        nz.astype(jnp.float32))
+                out["sims"], counts = res
                 out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+            else:
+                out["sims"] = res
             if mode == "cs":
+                # These substitute synthetic weights for the raw vals, so the
+                # cached head slabs do not apply (occupancy is re-derived
+                # from the actual operands inside the wrapper).
                 # Head-only partial: mask on the object side (ids < t_th) —
                 # identical sums to masking rows of the mean matrix.
                 head_vals = jnp.where(docs.ids < t_th, docs.vals, 0.0)
@@ -361,15 +404,16 @@ class PallasBackend:
                 out["sq"] = ops.sparse_sim(docs.ids, tail_ones,
                                            means_t * means_t)
         elif mode == "esicp":
-            rho12, y = ops.esicp_gather(docs.ids, docs.vals, means_t,
-                                        t_th, v_th)
-            out["rho12"], out["y"] = rho12, y
+            # ONE launch for the whole gathering phase: bound operands, the
+            # exact similarities, and (under diag) the exact-region visited-
+            # pair counts, all off one densified slab per (B, D) block.
+            res = ops.esicp_gather(docs.ids, docs.vals, means_t, t_th, v_th,
+                                   with_sims=True, diag=diag, plan=plan)
             if diag:
-                tail = jnp.arange(index.dim)[:, None] >= t_th
-                exact_region = jnp.where(tail, means_t >= v_th, True)
-                counts = ops.sparse_sim(
-                    docs.ids, live01, (nz & exact_region).astype(jnp.float32))
+                out["rho12"], out["y"], out["sims"], counts = res
                 out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+            else:
+                out["rho12"], out["y"], out["sims"] = res
         else:
             raise ValueError(mode)
         return out
@@ -380,18 +424,19 @@ class PallasBackend:
         mask, count = ops.esicp_filter(rho12, y, rho_self, col_ok, v_th)
         return mask.astype(bool), count
 
-    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None):
+    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None,
+                         plan=None):
         # Scatter-add as one-hot-selection MXU matmuls: a TPU must not
         # read-modify-write HBM per object (kernels/segment_update.py).
         from repro.kernels import ops
 
-        lam = ops.segment_update(assign, ids, vals, k=k, d=dim)
+        lam = ops.segment_update(assign, ids, vals, k=k, d=dim, plan=plan)
         return lam if init is None else init + lam
 
-    def self_sims(self, ids, vals, assign, means_t):
+    def self_sims(self, ids, vals, assign, means_t, *, plan=None):
         from repro.kernels import ops
 
-        return ops.rho_gather(assign, ids, vals, means_t)
+        return ops.rho_gather(assign, ids, vals, means_t, plan=plan)
 
 
 # ---------------------------------------------------------------------------

@@ -46,9 +46,37 @@ from repro.core.estparams import estimate_params, EstGrid
 _host_pull = jax.device_get
 
 
+def _plan_tiles(plan, nb: int, bs: int):
+    """A tiled :class:`~repro.kernels.plan.KernelPlan`'s leaves reshaped for
+    a (nb, bs)-tile ``lax.scan`` — the per-tile xs the epoch scans beside
+    the data tiles.  None plan (reference backend) → None."""
+    if plan is None:
+        return None
+    resh2 = lambda a: None if a is None else a.reshape((nb, -1) + a.shape[1:])
+    return (resh2(plan.occ), resh2(plan.head), resh2(plan.headc))
+
+
+def _tile_plan(plan, xs_plan):
+    """Rebuild the per-tile plan from a scan step's sliced leaves."""
+    if plan is None or xs_plan is None:
+        return None
+    occ, head, headc = xs_plan
+    return dataclasses.replace(plan, occ=occ, head=head, headc=headc)
+
+
+def _update_plan(plan, bs: int):
+    """The plan as the full-array update phase may consume it: the cached
+    head slabs always apply, but a per-``bs``-tile occupancy grouping only
+    coincides with the flat call's ``b_blk`` grouping when the tile size is
+    a ``b_blk`` multiple — otherwise drop occ (recomputed inline)."""
+    if plan is None:
+        return None
+    return plan if bs % plan.b_blk == 0 else plan.without_occ()
+
+
 @partial(jax.jit, static_argnames=("algo", "backend", "bs"))
 def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
-                 assign, rho_self, xstate, valid, bs: int):
+                 assign, rho_self, xstate, valid, bs: int, plan=None):
     """One full assignment epoch over a resident slab, on device.
 
     A chunk-scan: ``lax.scan`` over ``bs``-row tiles whose *carry* is the
@@ -59,15 +87,20 @@ def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
     lets the streaming fit reuse this function per DocStore chunk.
     (Per-object ρ is not returned: the update step refreshes ρ_self against
     the *new* means anyway.)
+
+    ``plan`` is the backend's prepared epoch-invariant cache built with
+    ``tile_rows=bs`` (``Backend.prepare``); its occupancy/head-slab arrays
+    ride the scan as per-tile xs beside the data tiles.
     """
     n = docs.ids.shape[0]
     nb = n // bs
     resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
 
     def tile_fn(carry, xs):
-        bids, bvals, bnnz, bassign, brho, bxs, bvalid = xs
+        (bids, bvals, bnnz, bassign, brho, bxs, bvalid), xs_plan = xs
         bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=docs.dim)
-        res = assign_batch(algo, backend, bdocs, index, bassign, brho, bxs)
+        res = assign_batch(algo, backend, bdocs, index, bassign, brho, bxs,
+                           _tile_plan(plan, xs_plan))
         mult, cand, changed = carry
         carry = (mult + res.mult,
                  cand + jnp.sum(jnp.where(bvalid, res.n_candidates, 0)),
@@ -78,12 +111,14 @@ def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
               jnp.zeros((), jnp.int32))
     (mult, cand, changed), a = lax.scan(
         tile_fn, carry0,
-        (resh(docs.ids), resh(docs.vals), resh(docs.nnz),
-         resh(assign), resh(rho_self), resh(xstate), resh(valid)))
+        ((resh(docs.ids), resh(docs.vals), resh(docs.nnz),
+          resh(assign), resh(rho_self), resh(xstate), resh(valid)),
+         _plan_tiles(plan, nb, bs)))
     return a.reshape(n), mult, cand, changed
 
 
-def _device_iteration(algo, backend, docs, state, valid, *, bs, k):
+def _device_iteration(algo, backend, docs, state, valid, *, bs, k,
+                      plan=None):
     """One full Lloyd iteration (epoch + update), traceable on device.
 
     Returns (state', (mult, cand_sum, n_changed, objective)).  Shared by the
@@ -93,15 +128,16 @@ def _device_iteration(algo, backend, docs, state, valid, *, bs, k):
     prev_assign = state.assign
     assign, mult, cand_sum, n_changed = _fused_epoch(
         algo, backend, docs, state.index, state.assign, state.rho_self,
-        state.xstate, valid, bs)
+        state.xstate, valid, bs, plan)
     state = update_step(docs, assign, prev_assign, state,
-                        state.index.params, k=k, backend=backend)
+                        state.index.params, k=k, backend=backend,
+                        plan=_update_plan(plan, bs))
     objective = jnp.sum(jnp.where(valid, state.rho_self, 0.0))
     return state, (mult, cand_sum, n_changed, objective)
 
 
-def _fused_fit_body(state, docs, valid, last_changed, *, algo, backend, bs,
-                    k, max_steps):
+def _fused_fit_body(state, docs, valid, last_changed, plan, *, algo, backend,
+                    bs, k, max_steps):
     """The fused remainder of the fit: a ``lax.while_loop`` over iterations.
 
     Carries (state, step counter, #changed of the previous iteration, ring
@@ -122,7 +158,7 @@ def _fused_fit_body(state, docs, valid, last_changed, *, algo, backend, bs,
     def body(carry):
         state, it, _, ring = carry
         state, (mult, cand, changed, obj) = _device_iteration(
-            algo, backend, docs, state, valid, bs=bs, k=k)
+            algo, backend, docs, state, valid, bs=bs, k=k, plan=plan)
         changed = changed.astype(jnp.int32)
         ring = {
             "mult": ring["mult"].at[it].set(mult),
@@ -152,10 +188,10 @@ def _fused_fit_fn(algo: str, backend: str, bs: int, k: int, max_steps: int):
 
 
 def _run_fused(algo, backend, bs, k, max_steps, state, docs, valid,
-               last_changed):
+               last_changed, plan=None):
     """Indirection point for tests asserting the fused path is one call."""
     fn = _fused_fit_fn(algo, backend, bs, k, max_steps)
-    return fn(state, docs, valid, last_changed)
+    return fn(state, docs, valid, last_changed, plan)
 
 
 @dataclasses.dataclass
@@ -234,6 +270,11 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
     pdocs = pad_rows(docs, bs)
     n_pad = pdocs.n_docs
     valid = jnp.arange(n_pad) < n
+    # Epoch-invariant kernel plan (occupancy + cached high-df head slabs):
+    # documents never change across Lloyd iterations, so the pallas
+    # backend densifies the head region and maps the live cells exactly
+    # once per fit; the reference backend has nothing to cache (None).
+    plan = resolve_backend(backend).prepare(pdocs, tile_rows=bs)
     if n_pad != n:
         pad = n_pad - n
         # Dead rows carry ρ_self = 0 — exactly the value every update
@@ -261,7 +302,7 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
     for r in range(1, prologue + 1):
         t0 = time.perf_counter()
         state, (mult, cand_sum, n_changed, _) = _device_iteration(
-            algo, backend, pdocs, state, valid, bs=bs, k=k)
+            algo, backend, pdocs, state, valid, bs=bs, k=k, plan=plan)
         if r in est_iters:
             # EstParams sees only the real rows (padding would skew the
             # Mult-estimate tables).
@@ -289,7 +330,7 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
         t0 = time.perf_counter()
         state, n_steps, ring = _run_fused(
             algo, backend, bs, k, max_steps,
-            state, pdocs, valid, last_changed)
+            state, pdocs, valid, last_changed, plan)
         # The one device→host sync of the fused remainder: the executed
         # step count and every diagnostic ring cross in a single pull.
         steps, ring_h = _host_pull((n_steps, ring))
@@ -338,6 +379,50 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
 
 STREAM_CKPT_FORMAT = "repro.cluster/stream-ckpt-v1"
 
+# Host-memory ceiling for cached per-chunk kernel plans (occupancy + head
+# slabs).  Chunks over budget are re-prepared each epoch instead of cached —
+# a compute/memory trade, never a correctness one.
+STREAM_PLAN_CACHE_BYTES = 512 << 20
+
+
+class _ChunkPlanCache:
+    """Once-per-chunk-per-fit kernel plans for the streaming fit.
+
+    Epoch 1 builds each chunk's :class:`~repro.kernels.plan.KernelPlan`
+    (occupancy + densified head slabs) on the prefetcher's producer thread
+    and parks a host copy; later epochs ``device_put`` the cached copy so
+    the prepared slabs ride H2D beside the raw chunk instead of being
+    re-densified.  A byte budget bounds host residency: chunks past it are
+    simply re-prepared every epoch.  ``None`` plans (reference backend:
+    nothing to cache) cost nothing and short-circuit.
+    """
+
+    def __init__(self, backend, tile_rows: int,
+                 max_bytes: int = STREAM_PLAN_CACHE_BYTES):
+        self._bk = backend
+        self._tile_rows = tile_rows
+        self._max_bytes = max_bytes
+        self._host: dict[int, object] = {}
+        self._bytes = 0
+
+    @staticmethod
+    def _nbytes(plan) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(plan))
+
+    def __call__(self, ci: int, cdocs):
+        if ci in self._host:
+            cached = self._host[ci]
+            return None if cached is None else jax.device_put(cached)
+        plan = self._bk.prepare(cdocs, tile_rows=self._tile_rows)
+        if plan is None:
+            self._host[ci] = None
+            return None
+        size = self._nbytes(plan)
+        if self._bytes + size <= self._max_bytes:
+            self._host[ci] = jax.device_get(plan)
+            self._bytes += size
+        return plan
+
 
 def _tile_bs(chunk_size: int, batch_size: int) -> int:
     """Tile size for scanning a (C, P) chunk: min(batch_size, C).  When the
@@ -368,23 +453,25 @@ _set_slice = jax.jit(
 @partial(jax.jit, static_argnames=("algo", "backend", "bs", "k"))
 def _stream_chunk_step(algo: str, backend: str, cdocs: SparseDocs, index,
                        a_c, rho_c, xs_c, valid_c, lam, mult, cand, changed,
-                       *, bs: int, k: int):
+                       *, bs: int, k: int, plan=None):
     """Full-batch streaming: one chunk's share of the epoch.
 
     Runs the identical chunk-scan `_fused_epoch` on the (C, P) tile and
     folds the chunk's cluster sums into the epoch λ accumulator via the
     backend (``init=`` is the chunked-caller hook on
     ``Backend.accumulate_means``).  One chunk == the whole corpus is the
-    resident ``update_step`` bit for bit (parity-tested)."""
+    resident ``update_step`` bit for bit (parity-tested).  ``plan`` is the
+    chunk's prepared kernel cache, carried H2D beside the chunk by the
+    prefetcher (built once per chunk per fit)."""
     n_c = cdocs.ids.shape[0]
     cdocs, (a_c, rho_c, xs_c, valid_c) = _pad_chunk(
         cdocs, (a_c, rho_c, xs_c, valid_c), bs)
     a_new, m, c, ch = _fused_epoch(algo, backend, cdocs, index, a_c, rho_c,
-                                   xs_c, valid_c, bs)
+                                   xs_c, valid_c, bs, plan)
     mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
     bk = resolve_backend(backend)
     lam = bk.accumulate_means(cdocs.ids, mvals, a_new, k=k, dim=cdocs.dim,
-                              init=lam)
+                              init=lam, plan=_update_plan(plan, bs))
     return a_new[:n_c], lam, mult + m, cand + c, changed + ch
 
 
@@ -399,17 +486,22 @@ def _stream_update_index(lam, means_t_prev, assign, prev_assign, params, *,
 
 
 @partial(jax.jit, static_argnames=("backend",))
-def _stream_rho_chunk(backend: str, cdocs: SparseDocs, a_c, means_t):
+def _stream_rho_chunk(backend: str, cdocs: SparseDocs, a_c, means_t,
+                      plan=None):
     """ρ_self refresh for one chunk vs the NEW means (Alg. 6 lines 6–7) —
-    row-independent, so the chunked refresh equals the resident one."""
+    row-independent, so the chunked refresh equals the resident one.  The
+    chunk plan's cached head slabs apply after slicing to the unpadded
+    chunk rows (occupancy is re-derived inline)."""
     bk = resolve_backend(backend)
     mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
-    return bk.self_sims(cdocs.ids, mvals, a_c, means_t)
+    rplan = None if plan is None else plan.slice_rows(cdocs.ids.shape[0])
+    return bk.self_sims(cdocs.ids, mvals, a_c, means_t, plan=rplan)
 
 
 @partial(jax.jit, static_argnames=("backend", "bs", "k"))
 def _stream_minibatch_chunk(backend: str, cdocs: SparseDocs, index, a_old,
-                            valid_c, m_mean, counts, *, bs: int, k: int):
+                            valid_c, m_mean, counts, *, bs: int, k: int,
+                            plan=None):
     """Sculley-style mini-batch step on one chunk.
 
     Exact nearest-centroid assignment (the shared classify accumulators),
@@ -429,19 +521,22 @@ def _stream_minibatch_chunk(backend: str, cdocs: SparseDocs, index, a_old,
     resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
 
     def tile(carry, xs):
-        bids, bvals, bnnz = xs
+        (bids, bvals, bnnz), xs_plan = xs
         bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=cdocs.dim)
         sims = bk.accumulate(bdocs, index, jnp.zeros((bs,), bool),
-                             mode="exact", diag=False)["sims"]
+                             mode="exact", diag=False,
+                             plan=_tile_plan(plan, xs_plan))["sims"]
         return carry, jnp.argmax(sims, axis=1).astype(jnp.int32)
 
     _, a = lax.scan(tile, 0,
-                    (resh(cdocs.ids), resh(cdocs.vals), resh(cdocs.nnz)))
+                    ((resh(cdocs.ids), resh(cdocs.vals), resh(cdocs.nnz)),
+                     _plan_tiles(plan, nb, bs)))
     a = a.reshape(c)
     a = jnp.where(valid_c, a, k)            # dead rows select no centroid
     changed = jnp.sum((a != a_old) & valid_c)
     mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
-    sums = bk.accumulate_means(cdocs.ids, mvals, a, k=k, dim=cdocs.dim)
+    sums = bk.accumulate_means(cdocs.ids, mvals, a, k=k, dim=cdocs.dim,
+                               plan=_update_plan(plan, bs))
     n_j = jnp.zeros((k,), jnp.float32).at[a].add(
         jnp.where(valid_c, 1.0, 0.0))       # a == k scatters are dropped
     new_counts = counts + n_j
@@ -548,7 +643,8 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
     if algo_mode not in ("full", "minibatch"):
         raise ValueError(f"algo_mode must be 'full' or 'minibatch', "
                          f"got {algo_mode!r}")
-    backend = resolve_backend(backend).name
+    bk_obj = resolve_backend(backend)
+    backend = bk_obj.name
     est_grid = est_grid or EstGrid()
     est_iters = tuple(est_iters)
     n, c, n_rows = store.n_docs, store.chunk_size, store.n_rows
@@ -564,6 +660,10 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
 
     minibatch = algo_mode == "minibatch"
     zeros_lam = jnp.zeros((k, store.dim), jnp.float32)
+    # Per-chunk kernel plans, built once per fit on the prefetch thread and
+    # carried H2D beside the raw chunks (None throughout on the reference
+    # backend — nothing to cache).
+    plan_cache = _ChunkPlanCache(bk_obj, bs)
 
     if resume:
         if not checkpoint_dir:
@@ -627,14 +727,15 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
         xs_full = state.xstate
         # ---- pass A: assignment (+ λ / center updates), chunk-streamed ----
         order = range(first, n_chunks)
-        for ci, cdocs in ChunkPrefetcher(store, depth=prefetch_depth,
-                                         order=order):
+        for ci, cdocs, cplan in ChunkPrefetcher(store, depth=prefetch_depth,
+                                                order=order,
+                                                prepare=plan_cache):
             s = ci * c
             sl = slice(s, s + c)
             if minibatch:
                 a_new, ch, m_mean, counts, mb_index = _stream_minibatch_chunk(
                     backend, cdocs, mb_index, state.assign[sl], valid[sl],
-                    m_mean, counts, bs=bs, k=k)
+                    m_mean, counts, bs=bs, k=k, plan=cplan)
                 changed = changed + ch
                 cand = cand + jnp.sum(valid[sl]).astype(jnp.int32) * k
                 # keep the evolving centers checkpointable: the saved
@@ -644,7 +745,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                 a_new, lam, mult, cand, changed = _stream_chunk_step(
                     algo, backend, cdocs, state.index, state.assign[sl],
                     state.rho_self[sl], xs_full[sl], valid[sl],
-                    lam, mult, cand, changed, bs=bs, k=k)
+                    lam, mult, cand, changed, bs=bs, k=k, plan=cplan)
             assign_work = _set_slice(assign_work, a_new, s)
             maybe_ckpt(r, ci + 1)
 
@@ -656,11 +757,12 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                                          assign_work, state.assign,
                                          state.index.params, k=k)
         rho_parts = []
-        for ci, cdocs in ChunkPrefetcher(store, depth=prefetch_depth):
+        for ci, cdocs, cplan in ChunkPrefetcher(store, depth=prefetch_depth,
+                                                prepare=plan_cache):
             sl = slice(ci * c, (ci + 1) * c)
             rho_parts.append(_stream_rho_chunk(backend, cdocs,
                                                assign_work[sl],
-                                               index.means_t))
+                                               index.means_t, cplan))
         rho_new = jnp.concatenate(rho_parts)
         state = KMeansState(index=index, assign=assign_work,
                             rho_self=rho_new,

@@ -63,17 +63,21 @@ def moving_flags(assign: jax.Array, prev_assign: jax.Array, k: int) -> jax.Array
 @partial(jax.jit, static_argnames=("k", "backend"))
 def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
                 prev_state: KMeansState, params: StructuralParams, *, k: int,
-                backend: str = "reference") -> KMeansState:
-    """Full update: new means, moving flags, refreshed ρ_self, xstate shift."""
+                backend: str = "reference", plan=None) -> KMeansState:
+    """Full update: new means, moving flags, refreshed ρ_self, xstate shift.
+
+    ``plan`` is the backend's prepared epoch-invariant cache for ``docs``
+    (``Backend.prepare``; the Lloyd drivers build it once per fit)."""
     from repro.core.backends import resolve_backend
 
     bk = resolve_backend(backend)
     vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
-    lam = bk.accumulate_means(docs.ids, vals, assign, k=k, dim=docs.dim)
+    lam = bk.accumulate_means(docs.ids, vals, assign, k=k, dim=docs.dim,
+                              plan=plan)
     means = normalized_means(lam, prev_state.index.means_t)
     index = build_mean_index(means, params,
                              moving=moving_flags(assign, prev_assign, k))
-    rho_self = bk.self_sims(docs.ids, vals, assign, index.means_t)
+    rho_self = bk.self_sims(docs.ids, vals, assign, index.means_t, plan=plan)
     return KMeansState(
         index=index,
         assign=assign,

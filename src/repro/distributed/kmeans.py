@@ -40,6 +40,7 @@ import dataclasses
 import functools
 import warnings
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,15 @@ from repro.compat import shard_map
 def object_axes(mesh: Mesh) -> tuple[str, ...]:
     """All mesh axes except 'model' shard the object dimension."""
     return tuple(n for n in mesh.axis_names if n != "model")
+
+
+class PlanMeta(NamedTuple):
+    """Static geometry of the prepared-plan operands a step function was
+    built for (kernels/plan.py): occ grouping + head-cache width."""
+    b_blk: int
+    d_blk: int
+    n_head: int
+    dim: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +86,11 @@ def _local_index(means_t, moving, t_th, v_th):
 
 
 def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
-                t_th, v_th, iteration, *, algo: str, axes_obj, k: int,
-                obj_chunk: int, lambda_dtype=jnp.float32,
+                t_th, v_th, iteration, *plan_args, algo: str, axes_obj,
+                k: int, obj_chunk: int, lambda_dtype=jnp.float32,
                 taat_unroll: bool = False, two_phase: bool = False,
                 p_block: int = 1, p_tail: int = 16,
-                backend: str = "reference"):
+                backend: str = "reference", plan_meta=None):
     from repro.core.backends import BACKENDS, gather_verify_scan
     from repro.core.meanindex import normalized_means
     from repro.sparse import SparseDocs
@@ -95,8 +105,30 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     # ---------------- assignment, chunked over local objects ---------------
     nc = n_loc // obj_chunk
 
+    # Prepared-plan operands (mesh_fit builds them once per fit for the
+    # pallas backend): the per-obj_chunk-tile occupancy map and, when the
+    # budget allows, the cached high-df head slabs — sharded over the
+    # object axes exactly like ids/vals, sliced per chunk below.
+    occ = head = None
+    gpt = 1
+    if plan_meta is not None:
+        from repro.kernels.plan import KernelPlan
+
+        gpt = -(-obj_chunk // plan_meta.b_blk)
+        occ = plan_args[0]
+        if plan_meta.n_head > 0:
+            head = plan_args[1]
+
+        def _chunk_plan(o, h):
+            return KernelPlan(occ=o, head=h, headc=None,
+                              b_blk=plan_meta.b_blk, d_blk=plan_meta.d_blk,
+                              n_head=plan_meta.n_head, dim=plan_meta.dim)
+    else:
+        def _chunk_plan(o, h):
+            return None
+
     def chunk_fn(args):
-        cids, cvals, cval, cassign, crho, cxs = args
+        (cids, cvals, cval, cassign, crho, cxs), (cocc, chead) = args
         col_ok = moving[None, :] | ~cxs[:, None]
         cnnz = jnp.sum(cvals != 0.0, axis=1)       # tf-idf: live ⇔ val > 0
         if two_phase and algo == "esicp":
@@ -110,7 +142,8 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
             cdocs = SparseDocs(ids=cids, vals=cvals, nnz=cnnz, dim=d)
             mode = "esicp" if algo == "esicp" else "exact"
             out = bk.accumulate(cdocs, index_loc, cxs, mode=mode, diag=False,
-                                unroll=taat_unroll, p_block=p_block)
+                                unroll=taat_unroll, p_block=p_block,
+                                plan=_chunk_plan(cocc, chead))
             sims = out["sims"]
             if algo == "esicp":
                 surv = ((out["rho12"] + out["y"] * v_th)
@@ -134,9 +167,11 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
         return na, n_surv
 
     resh = lambda a: a.reshape((nc, obj_chunk) + a.shape[1:])
-    na, n_surv = lax.map(chunk_fn, (resh(ids), resh(vals), resh(valid),
-                                    resh(assign), resh(rho_self),
-                                    resh(xstate)))
+    occ_r = None if occ is None else occ.reshape((nc, gpt) + occ.shape[1:])
+    head_r = None if head is None else resh(head)
+    na, n_surv = lax.map(chunk_fn, ((resh(ids), resh(vals), resh(valid),
+                                     resh(assign), resh(rho_self),
+                                     resh(xstate)), (occ_r, head_r)))
     assign_new = na.reshape(n_loc)
     n_candidates = lax.psum(jnp.sum(n_surv), axes_obj + ("model",))
 
@@ -148,11 +183,22 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     in_range = (local_a >= 0) & (local_a < k_loc) & valid
     safe_a = jnp.where(in_range, local_a, k_loc)
 
+    # Cached slabs stay exact under the in_range masking: rows outside this
+    # shard's centroid range carry safe_a = k_loc, whose one-hot selection
+    # row is all zero — the slab value never reaches the accumulator.
+    def _upd_plan(ci):
+        o = None if occ is None else lax.dynamic_slice_in_dim(
+            occ, ci * gpt, gpt, 0)
+        h = None if head is None else lax.dynamic_slice_in_dim(
+            head, ci * obj_chunk, obj_chunk, 0)
+        return _chunk_plan(o, h)
+
     def acc_body(ci, lam):
         sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
         cvals = jnp.where(sl(in_range)[:, None], sl(vals), 0.0)
         return bk.accumulate_means(sl(ids), cvals, sl(safe_a),
-                                   k=k_loc, dim=d, init=lam)
+                                   k=k_loc, dim=d, init=lam,
+                                   plan=_upd_plan(ci))
 
     lam = lax.fori_loop(0, nc, acc_body, jnp.zeros((k_loc, d), jnp.float32))
     # §Perf variant: compress the cluster-sum all-reduce (the step's dominant
@@ -166,7 +212,8 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     def rho_body(ci, out):
         sl = lambda a: lax.dynamic_slice_in_dim(a, ci * obj_chunk, obj_chunk, 0)
         cvals = jnp.where(sl(in_range)[:, None], sl(vals), 0.0)
-        r = bk.self_sims(sl(ids), cvals, sl(safe_a), means_new_t)
+        r = bk.self_sims(sl(ids), cvals, sl(safe_a), means_new_t,
+                         plan=_upd_plan(ci))
         return lax.dynamic_update_slice_in_dim(out, r, ci * obj_chunk, 0)
 
     rho_new = lax.fori_loop(0, nc, rho_body, jnp.zeros((n_loc,), jnp.float32))
@@ -192,13 +239,18 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
                  obj_chunk: int = 2048, lambda_dtype=jnp.float32,
                  taat_unroll: bool = False, two_phase: bool = False,
                  p_block: int = 1, p_tail: int = 16,
-                 backend: str = "reference"):
+                 backend: str = "reference", plan_meta: PlanMeta | None = None):
     """Builds the jitted fused assignment+update step for `mesh`.
 
     taat_unroll: dry-run costing mode — unrolls the P-step TAAT scan so
     XLA's cost model counts every multiply (launch/dryrun.py pass B).
     backend: 'reference' (TAAT scan) | 'pallas' (kernels on the local tile)
-    | 'auto' — see core/backends.py for selection semantics."""
+    | 'auto' — see core/backends.py for selection semantics.
+    plan_meta: when set, the step takes the prepared-plan operands (the
+    per-obj_chunk occupancy map and, if ``plan_meta.n_head > 0``, the
+    cached head slabs) as trailing arguments, sharded like ids/vals —
+    ``mesh_fit`` builds both once per fit (see :func:`build_plan_operands`).
+    """
     from repro.core.backends import resolve_backend
     backend = resolve_backend(backend).name
     if two_phase and backend != "reference":
@@ -212,6 +264,10 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
         P(None, "model"), P("model"),                   # means_t, moving
         P(), P(), P(),                                  # t_th, v_th, iteration
     )
+    if plan_meta is not None:
+        specs_in += (P(axes_obj, None),)                # occ
+        if plan_meta.n_head > 0:
+            specs_in += (P(axes_obj, None),)            # head slabs
     specs_out = (
         P(None, "model"), po, po, po, P("model"),
         P(), P(), P(),
@@ -220,9 +276,38 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
         partial(_step_local, algo=algo, axes_obj=axes_obj, k=k,
                 obj_chunk=obj_chunk, lambda_dtype=lambda_dtype,
                 taat_unroll=taat_unroll, two_phase=two_phase,
-                p_block=p_block, p_tail=p_tail, backend=backend),
+                p_block=p_block, p_tail=p_tail, backend=backend,
+                plan_meta=plan_meta),
         mesh=mesh, in_specs=specs_in, out_specs=specs_out)
     return jax.jit(fn)
+
+
+def build_plan_operands(ids, vals, valid, *, dim: int, obj_chunk: int,
+                        mesh: Mesh, head_bytes: int | None = None):
+    """Once-per-fit prepared-plan operands for the pallas mesh step.
+
+    Returns ``(plan_meta, operands)``: the per-obj_chunk-tile occupancy map
+    and (budget permitting) the densified high-df head slabs, device_put
+    with the same object-axis sharding as ids/vals.  Dead/padding rows are
+    never occupied and densify to zero, so the global padded arrays are
+    used as-is.
+    """
+    from repro.kernels import plan as kplan
+
+    axes_obj = object_axes(mesh)
+    sh = NamedSharding(mesh, P(axes_obj, None))
+    mvals = jnp.where(valid[:, None], vals, 0.0)
+    occ = kplan.occupancy_map(ids, mvals, dim=dim, tile_rows=obj_chunk)
+    kw = {} if head_bytes is None else {"head_bytes": head_bytes}
+    n_head = kplan.pick_n_head(ids.shape[0], dim, with_counts=False, **kw)
+    head, _ = kplan.head_slabs(ids, mvals, dim=dim, n_head=n_head,
+                               with_counts=False)
+    meta = PlanMeta(b_blk=kplan.DEFAULT_B_BLK, d_blk=kplan.DEFAULT_D_BLK,
+                    n_head=0 if head is None else n_head, dim=dim)
+    operands = (jax.device_put(occ, sh),)
+    if head is not None:
+        operands += (jax.device_put(head, sh),)
+    return meta, operands
 
 
 # ---------------------------------------------------------------------------
@@ -318,14 +403,16 @@ def _place_store_sharded(store, mesh: Mesh, multiple: int):
 
 
 def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
-                           t_th, v_th):
-    """One fused step; returns (new_state, diag dict)."""
+                           t_th, v_th, plan_operands=()):
+    """One fused step; returns (new_state, diag dict).  ``plan_operands``
+    are the once-per-fit prepared-plan arrays a ``plan_meta``-built step
+    expects (see :func:`build_plan_operands`)."""
     (means_t, assign, rho_self, rho_prev, moving,
      n_changed, n_cand, objective) = step_fn(
         ids, vals, valid, state.assign, state.rho_self, state.rho_prev,
         state.means_t, state.moving,
         jnp.asarray(t_th, jnp.int32), jnp.asarray(v_th, jnp.float32),
-        state.iteration)
+        state.iteration, *plan_operands)
     new = DistKMeansState(means_t=means_t, assign=assign, rho_self=rho_self,
                           rho_prev=rho_prev, moving=moving,
                           iteration=state.iteration + 1)
@@ -397,20 +484,28 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
             rho_prev=jax.device_put(jnp.pad(state.rho_prev, (0, pad)),
                                     sh(P(axes_obj))),
         )
+    from repro.core.backends import resolve_backend
+
     two_phase = step_kw.pop("two_phase", False)
     if two_phase:
-        from repro.core.backends import resolve_backend
         if resolve_backend(backend).name != "reference":
             # Fail fast: the rebuild at r == max(est_iters) would otherwise
             # raise after iterations of completed clustering work.
             raise ValueError("two_phase is a reference-backend scan variant; "
                              "use backend='reference' with it")
+    # Once-per-fit prepared-plan operands for the kernel backend: the
+    # occupancy map + cached head slabs every iteration's step reuses
+    # (documents are constant across Lloyd iterations).
+    plan_meta, plan_ops = None, ()
+    if resolve_backend(backend).name == "pallas":
+        plan_meta, plan_ops = build_plan_operands(
+            ids, vals, valid, dim=docs.dim, obj_chunk=obj_chunk, mesh=mesh)
     # iterations 1–2 run trivial params (t_th=0): everything is Region 3, so
     # the windowed verification can't bound ntH — run single-phase until
     # EstParams fixes t_th, then rebuild the step (paper Alg. 6 does the same
     # index restructuring at that moment).
     step_fn = make_step_fn(mesh, algo=algo, k=k, obj_chunk=obj_chunk,
-                           backend=backend, **step_kw)
+                           backend=backend, plan_meta=plan_meta, **step_kw)
     params = StructuralParams.trivial(docs.dim)
 
     if df is None:
@@ -420,7 +515,8 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     converged = False
     for r in range(1, max_iter + 1):
         state, diag = dist_assignment_update(step_fn, state, ids, vals, valid,
-                                             params.t_th, params.v_th)
+                                             params.t_th, params.v_th,
+                                             plan_ops)
         if algo == "esicp" and r in est_iters:
             if store is not None:
                 # Full-corpus estimate, chunk-streamed (the same path the

@@ -22,7 +22,9 @@ from repro.kernels.ops import (
     rho_gather,
     flash_attention,
 )
+from repro.kernels.plan import KernelPlan, occupancy_map, prepare_plan
 from repro.kernels import ref
 
 __all__ = ["sparse_sim", "esicp_gather", "esicp_filter", "segment_update",
-           "rho_gather", "flash_attention", "ref"]
+           "rho_gather", "flash_attention", "ref",
+           "KernelPlan", "occupancy_map", "prepare_plan"]

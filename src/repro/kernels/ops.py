@@ -3,6 +3,26 @@
 Handles block-alignment padding (to MXU-friendly multiples), dispatches to
 interpret mode off-TPU, and slices results back to logical shapes.  Callers
 see plain jnp-like functions; the kernels see only aligned shapes.
+
+Kernel engine v2 plumbing (ISSUE 5):
+
+* **K superblocks** — K is padded to ``k_blk`` and then covered by
+  ``k_sup``-wide grid blocks (the whole padded K when it fits the VMEM
+  budget), so the (B_blk, D_blk) densified slab is built once per (B, D)
+  block instead of once per (B, K, D) step.
+* **Occupancy** — every clustering-kernel call carries a
+  (B-tile, D-block) live-cell map; a prepared :class:`~repro.kernels.plan.
+  KernelPlan` supplies it precomputed, otherwise it is computed inline here
+  (one cheap scatter-max, amortised by the densify work it prunes).
+* **Prepared plans** — ``plan=`` threads the epoch-invariant cache
+  (occupancy + densified high-df head slabs) from ``Backend.prepare``
+  down to the kernels.  A plan whose block geometry or row layout does not
+  match the call is ignored for the mismatching part: plans are an
+  optimisation, never a correctness input.
+* **Fused diagnostics** — ``diag=True`` on ``sparse_sim`` /
+  ``esicp_gather`` returns the visited-pair counts as an extra accumulator
+  of the same launch; ``with_sims=True`` on ``esicp_gather`` adds the full
+  exact similarity, so one launch serves the whole ES assignment gather.
 """
 from __future__ import annotations
 
@@ -17,6 +37,10 @@ from repro.kernels import esicp_filter as _ef
 from repro.kernels import segment_update as _su
 from repro.kernels import rho_gather as _rg
 from repro.kernels import flash_attention as _fa
+
+# Widest K superblock the auto policy will pick: bounds the (d_blk, k_sup)
+# means block and the (b_blk, k_sup) accumulator blocks in VMEM.
+K_SUP_CAP = 1024
 
 
 def _on_tpu() -> bool:
@@ -40,29 +64,109 @@ def _align(ids, vals, means_t, b_blk, k_blk, d_blk):
     return ids, vals, means_t
 
 
-@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
-def sparse_sim(ids, vals, means_t, *, b_blk=128, k_blk=128, d_blk=256,
+def _pick_k_sup(kp: int, k_blk: int, k_sup: int | None) -> int:
+    """Widest ``k_blk`` multiple ≤ the VMEM cap that divides padded K."""
+    if k_sup is not None:
+        assert kp % k_sup == 0, f"k_sup={k_sup} must divide padded K={kp}"
+        return k_sup
+    if kp <= K_SUP_CAP:
+        return kp
+    for ks in range(K_SUP_CAP - K_SUP_CAP % k_blk, 0, -k_blk):
+        if kp % ks == 0:
+            return ks
+    return k_blk
+
+
+def _inline_occ(ids, vals, dp: int, d_blk: int, b_blk: int):
+    """Flat-layout occupancy from the padded call operands themselves —
+    the fallback when no prepared plan (or a mismatching one) is passed.
+    Computed by the ONE occupancy definition (kernels/plan.py) from the
+    *actual* vals operand, so callers that substitute synthetic weights
+    (binarised / region-masked values) stay exact."""
+    from repro.kernels.plan import occupancy_map
+
+    return occupancy_map(ids, vals, dim=dp, b_blk=b_blk, d_blk=d_blk)
+
+
+def _plan_operands(plan, pi, pv, b: int, d: int, dp: int, b_blk: int,
+                   d_blk: int, *, need_counts: bool):
+    """Resolve (occ, head, headc, n_head) for a padded call.
+
+    ``b``/``d`` are the call's *logical* row count and dim; ``pi``/``pv``
+    the padded operands.  Layout mismatches degrade gracefully: a stale occ
+    is replaced by the inline one, an unusable head cache by densification.
+    """
+    nd = dp // d_blk
+    nbb = pi.shape[0] // b_blk
+    occ = head = headc = None
+    n_head = 0
+    if plan is not None and plan.b_blk == b_blk and plan.d_blk == d_blk:
+        if plan.occ is not None and plan.occ.shape == (nbb, nd):
+            occ = plan.occ
+        usable_head = (plan.head is not None and plan.n_head > 0
+                       and plan.dim == d and plan.head.shape[0] == b
+                       and plan.head.shape[1] == plan.n_head * d_blk)
+        if usable_head and need_counts and plan.headc is None:
+            usable_head = False          # diag needs the count twin too
+        if usable_head:
+            n_head = plan.n_head
+            head = _pad_to(plan.head, b_blk, 0)
+            headc = _pad_to(plan.headc, b_blk, 0) if need_counts else None
+    if occ is None:
+        occ = _inline_occ(pi, pv, dp, d_blk, b_blk)
+    return occ, head, headc, n_head
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
+                                   "diag", "interpret"))
+def sparse_sim(ids, vals, means_t, *, plan=None, diag: bool = False,
+               b_blk=128, k_blk=128, d_blk=256, k_sup: int | None = None,
                interpret: bool | None = None):
-    """(B, K) exact similarities of padded sparse objects vs dense means."""
+    """(B, K) exact similarities of padded sparse objects vs dense means.
+
+    ``diag=True`` additionally returns the (B, K) visited-pair counts
+    (live slots × nonzero mean entries) from the same launch.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     b, k = ids.shape[0], means_t.shape[1]
+    d = means_t.shape[0]
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    out = _ss.sparse_sim_pallas(pi, pv, pm, b_blk=b_blk, k_blk=k_blk,
-                                d_blk=d_blk, interpret=interpret)
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    occ, head, headc, n_head = _plan_operands(
+        plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=diag)
+    out = _ss.sparse_sim_pallas(pi, pv, pm, occ, head, headc, b_blk=b_blk,
+                                k_sup=ks, d_blk=d_blk, n_head=n_head,
+                                diag=diag, interpret=interpret)
+    if diag:
+        sims, counts = out
+        return sims[:b, :k], counts[:b, :k]
     return out[:b, :k]
 
 
-@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
-def esicp_gather(ids, vals, means_t, t_th, v_th, *, b_blk=128, k_blk=128,
-                 d_blk=256, interpret: bool | None = None):
-    """(rho12, y): fused Region-1/2 exact similarity + Region-3 L1 mass."""
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
+                                   "with_sims", "diag", "interpret"))
+def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None,
+                 with_sims: bool = False, diag: bool = False, b_blk=128,
+                 k_blk=128, d_blk=256, k_sup: int | None = None,
+                 interpret: bool | None = None):
+    """Fused Region-1/2 exact similarity + Region-3 L1 mass.
+
+    Returns ``(rho12, y)``, extended by the full exact similarity when
+    ``with_sims`` and by the exact-region visited-pair counts when ``diag``
+    — all accumulated off one densified slab per (B, D) block.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     b, k = ids.shape[0], means_t.shape[1]
+    d = means_t.shape[0]
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    rho12, y = _eg.esicp_gather_pallas(pi, pv, pm, t_th, v_th, b_blk=b_blk,
-                                       k_blk=k_blk, d_blk=d_blk,
-                                       interpret=interpret)
-    return rho12[:b, :k], y[:b, :k]
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    occ, head, headc, n_head = _plan_operands(
+        plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=diag)
+    out = _eg.esicp_gather_pallas(pi, pv, pm, t_th, v_th, occ, head, headc,
+                                  b_blk=b_blk, k_sup=ks, d_blk=d_blk,
+                                  n_head=n_head, with_sims=with_sims,
+                                  diag=diag, interpret=interpret)
+    return tuple(o[:b, :k] for o in out)
 
 
 @partial(jax.jit, static_argnames=("b_blk", "k_blk", "interpret"))
@@ -80,27 +184,35 @@ def esicp_filter(rho12, y, rho_max, col_ok, v_th, *, b_blk=128, k_blk=256,
     return mask[:b, :k], count[:b]
 
 
-@partial(jax.jit, static_argnames=("k", "d", "b_blk", "k_blk", "d_blk", "interpret"))
-def segment_update(assign, ids, vals, *, k: int, d: int, b_blk=128, k_blk=128,
-                   d_blk=256, interpret: bool | None = None):
+@partial(jax.jit, static_argnames=("k", "d", "b_blk", "k_blk", "d_blk",
+                                   "k_sup", "interpret"))
+def segment_update(assign, ids, vals, *, k: int, d: int, plan=None,
+                   b_blk=128, k_blk=128, d_blk=256, k_sup: int | None = None,
+                   interpret: bool | None = None):
     """(K, D) cluster sums λ. Padding objects get assign = k (out of range)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     # Padded rows get assign = k: when k is block-aligned that index falls
-    # past the last tile's iota range, otherwise into a padding column —
-    # either way it contributes nothing to the sliced result.
+    # past the last superblock's iota range, otherwise into a padding
+    # column — either way it contributes nothing to the sliced result.
+    b = ids.shape[0]
     pa = _pad_to(assign, b_blk, 0, value=k)
     pi = _pad_to(_pad_to(ids, 8, 1), b_blk, 0)
     pv = _pad_to(_pad_to(vals, 8, 1), b_blk, 0)
     kp = k + ((-k) % k_blk)
     dp = d + ((-d) % d_blk)
-    out = _su.segment_update_pallas(pa, pi, pv, kp, dp, b_blk=b_blk,
-                                    k_blk=k_blk, d_blk=d_blk,
-                                    interpret=interpret)
+    ks = _pick_k_sup(kp, k_blk, k_sup)
+    occ, head, _, n_head = _plan_operands(
+        plan, pi, pv, b, d, dp, b_blk, d_blk, need_counts=False)
+    out = _su.segment_update_pallas(pa, pi, pv, kp, dp, occ, head,
+                                    b_blk=b_blk, k_sup=ks, d_blk=d_blk,
+                                    n_head=n_head, interpret=interpret)
     return out[:k, :d]
 
 
-@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "interpret"))
-def rho_gather(assign, ids, vals, means_t, *, b_blk=128, k_blk=128, d_blk=256,
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
+                                   "interpret"))
+def rho_gather(assign, ids, vals, means_t, *, plan=None, b_blk=128,
+               k_blk=128, d_blk=256, k_sup: int | None = None,
                interpret: bool | None = None):
     """(B,) ρ_self refresh: each object's similarity vs its own centroid.
 
@@ -109,10 +221,15 @@ def rho_gather(assign, ids, vals, means_t, *, b_blk=128, k_blk=128, d_blk=256,
     interpret = (not _on_tpu()) if interpret is None else interpret
     b = ids.shape[0]
     k = means_t.shape[1]
+    d = means_t.shape[0]
     pa = _pad_to(assign, b_blk, 0, value=k)
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    out = _rg.rho_gather_pallas(pa, pi, pv, pm, b_blk=b_blk, k_blk=k_blk,
-                                d_blk=d_blk, interpret=interpret)
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    occ, head, _, n_head = _plan_operands(
+        plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=False)
+    out = _rg.rho_gather_pallas(pa, pi, pv, pm, occ, head, b_blk=b_blk,
+                                k_sup=ks, d_blk=d_blk, n_head=n_head,
+                                interpret=interpret)
     return out[:b]
 
 

@@ -3,13 +3,20 @@
 λ[k, d] += Σ_b onehot(assign[b] == k) · x[b, d] — the cluster-sum accumulation
 expressed as two one-hot densifications feeding a single matmul:
 
-    grid = (K tiles, D tiles, B tiles)           # B sequential → accumulate
+    grid = (K superblocks, D tiles, B tiles)     # B sequential → accumulate
     slab   = densify(ids, vals)                   (B_blk, D_blk)
-    sel    = onehot(assign − k0)                  (B_blk, K_blk)
+    sel    = onehot(assign − k0)                  (B_blk, K_sup)
     out   += selᵀ @ slab                          (MXU)
 
 A CPU implementation scatters; a TPU implementation must not (serialised
 HBM read-modify-write) — this is the update-step half of the AFM adaptation.
+
+Kernel engine v2 (see sparse_sim.py): K rides in ``k_sup``-wide superblocks
+so the slab is built once per (B, D) block, not once per (K, D, B) step;
+the occupancy map skips empty (B-tile, D-block) cells; the trailing high-df
+blocks read the cached head slab instead of re-densifying.  Rows whose
+``sel`` column is out of range contribute zero whatever the slab holds, so
+cached slabs stay exact under the shard-local masking conventions.
 """
 from __future__ import annotations
 
@@ -18,47 +25,70 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sparse_sim import _densify
+from repro.kernels.sparse_sim import _slab
 
 
-def _update_kernel(assign_ref, ids_ref, vals_ref, out_ref, *,
-                   d_blk: int, k_blk: int):
-    b_idx = pl.program_id(2)
-    k0 = pl.program_id(0) * k_blk
-    d0 = pl.program_id(1) * d_blk
+def _update_kernel(occ_ref, *refs, d_blk: int, k_sup: int, nd: int,
+                   n_head: int):
+    ins = 3 + (1 if n_head else 0)
+    assign_ref, ids_ref, vals_ref = refs[0], refs[1], refs[2]
+    head_ref = refs[3] if n_head else None
+    out_ref = refs[ins]
 
-    slab = _densify(ids_ref[...], vals_ref[...], d0, d_blk)   # (B_blk, D_blk)
-    local = assign_ref[...][:, 0] - k0                        # (B_blk,)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], k_blk), 1)
-    sel = (local[:, None] == iota).astype(jnp.float32)        # (B_blk, K_blk)
-    acc = jnp.dot(sel.T, slab, preferred_element_type=jnp.float32)
+    j = pl.program_id(0)
+    l = pl.program_id(1)
+    m = pl.program_id(2)
+    k0 = j * k_sup
 
-    @pl.when(b_idx == 0)
+    @pl.when(m == 0)
     def _init():
-        out_ref[...] = acc
+        out_ref[...] = jnp.zeros_like(out_ref)
 
-    @pl.when(b_idx > 0)
-    def _acc():
-        out_ref[...] += acc
+    @pl.when(occ_ref[m, l] != 0)
+    def _work():
+        slab = _slab(ids_ref, vals_ref, head_ref, None, l, d_blk=d_blk,
+                     nd=nd, n_head=n_head, diag=False)
+        local = assign_ref[...][:, 0] - k0                    # (B_blk,)
+        iota = jax.lax.broadcasted_iota(jnp.int32,
+                                        (local.shape[0], k_sup), 1)
+        sel = (local[:, None] == iota).astype(jnp.float32)    # (B_blk, K_sup)
+        out_ref[...] += jnp.dot(sel.T, slab,
+                                preferred_element_type=jnp.float32)
 
 
-def segment_update_pallas(assign, ids, vals, k: int, d: int, *,
-                          b_blk: int = 128, k_blk: int = 128, d_blk: int = 256,
+def segment_update_pallas(assign, ids, vals, k: int, d: int, occ,
+                          head=None, *, b_blk: int = 128, k_sup: int = 128,
+                          d_blk: int = 256, n_head: int = 0,
                           interpret: bool = False):
     """assign: (B,) int32; ids/vals: (B, P). Returns (K, D) float32 sums."""
     b, p = ids.shape
-    assert b % b_blk == 0 and k % k_blk == 0 and d % d_blk == 0 and p % 8 == 0
-    grid = (k // k_blk, d // d_blk, b // b_blk)
+    nd = d // d_blk
+    assert b % b_blk == 0 and k % k_sup == 0 and d % d_blk == 0 and p % 8 == 0
+    assert occ.shape == (b // b_blk, nd)
+    grid = (k // k_sup, nd, b // b_blk)
+
+    def head_idx(j, l, m, occ):
+        return (m, jnp.maximum(l - (nd - n_head), 0))
+
+    in_specs = [
+        pl.BlockSpec((b_blk, 1), lambda j, l, m, occ: (m, 0)),
+        pl.BlockSpec((b_blk, p), lambda j, l, m, occ: (m, 0)),
+        pl.BlockSpec((b_blk, p), lambda j, l, m, occ: (m, 0)),
+    ]
+    inputs = [assign[:, None], ids, vals]
+    if n_head:
+        in_specs.append(pl.BlockSpec((b_blk, d_blk), head_idx))
+        inputs.append(head)
+
     return pl.pallas_call(
-        functools.partial(_update_kernel, d_blk=d_blk, k_blk=k_blk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((b_blk, 1), lambda i, j, l: (l, 0)),
-            pl.BlockSpec((b_blk, p), lambda i, j, l: (l, 0)),
-            pl.BlockSpec((b_blk, p), lambda i, j, l: (l, 0)),
-        ],
-        out_specs=pl.BlockSpec((k_blk, d_blk), lambda i, j, l: (i, j)),
+        functools.partial(_update_kernel, d_blk=d_blk, k_sup=k_sup, nd=nd,
+                          n_head=n_head),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((k_sup, d_blk),
+                                   lambda j, l, m, occ: (j, l))),
         out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
         interpret=interpret,
-    )(assign[:, None], ids, vals)
+    )(occ, *inputs)

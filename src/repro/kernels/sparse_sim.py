@@ -5,16 +5,33 @@ algorithm chases posting lists; on TPU we instead *densify* each object tile
 into a (B_blk, D_blk) slab — one D-block at a time, exploiting the df-sorted
 term layout — and feed the MXU:
 
-    grid = (B tiles, K tiles, D tiles)           # D sequential → accumulate
+    grid = (B tiles, K superblocks, D tiles)     # D sequential → accumulate
     slab[b, d]  = Σ_p vals[b,p] · [ids[b,p] == d0+d]      (VPU one-hot build)
     out[b, k]  += slab @ means_blk                         (MXU matmul)
 
-VMEM per step: ids/vals (B_blk·P), slab (B_blk·D_blk), means (D_blk·K_blk),
-out (B_blk·K_blk) — all 128-aligned, chosen to stay well under ~16 MiB.
+Skew-aware engine (v2):
+
+* **Slab reuse across K.**  K rides in ``k_sup``-wide superblocks (the whole
+  padded K when it fits the VMEM budget), so the expensive densification
+  runs once per (B, D) block instead of once per (B, K, D) step — a
+  K/k_blk× cut in one-hot work.  The D loop stays innermost: each output
+  block is revisited only on consecutive grid steps, the safe accumulation
+  pattern.
+* **Occupancy pruning.**  A scalar-prefetch (SMEM) map says which
+  (B-tile, D-block) cells hold live tuples; empty cells — most of the
+  low-df range, by Zipf skew — skip densify and matmul entirely.  Exact:
+  an empty cell's slab is all zeros.
+* **Cached head slabs.**  The trailing high-df blocks can arrive
+  pre-densified (``kernels/plan.py``); the kernel reads the cached slab
+  instead of rebuilding it every epoch.
+* **Fused Mult diagnostics.**  With ``diag`` the kernel carries a second
+  accumulator ``counts[b,k] = Σ_p live[b,p]·[means[ids[b,p],k] > 0]`` —
+  the paper's visited-pair count — off the same one-hot walk
+  (``_densify_pair``), so diagnostics no longer cost extra kernel launches.
 
 The one-hot densification is the paper's inverted-index walk with the
 branch-misprediction hazard replaced by uniform lane masks — the AFM
-translation from DESIGN.md §2.
+translation from DESIGN.md §2/§3.
 """
 from __future__ import annotations
 
@@ -23,6 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _densify(ids, vals, d0, d_blk: int, p_chunk: int = 8):
@@ -45,38 +63,135 @@ def _densify(ids, vals, d0, d_blk: int, p_chunk: int = 8):
     return jax.lax.fori_loop(0, p // p_chunk, body, acc0)
 
 
-def _sim_kernel(ids_ref, vals_ref, means_ref, out_ref, *, d_blk: int):
-    d_idx = pl.program_id(2)
-    slab = _densify(ids_ref[...], vals_ref[...], d_idx * d_blk, d_blk)
-    acc = jnp.dot(slab, means_ref[...], preferred_element_type=jnp.float32)
+def _densify_pair(ids, vals, d0, d_blk: int, p_chunk: int = 8):
+    """One one-hot walk, two slabs: (value slab, live-count slab).
 
-    @pl.when(d_idx == 0)
+    The count slab weights every live slot (``vals != 0``) 1.0 — the operand
+    of the fused Mult accumulator.  Sharing the walk is what makes the
+    diagnostic effectively free: the onehot tensor is the expensive part.
+    """
+    b, p = ids.shape
+    local = ids - d0
+    in_blk = (local >= 0) & (local < d_blk)
+    w = jnp.where(in_blk, vals, 0.0)
+    lw = jnp.where(in_blk & (vals != 0.0), 1.0, 0.0).astype(vals.dtype)
+    lid = jnp.where(in_blk, local, 0)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, p_chunk, d_blk), 2)
+
+    def body(c, accs):
+        acc, cacc = accs
+        sl_id = jax.lax.dynamic_slice_in_dim(lid, c * p_chunk, p_chunk, 1)
+        sl_w = jax.lax.dynamic_slice_in_dim(w, c * p_chunk, p_chunk, 1)
+        sl_l = jax.lax.dynamic_slice_in_dim(lw, c * p_chunk, p_chunk, 1)
+        onehot = (sl_id[:, :, None] == iota).astype(vals.dtype)
+        return (acc + jnp.einsum("bp,bpd->bd", sl_w, onehot,
+                                 preferred_element_type=jnp.float32),
+                cacc + jnp.einsum("bp,bpd->bd", sl_l, onehot,
+                                  preferred_element_type=jnp.float32))
+
+    z = jnp.zeros((b, d_blk), jnp.float32)
+    return jax.lax.fori_loop(0, p // p_chunk, body, (z, z))
+
+
+def _slab(ids_ref, vals_ref, head_ref, headc_ref, l, *, d_blk, nd, n_head,
+          diag):
+    """The (B_blk, D_blk) slab(s) for D-block ``l``: cached for the trailing
+    high-df blocks, densified otherwise."""
+    if diag:
+        build = lambda: _densify_pair(ids_ref[...], vals_ref[...],
+                                      l * d_blk, d_blk)
+        if n_head == 0:
+            return build()
+        return jax.lax.cond(l >= nd - n_head,
+                            lambda: (head_ref[...], headc_ref[...]), build)
+    build = lambda: _densify(ids_ref[...], vals_ref[...], l * d_blk, d_blk)
+    if n_head == 0:
+        return build()
+    return jax.lax.cond(l >= nd - n_head, lambda: head_ref[...], build)
+
+
+def _head_index(nd: int, n_head: int):
+    """Index map for the cached-head operand: clamped so pre-head D steps
+    keep pointing at block 0 (an unchanged index between consecutive grid
+    steps costs no re-fetch)."""
+    return lambda i, j, l, occ: (i, jnp.maximum(l - (nd - n_head), 0))
+
+
+def _sim_kernel(occ_ref, *refs, d_blk: int, nd: int, n_head: int, diag: bool):
+    ins = 2 + 1 + (1 if n_head else 0) + (1 if n_head and diag else 0)
+    ids_ref, vals_ref, means_ref = refs[0], refs[1], refs[2]
+    head_ref = refs[3] if n_head else None
+    headc_ref = refs[4] if n_head and diag else None
+    out_ref = refs[ins]
+    cnt_ref = refs[ins + 1] if diag else None
+
+    i = pl.program_id(0)
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
     def _init():
-        out_ref[...] = acc
+        out_ref[...] = jnp.zeros_like(out_ref)
+        if diag:
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    @pl.when(d_idx > 0)
-    def _acc():
-        out_ref[...] += acc
+    @pl.when(occ_ref[i, l] != 0)
+    def _work():
+        means = means_ref[...]
+        if diag:
+            slab, cslab = _slab(ids_ref, vals_ref, head_ref, headc_ref, l,
+                                d_blk=d_blk, nd=nd, n_head=n_head, diag=True)
+            cnt_ref[...] += jnp.dot(cslab, (means > 0).astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+        else:
+            slab = _slab(ids_ref, vals_ref, head_ref, headc_ref, l,
+                         d_blk=d_blk, nd=nd, n_head=n_head, diag=False)
+        out_ref[...] += jnp.dot(slab, means,
+                                preferred_element_type=jnp.float32)
 
 
-def sparse_sim_pallas(ids: jax.Array, vals: jax.Array, means_t: jax.Array, *,
-                      b_blk: int = 128, k_blk: int = 128, d_blk: int = 256,
-                      interpret: bool = False) -> jax.Array:
-    """ids/vals: (B, P) padded sparse objects; means_t: (D, K). -> (B, K)."""
+def sparse_sim_pallas(ids, vals, means_t, occ, head=None, headc=None, *,
+                      b_blk: int = 128, k_sup: int = 128, d_blk: int = 256,
+                      n_head: int = 0, diag: bool = False,
+                      interpret: bool = False):
+    """ids/vals: (B, P) padded sparse objects; means_t: (D, K); occ: the
+    (B//b_blk, D//d_blk) occupancy map.  -> (B, K) sims [, (B, K) counts].
+    """
     b, p = ids.shape
     d, k = means_t.shape
-    assert b % b_blk == 0 and k % k_blk == 0 and d % d_blk == 0 and p % 8 == 0, (
-        f"shapes must be block-aligned: B={b}/{b_blk} K={k}/{k_blk} D={d}/{d_blk} P={p}/8")
-    grid = (b // b_blk, k // k_blk, d // d_blk)
-    return pl.pallas_call(
-        functools.partial(_sim_kernel, d_blk=d_blk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
-            pl.BlockSpec((b_blk, p), lambda i, j, l: (i, 0)),
-            pl.BlockSpec((d_blk, k_blk), lambda i, j, l: (l, j)),
-        ],
-        out_specs=pl.BlockSpec((b_blk, k_blk), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+    nd = d // d_blk
+    assert b % b_blk == 0 and k % k_sup == 0 and d % d_blk == 0 and p % 8 == 0, (
+        f"shapes must be block-aligned: B={b}/{b_blk} K={k}/{k_sup} "
+        f"D={d}/{d_blk} P={p}/8")
+    assert occ.shape == (b // b_blk, nd), (occ.shape, (b // b_blk, nd))
+    grid = (b // b_blk, k // k_sup, nd)
+
+    in_specs = [
+        pl.BlockSpec((b_blk, p), lambda i, j, l, occ: (i, 0)),
+        pl.BlockSpec((b_blk, p), lambda i, j, l, occ: (i, 0)),
+        pl.BlockSpec((d_blk, k_sup), lambda i, j, l, occ: (l, j)),
+    ]
+    inputs = [ids, vals, means_t]
+    if n_head:
+        in_specs.append(pl.BlockSpec((b_blk, d_blk), _head_index(nd, n_head)))
+        inputs.append(head)
+        if diag:
+            in_specs.append(pl.BlockSpec((b_blk, d_blk),
+                                         _head_index(nd, n_head)))
+            inputs.append(headc)
+    out_specs = [pl.BlockSpec((b_blk, k_sup), lambda i, j, l, occ: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((b, k), jnp.float32)]
+    if diag:
+        out_specs.append(pl.BlockSpec((b_blk, k_sup),
+                                      lambda i, j, l, occ: (i, j)))
+        out_shape.append(jax.ShapeDtypeStruct((b, k), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_sim_kernel, d_blk=d_blk, nd=nd, n_head=n_head,
+                          diag=diag),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=out_specs),
+        out_shape=out_shape,
         interpret=interpret,
-    )(ids, vals, means_t)
+    )(occ, *inputs)
+    return tuple(out) if diag else out[0]

@@ -400,14 +400,22 @@ class ChunkPrefetcher:
     buffering).  Iterating yields ``(chunk_index, SparseDocs-on-device)`` in
     ``order`` (default: sequential).  Producer exceptions re-raise at the
     consumer's next pull, so a torn disk read cannot hang the fit.
+
+    ``prepare`` — an optional ``(chunk_index, docs) -> extra`` callable run
+    on the producer thread; its result (e.g. the chunk's prepared kernel
+    plan, see ``core/lloyd._ChunkPlanCache``) rides the queue beside the
+    chunk, so prepared slabs overlap H2D with the consumer's compute just
+    like the raw tuples do.  With ``prepare`` set, iteration yields
+    ``(chunk_index, docs, extra)`` triples.
     """
 
     def __init__(self, store: DocStore, *, depth: int = 2, order=None,
-                 device=None):
+                 device=None, prepare=None):
         self.store = store
         self.depth = max(int(depth), 1)
         self.order = list(range(store.n_chunks)) if order is None else list(order)
         self.device = device
+        self.prepare = prepare
 
     def __iter__(self):
         q: queue.Queue = queue.Queue(maxsize=self.depth)
@@ -434,7 +442,9 @@ class ChunkPrefetcher:
                     docs = self.store.chunk(ci)
                     if self.device is not None:
                         docs = jax.device_put(docs, self.device)
-                    if not put((ci, docs)):
+                    item = ((ci, docs) if self.prepare is None
+                            else (ci, docs, self.prepare(ci, docs)))
+                    if not put(item):
                         return
                 put(_END)
             except BaseException as e:          # rethrown at the consumer

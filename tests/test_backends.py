@@ -96,6 +96,63 @@ def test_update_phase_parity_matrix(mid_state, algo):
     assert (np.asarray(ref_n.assign) == np.asarray(pal_n.assign)).all()
 
 
+def test_pallas_diag_is_fused_no_extra_launch(mid_state, monkeypatch):
+    """ISSUE 5 acceptance: ``diag=True`` issues NO extra kernel launch —
+    the Mult count rides the main kernels as a fused accumulator, and the
+    ES mode pulls bound operands + exact sims + counts out of ONE
+    ``esicp_gather`` launch (no separate ``sparse_sim`` pass)."""
+    from repro.kernels import ops
+
+    docs, index, state = mid_state
+    calls = []
+    for name in ("sparse_sim", "esicp_gather", "segment_update",
+                 "rho_gather", "esicp_filter"):
+        real = getattr(ops, name)
+
+        def wrapped(*a, _real=real, _name=name, **kw):
+            calls.append(_name)
+            return _real(*a, **kw)
+
+        monkeypatch.setattr(ops, name, wrapped)
+
+    bk = BACKENDS["pallas"]
+    out = bk.accumulate(docs, index, state.xstate, mode="esicp", diag=True)
+    assert calls == ["esicp_gather"]
+    assert {"sims", "rho12", "y", "mult"} <= set(out)
+
+    calls.clear()
+    out = bk.accumulate(docs, index, state.xstate, mode="exact", diag=True)
+    assert calls == ["sparse_sim"]
+    assert {"sims", "mult"} <= set(out)
+
+    calls.clear()
+    nodiag = bk.accumulate(docs, index, state.xstate, mode="exact",
+                           diag=False)
+    assert calls == ["sparse_sim"]          # same launch count without diag
+    assert float(nodiag["mult"]) == 0.0
+
+
+def test_pallas_prepare_plan_keeps_exactness(mid_state):
+    """A prepared plan (occupancy + cached head slabs) changes nothing:
+    accumulators and the Mult count are identical with and without it."""
+    from repro.kernels.plan import KernelPlan
+
+    docs, index, state = mid_state
+    bk = BACKENDS["pallas"]
+    plan = bk.prepare(docs)
+    assert isinstance(plan, KernelPlan) and plan.occ is not None
+    assert BACKENDS["reference"].prepare(docs) is None
+    for mode in ("exact", "esicp"):
+        base = bk.accumulate(docs, index, state.xstate, mode=mode, diag=True)
+        planned = bk.accumulate(docs, index, state.xstate, mode=mode,
+                                diag=True, plan=plan)
+        assert float(base["mult"]) == float(planned["mult"])
+        for key in ("sims", "rho12", "y"):
+            if key in base:
+                np.testing.assert_array_equal(np.asarray(base[key]),
+                                              np.asarray(planned[key]))
+
+
 def _update_case(rng, b, p, d, k, assign):
     ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
     vals = rng.random((b, p)).astype(np.float32)

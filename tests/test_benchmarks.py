@@ -11,6 +11,49 @@ def test_fused_suite_registered():
     assert JSON_SUITES["fused"] == "BENCH_fused_iteration.json"
 
 
+def test_kernel_suite_registered():
+    names = [n for n, _ in SUITES]
+    assert "kernels" in names
+    assert JSON_SUITES["kernels"] == "BENCH_kernels.json"
+
+
+def test_bench_row_carries_execution_metadata():
+    """Dict rows record jax.default_backend() and the interpret flag, so an
+    interpret-mode Pallas timing can never be read as a TPU number — while
+    reference rows (plain XLA, no Pallas dispatch) are never flagged."""
+    import jax
+
+    from benchmarks.common import bench_row
+
+    row = bench_row("kernel_suite/sparse_sim_pallas", 12.345, "pallas",
+                    warmup_us=99.9, speedup=2.5)
+    assert row["name"] == "kernel_suite/sparse_sim_pallas"
+    assert row["us_per_call"] == 12.35 and row["warmup_us"] == 99.9
+    assert row["backend"] == "pallas" and row["speedup"] == 2.5
+    assert row["platform"] == jax.default_backend()
+    assert row["interpret"] == (jax.default_backend() != "tpu")
+    ref_row = bench_row("kernel_suite/sparse_sim_reference", 5.0, "reference")
+    assert ref_row["interpret"] is False
+
+
+def test_write_bench_json_dict_rows(tmp_path):
+    """Dict rows pass through verbatim (metadata preserved) and mix with
+    legacy CSV-string rows."""
+    from benchmarks.common import bench_row
+    from benchmarks.run import _as_csv
+
+    rows = [bench_row("kernel_suite/rho_gather_pallas", 8.0, "pallas",
+                      warmup_us=20.0, speedup=1.5),
+            "fused_iteration/fit_per_iter,100.00,reference"]
+    path = write_bench_json(rows, str(tmp_path / "BENCH_kernels.json"))
+    data = json.loads(open(path).read())
+    assert data[0]["speedup"] == 1.5 and "interpret" in data[0]
+    assert data[1] == {"name": "fused_iteration/fit_per_iter",
+                       "us_per_call": 100.0, "backend": "reference"}
+    assert _as_csv(rows[0]) == "kernel_suite/rho_gather_pallas,8.00,pallas,20.00"
+    assert _as_csv(rows[1]) == rows[1]
+
+
 def test_write_bench_json(tmp_path):
     rows = ["fused_iteration/update_reference,12.50,reference",
             "fused_iteration/update_pallas,8.00,pallas",

@@ -90,6 +90,177 @@ def test_rho_gather(rng, b, p, d, k):
     assert (np.asarray(out)[np.asarray(assign) == k] == 0.0).all()
 
 
+def _count_oracle(ids, vals, w):
+    """Visited-pair count oracle: Σ_p live[b,p] · w[ids[b,p], k] — per SLOT,
+    not per distinct term (duplicate ids count twice, like the TAAT scan)."""
+    live01 = (np.asarray(vals) != 0).astype(np.float32)
+    return np.asarray(ref.sparse_sim(ids, jnp.asarray(live01),
+                                     jnp.asarray(w.astype(np.float32))))
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_sparse_sim_fused_diag(rng, b, p, d, k):
+    """diag=True returns the visited-pair counts from the same launch."""
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    sims, counts = sparse_sim(ids, vals, means_t, diag=True,
+                              b_blk=64, k_blk=64, d_blk=128)
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-5, atol=1e-5)
+    exp = _count_oracle(ids, vals, np.asarray(means_t) > 0)
+    np.testing.assert_allclose(np.asarray(counts), exp, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_esicp_gather_fused_sims_and_diag(rng, b, p, d, k):
+    """with_sims/diag pull exact sims + exact-region counts out of the ONE
+    gather launch; rho12/y stay oracle-exact."""
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    t_th, v_th = int(0.8 * d), 0.3
+    r12, y, sims, counts = esicp_gather(ids, vals, means_t, t_th, v_th,
+                                        with_sims=True, diag=True,
+                                        b_blk=64, k_blk=64, d_blk=128)
+    e12, ey = ref.esicp_gather(ids, vals, means_t, t_th, v_th)
+    np.testing.assert_allclose(np.asarray(r12), np.asarray(e12),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ey),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-5, atol=1e-5)
+    m = np.asarray(means_t)
+    tail = np.arange(d)[:, None] >= t_th
+    w = (m > 0) & np.where(tail, m >= v_th, True)
+    np.testing.assert_allclose(np.asarray(counts), _count_oracle(ids, vals, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,d,k", SHAPES)
+def test_kernels_with_prepared_plan_match_unplanned(rng, b, p, d, k):
+    """A prepared plan (precomputed occupancy + cached head slabs) is pure
+    optimisation: every kernel's output is unchanged when it is supplied."""
+    from repro.kernels.plan import prepare_plan
+
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    plan = prepare_plan(ids, vals, dim=d, b_blk=64, d_blk=128,
+                        head_bytes=1 << 30)
+    assert plan.n_head > 0              # budget covers every block here
+    assign = jnp.asarray(rng.integers(0, k + 1, b).astype(np.int32))
+    kw = dict(b_blk=64, k_blk=64, d_blk=128)
+
+    np.testing.assert_array_equal(
+        np.asarray(sparse_sim(ids, vals, means_t, **kw)),
+        np.asarray(sparse_sim(ids, vals, means_t, plan=plan, **kw)))
+    base = esicp_gather(ids, vals, means_t, int(0.8 * d), 0.3,
+                        with_sims=True, diag=True, **kw)
+    planned = esicp_gather(ids, vals, means_t, int(0.8 * d), 0.3, plan=plan,
+                           with_sims=True, diag=True, **kw)
+    for a, e in zip(planned, base):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+    np.testing.assert_array_equal(
+        np.asarray(segment_update(assign, ids, vals, k=k, d=d, **kw)),
+        np.asarray(segment_update(assign, ids, vals, k=k, d=d, plan=plan,
+                                  **kw)))
+    np.testing.assert_array_equal(
+        np.asarray(rho_gather(assign, ids, vals, means_t, **kw)),
+        np.asarray(rho_gather(assign, ids, vals, means_t, plan=plan, **kw)))
+
+    # A plan whose geometry does not match the call is ignored, not wrong.
+    stale = prepare_plan(ids, vals, dim=d, b_blk=32, d_blk=64)
+    np.testing.assert_allclose(
+        np.asarray(sparse_sim(ids, vals, means_t, plan=stale, **kw)),
+        np.asarray(ref.sparse_sim(ids, vals, means_t)),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,d,k", [(96, 20, 300, 150), (130, 17, 260, 129)])
+def test_multi_superblock_k_grid(rng, b, p, d, k):
+    """k_sup < padded K exercises the K-superblock grid dimension (j > 0)
+    and the k0 offset math in every kernel — the production path for
+    K > K_SUP_CAP that default test shapes never reach."""
+    from repro.kernels.plan import prepare_plan
+
+    ids, vals, means_t = _case(rng, b, p, d, k)
+    plan = prepare_plan(ids, vals, dim=d, b_blk=64, d_blk=128,
+                        head_bytes=1 << 30)
+    assign = jnp.asarray(rng.integers(0, k + 1, b).astype(np.int32))
+    kw = dict(b_blk=64, k_blk=32, d_blk=128, k_sup=32)   # padded K / 32 > 1
+
+    sims, cnt = sparse_sim(ids, vals, means_t, plan=plan, diag=True, **kw)
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt),
+                               _count_oracle(ids, vals,
+                                             np.asarray(means_t) > 0),
+                               rtol=1e-5, atol=1e-5)
+    r12, y = esicp_gather(ids, vals, means_t, int(0.8 * d), 0.3, plan=plan,
+                          **kw)
+    e12, ey = ref.esicp_gather(ids, vals, means_t, int(0.8 * d), 0.3)
+    np.testing.assert_allclose(np.asarray(r12), np.asarray(e12),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ey),
+                               rtol=1e-5, atol=1e-5)
+    lam = segment_update(assign, ids, vals, k=k, d=d, plan=plan, **kw)
+    x = np.asarray(ref.densify(ids, vals, d))
+    exp = np.zeros((k, d), np.float32)
+    for i, a in enumerate(np.asarray(assign)):
+        if a < k:
+            exp[a] += x[i]
+    np.testing.assert_allclose(np.asarray(lam), exp, rtol=1e-4, atol=1e-4)
+    rho = rho_gather(assign, ids, vals, means_t, plan=plan, **kw)
+    np.testing.assert_allclose(
+        np.asarray(rho), np.asarray(ref.rho_gather(assign, ids, vals,
+                                                   means_t)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_pick_k_sup_divides_padded_k():
+    """The auto policy returns a k_blk multiple that divides padded K and
+    respects the VMEM cap — including awkward padded sizes."""
+    from repro.kernels.ops import K_SUP_CAP, _pick_k_sup
+
+    for kp, k_blk in [(128, 128), (2048, 128), (2560, 128), (1152, 128),
+                      (3200, 64), (96, 32), (4096, 128)]:
+        ks = _pick_k_sup(kp, k_blk, None)
+        assert kp % ks == 0 and ks % k_blk == 0
+        assert ks <= max(K_SUP_CAP, k_blk) or ks == kp <= K_SUP_CAP
+
+
+def test_occupancy_map_marks_exactly_live_cells(rng):
+    """Occupancy: a cell is marked iff some row of its b_blk group holds a
+    LIVE (val != 0) tuple in that D-block — padding/dead slots never count."""
+    from repro.kernels.plan import occupancy_map
+
+    b, p, d, d_blk, b_blk = 96, 12, 256, 64, 32
+    ids, vals, _ = _case(rng, b, p, d, 8)
+    occ = np.asarray(occupancy_map(ids, vals, dim=d, b_blk=b_blk,
+                                   d_blk=d_blk))
+    assert occ.shape == (b // b_blk, d // d_blk)
+    iid, val = np.asarray(ids), np.asarray(vals)
+    for t in range(b // b_blk):
+        rows = slice(t * b_blk, (t + 1) * b_blk)
+        for l in range(d // d_blk):
+            in_blk = (iid[rows] // d_blk == l) & (val[rows] != 0)
+            assert bool(occ[t, l]) == bool(in_blk.any())
+
+
+def test_occupancy_tiled_layout_matches_per_tile(rng):
+    """tile_rows groups rows per tile (the epoch's slicing contract): the
+    tiled map equals independently computed per-tile maps, including a tile
+    size that is NOT a b_blk multiple (per-tile padding)."""
+    from repro.kernels.plan import occupancy_map
+
+    b, p, d = 120, 10, 128
+    ids, vals, _ = _case(rng, b, p, d, 8)
+    tiled = np.asarray(occupancy_map(ids, vals, dim=d, b_blk=16, d_blk=64,
+                                     tile_rows=40))
+    per_tile = [np.asarray(occupancy_map(ids[s:s + 40], vals[s:s + 40],
+                                         dim=d, b_blk=16, d_blk=64))
+                for s in range(0, b, 40)]
+    np.testing.assert_array_equal(tiled, np.concatenate(per_tile))
+
+
 def test_gather_matches_scan_core(rng):
     """Kernel path == the core's TAAT scan accumulators (integration)."""
     from repro.core import build_mean_index, StructuralParams
