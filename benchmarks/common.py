@@ -105,8 +105,30 @@ def exec_meta(backend: str = "") -> dict:
     import jax
 
     platform = jax.default_backend()
-    return {"platform": platform,
-            "interpret": backend == "pallas" and platform != "tpu"}
+    interpret = backend == "pallas" and platform != "tpu"
+    # mode names the timed execution path explicitly: 'xla' (reference jnp
+    # ops), 'compiled' (lowered Pallas kernels), 'interpret' (the Pallas
+    # interpreter).  Suites that probe the live mode (kernel_suite) override
+    # it per row; this default matches the kernels/ops.py dispatch rule.
+    mode = ("xla" if backend != "pallas"
+            else ("interpret" if interpret else "compiled"))
+    return {"platform": platform, "interpret": interpret, "mode": mode}
+
+
+def speedup_fields(ref_best_s: float, best_s: float, *,
+                   comparable: bool) -> dict:
+    """The ``speedup``/``comparable`` field pair for a bench row.
+
+    A speedup ratio is only meaningful when numerator and denominator ran
+    the same execution mode — an interpret-mode Pallas timing against a
+    compiled XLA reference measures the interpreter, not the kernel, so the
+    ratio is suppressed (``speedup: null``) and the row says why
+    (``comparable: false``).  Same-mode ratios (e.g. tuned-vs-default, both
+    interpret or both compiled) stay valid everywhere.
+    """
+    return {"comparable": bool(comparable),
+            "speedup": (round(float(ref_best_s) / float(best_s), 4)
+                        if comparable else None)}
 
 
 def bench_row(name: str, us_per_call: float, backend: str = "", *,

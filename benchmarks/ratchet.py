@@ -1,0 +1,100 @@
+"""Kernel perf ratchet over ``BENCH_kernels.json`` (the CI bench-kernels
+job's gate).
+
+Two checks:
+
+1. **Compiled-mode ratchet** — on platforms where the Pallas kernels
+   compile (rows with ``comparable: true``), every kernel's best
+   pallas-variant ``speedup`` vs the XLA reference must be >= 1.0: a
+   compiled kernel that loses to the oracle it replaced is a regression,
+   and the whole point of the engine.  On interpret-only platforms (CPU
+   runners) the check is *skipped with a visible annotation* — an
+   interpreter timing says nothing about kernel performance, and
+   fabricating a ratchet from it would be worse than no ratchet.
+
+2. **Honesty invariants** — always enforced, every platform: interpret-mode
+   pallas rows must carry ``comparable: false`` and a null ``speedup``
+   (cross-engine ratios are suppressed, never fabricated), and the
+   ``speedup_vs_default`` tuned-vs-default ratio (same engine, same mode —
+   valid everywhere) must be present on every tuned row.
+
+Exit 0 = pass/skip, 1 = ratchet or honesty failure.  The ``::notice``/
+``::error`` lines render as GitHub Actions annotations.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+KERNELS = ("sparse_sim", "esicp_gather", "segment_update", "rho_gather")
+
+
+def _kernel_of(name: str) -> str | None:
+    for k in KERNELS:
+        if name.startswith(f"kernel_suite/{k}_"):
+            return k
+    return None
+
+
+def check(rows: list[dict]) -> int:
+    pallas = [r for r in rows
+              if r.get("backend") == "pallas" and _kernel_of(r["name"])]
+    if not pallas:
+        print("::error::BENCH_kernels.json holds no pallas kernel rows")
+        return 1
+
+    failures = []
+
+    # -- honesty invariants (every platform) -------------------------------
+    for r in pallas:
+        if r.get("interpret") and (r.get("comparable") or
+                                   r.get("speedup") is not None):
+            failures.append(
+                f"{r['name']}: interpret-mode row claims a cross-engine "
+                f"speedup (comparable={r.get('comparable')}, "
+                f"speedup={r.get('speedup')})")
+    tuned_rows = [r for r in pallas if r["name"].endswith("_pallas_tuned")]
+    for r in tuned_rows:
+        if "speedup_vs_default" not in r:
+            failures.append(f"{r['name']}: tuned row missing the same-mode "
+                            f"speedup_vs_default ratio")
+
+    # -- tuned-vs-default report (same-mode, valid everywhere) -------------
+    for r in tuned_rows:
+        sv = r.get("speedup_vs_default")
+        if sv is not None:
+            print(f"{r['name']}: tuned vs default {sv:.4f}x "
+                  f"({r.get('mode', '?')} mode)")
+
+    # -- compiled-mode ratchet ---------------------------------------------
+    comparable = [r for r in pallas if r.get("comparable")]
+    if not comparable:
+        plat = pallas[0].get("platform", "?")
+        print(f"::notice title=kernel ratchet skipped::compiled Pallas is "
+              f"unavailable on platform={plat!r} (interpret-only); the "
+              f"speedup-vs-reference ratchet needs compiled kernels and "
+              f"was not evaluated")
+    else:
+        for k in KERNELS:
+            best = max((r.get("speedup") or 0.0) for r in comparable
+                       if _kernel_of(r["name"]) == k)
+            print(f"{k}: best compiled speedup vs reference {best:.4f}x")
+            if best < 1.0:
+                failures.append(f"{k}: compiled-mode speedup {best:.4f} < "
+                                f"1.0 — the kernel lost to the XLA "
+                                f"reference it replaces")
+
+    for msg in failures:
+        print(f"::error title=kernel ratchet::{msg}")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    with open(path) as f:
+        rows = json.load(f)
+    return check(rows)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

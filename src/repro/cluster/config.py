@@ -41,6 +41,13 @@ class ClusterConfig:
     checkpoint_dir/checkpoint_every: optional fault-tolerant checkpointing:
                 every N iterations on the mesh runtime, every N chunks
                 (mid-epoch, resumable) on the streaming runtime.
+    tune:       'off' (defaults) | 'cached' (reuse a previously found
+                winner for this corpus regime, fall back to defaults on a
+                miss) | 'search' (run the roofline-pruned autotuner on a
+                miss and cache the winner — repro.tune).  No-op on the
+                reference backend; the mesh runtime resolves cache-only.
+    tune_budget: optional repro.tune.SearchBudget (or int max timed
+                candidates) for 'search' mode.
     """
 
     k: int
@@ -57,6 +64,8 @@ class ClusterConfig:
     algo_mode: str = "full"
     checkpoint_dir: str | None = None
     checkpoint_every: int = 5
+    tune: str = "off"
+    tune_budget: Any = None
 
     def __post_init__(self):
         object.__setattr__(self, "est_iters", tuple(self.est_iters))
@@ -95,6 +104,9 @@ class ClusterConfig:
         if self.algo_mode not in ("full", "minibatch"):
             raise ValueError(f"algo_mode must be 'full' or 'minibatch', "
                              f"got {self.algo_mode!r}")
+        if self.tune not in ("off", "cached", "search"):
+            raise ValueError(f"tune must be 'off', 'cached' or 'search', "
+                             f"got {self.tune!r}")
         if self.algo_mode == "minibatch" and self.mesh is not None:
             raise ValueError(
                 "algo_mode='minibatch' runs on the streaming strategy; "

@@ -68,7 +68,8 @@ class SphericalKMeans:
                  est_iters=(1, 2), seed: int = 0, mesh=None,
                  chunk_size: int = 1024, algo_mode: str = "full",
                  checkpoint_dir: str | None = None,
-                 checkpoint_every: int = 5):
+                 checkpoint_every: int = 5, tune: str = "off",
+                 tune_budget=None):
         self.k = k
         self.algo = algo
         self.backend = backend
@@ -83,6 +84,8 @@ class SphericalKMeans:
         self.algo_mode = algo_mode
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        self.tune = tune
+        self.tune_budget = tune_budget
 
     # -- config plumbing ---------------------------------------------------
     @property
@@ -96,7 +99,8 @@ class SphericalKMeans:
             est_grid=self.est_grid, est_iters=self.est_iters,
             seed=self.seed, mesh=self.mesh, algo_mode=self.algo_mode,
             checkpoint_dir=self.checkpoint_dir,
-            checkpoint_every=self.checkpoint_every)
+            checkpoint_every=self.checkpoint_every, tune=self.tune,
+            tune_budget=self.tune_budget)
 
     @classmethod
     def from_config(cls, config: ClusterConfig) -> SphericalKMeans:
@@ -107,7 +111,8 @@ class SphericalKMeans:
                    mesh=config.mesh, chunk_size=config.chunk_size,
                    algo_mode=config.algo_mode,
                    checkpoint_dir=config.checkpoint_dir,
-                   checkpoint_every=config.checkpoint_every)
+                   checkpoint_every=config.checkpoint_every,
+                   tune=config.tune, tune_budget=config.tune_budget)
 
     # -- the estimator surface ---------------------------------------------
     def fit(self, docs, df=None) -> SphericalKMeans:
@@ -119,6 +124,7 @@ class SphericalKMeans:
         strategy = resolve_strategy(cfg, docs)
         result = strategy.fit(docs, cfg, df=df)
         self._fit_result = result
+        tuned = getattr(result, "tuned", None)
         self.model_ = FittedModel(
             index=result.state.index,
             labels=np.asarray(result.assign, np.int32),
@@ -130,6 +136,7 @@ class SphericalKMeans:
             backend=resolve_backend(cfg.backend).name,
             strategy=strategy.name,
             cursor=getattr(result, "cursor", None),
+            tuned=None if tuned is None else tuned.to_dict(),
         )
         self.labels_ = self.model_.labels
         self.history_ = self.model_.history

@@ -42,6 +42,11 @@ class FittedModel:
               resumed fit would continue; None for converged/resident
               fits.  A non-None cursor marks a usable-but-unconverged
               artifact (e.g. a max_iter-capped streaming fit).
+    tuned:    the autotuned kernel-engine config the fit ran with, as the
+              ``repro.tune.TunedConfig.to_dict()`` dict (None when tuning
+              was off / missed).  ``load`` reseeds the process-wide
+              ``TUNED_CACHE`` from it, so a later fit on the same corpus
+              regime reuses the winner without re-searching.
     """
 
     index: MeanIndex
@@ -56,6 +61,7 @@ class FittedModel:
     backend: str = "auto"
     strategy: str = "single_host"
     cursor: tuple | None = None
+    tuned: dict | None = None
 
     # -- derived -----------------------------------------------------------
     @property
@@ -119,6 +125,7 @@ class FittedModel:
             "n_iter": int(self.n_iter),
             "history": self.history,
             "cursor": None if self.cursor is None else list(self.cursor),
+            "tuned": self.tuned,
         }
         # keep=None: an artifact writer must never garbage-collect other
         # steps sharing the directory (e.g. a fit's training checkpoints).
@@ -142,6 +149,13 @@ class FittedModel:
             "v_th": np.asarray(0.0, np.float32),
         }
         tree, _ = restore_checkpoint(directory, example, step=step)
+        tuned = extra.get("tuned")
+        if tuned is not None and tuned.get("signature"):
+            # Reseed the process cache: a fit on the same corpus regime in
+            # this process reuses the artifact's winner without searching.
+            from repro.tune import TUNED_CACHE, TunedConfig
+
+            TUNED_CACHE.put(tuned["signature"], TunedConfig.from_dict(tuned))
         params = StructuralParams(t_th=jnp.asarray(tree["t_th"], jnp.int32),
                                   v_th=jnp.asarray(tree["v_th"], jnp.float32))
         index = build_mean_index(jnp.asarray(tree["means_t"]).T, params,
@@ -156,7 +170,8 @@ class FittedModel:
                    backend=extra["backend"],
                    strategy=extra["strategy"],
                    cursor=(None if extra.get("cursor") is None
-                           else tuple(extra["cursor"])))
+                           else tuple(extra["cursor"])),
+                   tuned=tuned)
 
 
 def load_model(directory: str, *, step: int | None = None) -> FittedModel:

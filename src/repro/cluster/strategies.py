@@ -56,7 +56,8 @@ class SingleHostStrategy:
             docs, k=config.k, algo=config.algo, backend=config.backend,
             params=config.params, batch_size=config.batch_size,
             max_iter=config.max_iter, est_grid=config.est_grid,
-            est_iters=config.est_iters, seed=config.seed, df=df)
+            est_iters=config.est_iters, seed=config.seed, df=df,
+            tune=config.tune, tune_budget=config.tune_budget)
 
 
 class StreamingStrategy:
@@ -78,7 +79,8 @@ class StreamingStrategy:
             est_grid=config.est_grid, est_iters=config.est_iters,
             seed=config.seed, df=df,
             checkpoint_dir=config.checkpoint_dir,
-            checkpoint_every=config.checkpoint_every)
+            checkpoint_every=config.checkpoint_every,
+            tune=config.tune, tune_budget=config.tune_budget)
 
 
 class MeshStrategy:
@@ -103,7 +105,8 @@ class MeshStrategy:
             obj_chunk=config.chunk_size, seed=config.seed,
             est_iters=config.est_iters, df=df,
             checkpoint_dir=config.checkpoint_dir,
-            checkpoint_every=config.checkpoint_every)
+            checkpoint_every=config.checkpoint_every,
+            tune=config.tune)
         n = docs.n_docs
         index = build_mean_index(state.means_t.T, params, moving=state.moving)
         core_state = KMeansState(

@@ -92,12 +92,23 @@ class Backend(Protocol):
     backend's answer) means "nothing to cache"; callers pass it straight
     through, and a plan built for a different row layout is ignored by the
     consumer — plans are an optimisation, never a correctness input.
+
+    Tuned configs — ``prepare`` additionally consults the process-wide
+    :data:`repro.tune.TUNED_CACHE` when ``tune != "off"``: ``"cached"``
+    reuses a previously found winner for this corpus regime (falling back
+    to defaults on a miss), ``"search"`` runs the roofline-pruned autotuner
+    on a miss under the opt-in ``tune_budget`` and caches the winner.  The
+    winning :class:`repro.tune.TunedConfig` rides the returned plan, so
+    every kernel of the fit launches with the tuned geometry.  ``k`` (the
+    cluster count the fit will use) keys the signature; without it there is
+    nothing to tune against and the knob is a no-op.
     """
 
     name: str
 
     def prepare(self, docs: SparseDocs, *, tile_rows: int | None = None,
-                with_counts: bool = True): ...
+                with_counts: bool = True, k: int | None = None,
+                tune: str = "off", tune_budget=None): ...
 
     def accumulate(self, docs: SparseDocs, index: MeanIndex, xstate: jax.Array,
                    *, mode: str, v_ta: jax.Array | None = None,
@@ -291,9 +302,11 @@ class ReferenceBackend:
 
     name = "reference"
 
-    def prepare(self, docs, *, tile_rows=None, with_counts=True):
+    def prepare(self, docs, *, tile_rows=None, with_counts=True, k=None,
+                tune="off", tune_budget=None):
         # The scan gathers posting rows directly from the sparse tuples —
-        # there is no densified intermediate to cache.
+        # there is no densified intermediate to cache, and no launch
+        # geometry to tune.
         return None
 
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
@@ -350,9 +363,15 @@ class PallasBackend:
 
     name = "pallas"
 
-    def prepare(self, docs, *, tile_rows=None, with_counts=True):
+    def prepare(self, docs, *, tile_rows=None, with_counts=True, k=None,
+                tune="off", tune_budget=None):
         from repro.kernels.plan import prepare_plan
 
+        tuned = None
+        if tune != "off":
+            from repro.tune import ensure_tuned
+
+            tuned = ensure_tuned(docs, k=k, mode=tune, budget=tune_budget)
         # The cache is built from row_mask()-masked vals — the operand
         # convention of the update phase.  The assignment phase feeds the
         # kernels raw docs.vals; the two coincide under the repo-wide
@@ -361,7 +380,8 @@ class PallasBackend:
         # precondition for one cached slab serving both phases.
         vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
         return prepare_plan(docs.ids, vals, dim=docs.dim,
-                            tile_rows=tile_rows, with_counts=with_counts)
+                            tile_rows=tile_rows, with_counts=with_counts,
+                            tuned=tuned)
 
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
                    unroll=False, p_block=1, plan=None):
@@ -393,16 +413,19 @@ class PallasBackend:
             if mode == "cs":
                 # These substitute synthetic weights for the raw vals, so the
                 # cached head slabs do not apply (occupancy is re-derived
-                # from the actual operands inside the wrapper).
+                # from the actual operands inside the wrapper); the tuned
+                # launch geometry still does.
+                tuned = plan.tuned if plan is not None else None
                 # Head-only partial: mask on the object side (ids < t_th) —
                 # identical sums to masking rows of the mean matrix.
                 head_vals = jnp.where(docs.ids < t_th, docs.vals, 0.0)
-                out["rho1"] = ops.sparse_sim(docs.ids, head_vals, means_t)
+                out["rho1"] = ops.sparse_sim(docs.ids, head_vals, means_t,
+                                             tuned=tuned)
                 # Σ over slots of means², including the reference scan's
                 # dead-slot quirk (padding ids are 0, counted iff t_th == 0).
                 tail_ones = (docs.ids >= t_th).astype(jnp.float32)
                 out["sq"] = ops.sparse_sim(docs.ids, tail_ones,
-                                           means_t * means_t)
+                                           means_t * means_t, tuned=tuned)
         elif mode == "esicp":
             # ONE launch for the whole gathering phase: bound operands, the
             # exact similarities, and (under diag) the exact-region visited-

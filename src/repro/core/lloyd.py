@@ -205,6 +205,10 @@ class LloydResult:
     # Streaming fits only: (next_epoch, next_chunk) where a resumed fit
     # would continue — None for converged / resident fits.
     cursor: tuple | None = None
+    # The autotuned kernel config the fit's plans were built with
+    # (repro.tune.TunedConfig), or None when tuning was off / missed.
+    # Rides into FittedModel so save/load round-trips the winner.
+    tuned: object | None = None
 
     @property
     def objective(self) -> float:
@@ -243,7 +247,8 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
               backend: str = "reference", params="auto",
               batch_size: int = 4096, max_iter: int = 60,
               est_grid: EstGrid | None = None, est_iters=(1, 2),
-              seed: int = 0, df: jax.Array | None = None) -> LloydResult:
+              seed: int = 0, df: jax.Array | None = None,
+              tune: str = "off", tune_budget=None) -> LloydResult:
     """Single-host Lloyd fit: the paper's pipeline as one function.
 
     algo: 'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
@@ -252,6 +257,10 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
             on TPU).
     params: 'auto' (EstParams at iterations 1–2, the paper's default),
             StructuralParams for fixed thresholds, or None -> trivial.
+    tune: 'off' | 'cached' | 'search' — kernel-engine autotuning
+            (``Backend.prepare``; no-op on the reference backend).
+            ``tune_budget`` is a :class:`repro.tune.SearchBudget` (or int
+            max-timed-candidates) for 'search' mode.
 
     This is the ``single_host`` execution strategy behind the
     :class:`repro.cluster.SphericalKMeans` estimator; call the estimator for
@@ -274,7 +283,9 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
     # documents never change across Lloyd iterations, so the pallas
     # backend densifies the head region and maps the live cells exactly
     # once per fit; the reference backend has nothing to cache (None).
-    plan = resolve_backend(backend).prepare(pdocs, tile_rows=bs)
+    plan = resolve_backend(backend).prepare(pdocs, tile_rows=bs, k=k,
+                                            tune=tune,
+                                            tune_budget=tune_budget)
     if n_pad != n:
         pad = n_pad - n
         # Dead rows carry ρ_self = 0 — exactly the value every update
@@ -361,6 +372,7 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
         params=state.index.params,
         converged=converged,
         n_iter=len(history),
+        tuned=None if plan is None else plan.tuned,
     )
 
 
@@ -398,12 +410,20 @@ class _ChunkPlanCache:
     """
 
     def __init__(self, backend, tile_rows: int,
-                 max_bytes: int = STREAM_PLAN_CACHE_BYTES):
+                 max_bytes: int = STREAM_PLAN_CACHE_BYTES,
+                 k: int | None = None, tune: str = "off", tune_budget=None):
         self._bk = backend
         self._tile_rows = tile_rows
         self._max_bytes = max_bytes
         self._host: dict[int, object] = {}
         self._bytes = 0
+        self._k = k
+        self._tune = tune
+        self._tune_budget = tune_budget
+        # Winning TunedConfig of the fit's chunks, surfaced on LloydResult.
+        # Uniform chunks share a corpus signature, so the first chunk's
+        # search is every later chunk's TUNED_CACHE hit.
+        self.tuned = None
 
     @staticmethod
     def _nbytes(plan) -> int:
@@ -413,7 +433,11 @@ class _ChunkPlanCache:
         if ci in self._host:
             cached = self._host[ci]
             return None if cached is None else jax.device_put(cached)
-        plan = self._bk.prepare(cdocs, tile_rows=self._tile_rows)
+        plan = self._bk.prepare(cdocs, tile_rows=self._tile_rows, k=self._k,
+                                tune=self._tune,
+                                tune_budget=self._tune_budget)
+        if plan is not None and self.tuned is None:
+            self.tuned = plan.tuned
         if plan is None:
             self._host[ci] = None
             return None
@@ -614,7 +638,8 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                   est_iters=(1, 2), seed: int = 0, df=None,
                   prefetch_depth: int = 2, checkpoint_dir: str | None = None,
                   checkpoint_every: int = 0,
-                  resume: bool = False) -> LloydResult:
+                  resume: bool = False, tune: str = "off",
+                  tune_budget=None) -> LloydResult:
     """Lloyd over an out-of-core :class:`repro.sparse.DocStore`.
 
     algo_mode='full': the exact chunk-scan Lloyd epoch — assignment pass
@@ -663,7 +688,8 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
     # Per-chunk kernel plans, built once per fit on the prefetch thread and
     # carried H2D beside the raw chunks (None throughout on the reference
     # backend — nothing to cache).
-    plan_cache = _ChunkPlanCache(bk_obj, bs)
+    plan_cache = _ChunkPlanCache(bk_obj, bs, k=k, tune=tune,
+                                 tune_budget=tune_budget)
 
     if resume:
         if not checkpoint_dir:
@@ -808,6 +834,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
         converged=converged,
         n_iter=len(history),
         cursor=None if converged else (r + 1, 0),
+        tuned=plan_cache.tuned,
     )
 
 

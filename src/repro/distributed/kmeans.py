@@ -57,11 +57,14 @@ def object_axes(mesh: Mesh) -> tuple[str, ...]:
 
 class PlanMeta(NamedTuple):
     """Static geometry of the prepared-plan operands a step function was
-    built for (kernels/plan.py): occ grouping + head-cache width."""
+    built for (kernels/plan.py): occ grouping + head-cache width, plus the
+    autotuned kernel config (repro.tune.TunedConfig) the geometry came
+    from — carried so the reconstructed per-chunk plans launch with it."""
     b_blk: int
     d_blk: int
     n_head: int
     dim: int
+    tuned: object | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,7 +125,8 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
         def _chunk_plan(o, h):
             return KernelPlan(occ=o, head=h, headc=None,
                               b_blk=plan_meta.b_blk, d_blk=plan_meta.d_blk,
-                              n_head=plan_meta.n_head, dim=plan_meta.dim)
+                              n_head=plan_meta.n_head, dim=plan_meta.dim,
+                              tuned=plan_meta.tuned)
     else:
         def _chunk_plan(o, h):
             return None
@@ -283,7 +287,8 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
 
 
 def build_plan_operands(ids, vals, valid, *, dim: int, obj_chunk: int,
-                        mesh: Mesh, head_bytes: int | None = None):
+                        mesh: Mesh, head_bytes: int | None = None,
+                        tuned=None):
     """Once-per-fit prepared-plan operands for the pallas mesh step.
 
     Returns ``(plan_meta, operands)``: the per-obj_chunk-tile occupancy map
@@ -291,19 +296,30 @@ def build_plan_operands(ids, vals, valid, *, dim: int, obj_chunk: int,
     with the same object-axis sharding as ids/vals.  Dead/padding rows are
     never occupied and densify to zero, so the global padded arrays are
     used as-is.
+
+    ``tuned`` (repro.tune.TunedConfig) supplies the block geometry and head
+    budget when set — the distributed analogue of ``prepare_plan(tuned=)``;
+    an explicit ``head_bytes`` still wins over the tuned budget.
     """
     from repro.kernels import plan as kplan
 
+    b_blk = kplan.DEFAULT_B_BLK if tuned is None else tuned.b_blk
+    d_blk = kplan.DEFAULT_D_BLK if tuned is None else tuned.d_blk
+    if head_bytes is None and tuned is not None:
+        head_bytes = tuned.head_bytes
     axes_obj = object_axes(mesh)
     sh = NamedSharding(mesh, P(axes_obj, None))
     mvals = jnp.where(valid[:, None], vals, 0.0)
-    occ = kplan.occupancy_map(ids, mvals, dim=dim, tile_rows=obj_chunk)
+    occ = kplan.occupancy_map(ids, mvals, dim=dim, b_blk=b_blk, d_blk=d_blk,
+                              tile_rows=obj_chunk)
     kw = {} if head_bytes is None else {"head_bytes": head_bytes}
-    n_head = kplan.pick_n_head(ids.shape[0], dim, with_counts=False, **kw)
-    head, _ = kplan.head_slabs(ids, mvals, dim=dim, n_head=n_head,
-                               with_counts=False)
-    meta = PlanMeta(b_blk=kplan.DEFAULT_B_BLK, d_blk=kplan.DEFAULT_D_BLK,
-                    n_head=0 if head is None else n_head, dim=dim)
+    n_head = kplan.pick_n_head(ids.shape[0], dim, d_blk=d_blk,
+                               with_counts=False, **kw)
+    head, _ = kplan.head_slabs(ids, mvals, dim=dim, d_blk=d_blk,
+                               n_head=n_head, with_counts=False)
+    meta = PlanMeta(b_blk=b_blk, d_blk=d_blk,
+                    n_head=0 if head is None else n_head, dim=dim,
+                    tuned=tuned)
     operands = (jax.device_put(occ, sh),)
     if head is not None:
         operands += (jax.device_put(head, sh),)
@@ -425,7 +441,7 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
              backend: str = "reference", max_iter: int = 40,
              obj_chunk: int = 1024, seed: int = 0,
              est_iters=(1, 2), df=None, checkpoint_dir: str | None = None,
-             checkpoint_every: int = 5, **step_kw):
+             checkpoint_every: int = 5, tune: str = "off", **step_kw):
     """Full distributed Lloyd loop with EstParams and optional checkpointing.
 
     ``docs`` may be a resident SparseDocs or an out-of-core
@@ -498,8 +514,25 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     # (documents are constant across Lloyd iterations).
     plan_meta, plan_ops = None, ()
     if resolve_backend(backend).name == "pallas":
+        # Tuned-config resolution is cache-only here: the sharded step is
+        # compiled once per fit, so the mesh path never runs the autotuner
+        # itself — a prior single-host/streaming fit (or an explicit
+        # ``search_tuned_config`` run) populates the process cache, and
+        # 'search' degrades to a cache lookup.  Signature is probed on the
+        # first chunk / the resident corpus, matching what those paths key.
+        tuned = None
+        if tune not in ("off", "cached", "search"):
+            raise ValueError(f"tune must be 'off', 'cached' or 'search', "
+                             f"got {tune!r}")
+        if tune != "off":
+            from repro.tune import TUNED_CACHE, corpus_signature
+
+            probe = store.chunk(0) if store is not None else docs
+            sig = corpus_signature(probe.ids, probe.vals, dim=docs.dim, k=k)
+            tuned = TUNED_CACHE.get(sig)
         plan_meta, plan_ops = build_plan_operands(
-            ids, vals, valid, dim=docs.dim, obj_chunk=obj_chunk, mesh=mesh)
+            ids, vals, valid, dim=docs.dim, obj_chunk=obj_chunk, mesh=mesh,
+            tuned=tuned)
     # iterations 1–2 run trivial params (t_th=0): everything is Region 3, so
     # the windowed verification can't bound ntH — run single-phase until
     # EstParams fixes t_th, then rebuild the step (paper Alg. 6 does the same

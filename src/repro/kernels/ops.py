@@ -23,6 +23,12 @@ Kernel engine v2 plumbing (ISSUE 5):
   ``esicp_gather`` returns the visited-pair counts as an extra accumulator
   of the same launch; ``with_sims=True`` on ``esicp_gather`` adds the full
   exact similarity, so one launch serves the whole ES assignment gather.
+* **Tuned configs** — every structural knob (block geometry, the
+  K-superblock cap) resolves through a :class:`repro.tune.config.
+  TunedConfig`: explicit kwargs win, then ``tuned=``, then the config the
+  prepared plan was built for (``plan.tuned``), then the hard-coded
+  defaults.  The autotuner (repro/tune/search.py) searches this knob space
+  per corpus regime; untouched callers get exactly the pre-tuner behaviour.
 """
 from __future__ import annotations
 
@@ -38,13 +44,32 @@ from repro.kernels import segment_update as _su
 from repro.kernels import rho_gather as _rg
 from repro.kernels import flash_attention as _fa
 
-# Widest K superblock the auto policy will pick: bounds the (d_blk, k_sup)
-# means block and the (b_blk, k_sup) accumulator blocks in VMEM.
+# Widest K superblock the default auto policy will pick: bounds the
+# (d_blk, k_sup) means block and the (b_blk, k_sup) accumulator blocks in
+# VMEM.  TunedConfig.k_sup_cap overrides it per call.
 K_SUP_CAP = 1024
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk):
+    """(TunedConfig, b_blk, k_blk, d_blk) for a call — explicit kwargs win,
+    then ``tuned``, then the plan's embedded config, then defaults."""
+    # Lazy: tune.config imports kernels/plan.py geometry constants, so the
+    # dependency must point tune -> kernels at module-import time.
+    from repro.tune.config import DEFAULT_TUNED
+
+    cfg = tuned
+    if cfg is None and plan is not None and plan.tuned is not None:
+        cfg = plan.tuned
+    if cfg is None:
+        cfg = DEFAULT_TUNED
+    return (cfg,
+            cfg.b_blk if b_blk is None else b_blk,
+            cfg.k_blk if k_blk is None else k_blk,
+            cfg.d_blk if d_blk is None else d_blk)
 
 
 def _pad_to(x, mult, axis, value=0):
@@ -64,17 +89,32 @@ def _align(ids, vals, means_t, b_blk, k_blk, d_blk):
     return ids, vals, means_t
 
 
-def _pick_k_sup(kp: int, k_blk: int, k_sup: int | None) -> int:
-    """Widest ``k_blk`` multiple ≤ the VMEM cap that divides padded K."""
+def _pick_k_sup(kp: int, k_blk: int, k_sup: int | None,
+                cap: int | None = None) -> int:
+    """Exact auto K-superblock width: the *largest* multiple of ``k_blk``
+    that is ≤ ``cap`` and divides padded K (the whole padded K when it fits
+    the cap).
+
+    The scan starts from ``(cap // k_blk) * k_blk`` — the true largest
+    multiple — so an awkward ``cap % k_blk`` residue can never shift the
+    candidate ladder off the valid widths and silently degrade the pick.
+    When no multiple of ``k_blk`` in (0, cap] divides ``kp`` (``k_blk``
+    wider than the cap, or a caller-supplied ``kp`` that is not ``k_blk``-
+    aligned) the fallback is ``gcd(kp, k_blk)``: the widest width that is
+    still guaranteed to divide ``kp``, i.e. never an invalid grid.
+    """
+    import math
+
+    cap = K_SUP_CAP if cap is None else cap
     if k_sup is not None:
         assert kp % k_sup == 0, f"k_sup={k_sup} must divide padded K={kp}"
         return k_sup
-    if kp <= K_SUP_CAP:
+    if kp <= cap:
         return kp
-    for ks in range(K_SUP_CAP - K_SUP_CAP % k_blk, 0, -k_blk):
+    for ks in range((cap // k_blk) * k_blk, 0, -k_blk):
         if kp % ks == 0:
             return ks
-    return k_blk
+    return math.gcd(kp, k_blk) or k_blk
 
 
 def _inline_occ(ids, vals, dp: int, d_blk: int, b_blk: int):
@@ -118,20 +158,21 @@ def _plan_operands(plan, pi, pv, b: int, d: int, dp: int, b_blk: int,
 
 
 @partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
-                                   "diag", "interpret"))
-def sparse_sim(ids, vals, means_t, *, plan=None, diag: bool = False,
-               b_blk=128, k_blk=128, d_blk=256, k_sup: int | None = None,
-               interpret: bool | None = None):
+                                   "tuned", "diag", "interpret"))
+def sparse_sim(ids, vals, means_t, *, plan=None, tuned=None,
+               diag: bool = False, b_blk=None, k_blk=None, d_blk=None,
+               k_sup: int | None = None, interpret: bool | None = None):
     """(B, K) exact similarities of padded sparse objects vs dense means.
 
     ``diag=True`` additionally returns the (B, K) visited-pair counts
     (live slots × nonzero mean entries) from the same launch.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b, k = ids.shape[0], means_t.shape[1]
     d = means_t.shape[0]
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup, cap=cfg.k_sup_cap)
     occ, head, headc, n_head = _plan_operands(
         plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=diag)
     out = _ss.sparse_sim_pallas(pi, pv, pm, occ, head, headc, b_blk=b_blk,
@@ -144,10 +185,11 @@ def sparse_sim(ids, vals, means_t, *, plan=None, diag: bool = False,
 
 
 @partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
-                                   "with_sims", "diag", "interpret"))
-def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None,
-                 with_sims: bool = False, diag: bool = False, b_blk=128,
-                 k_blk=128, d_blk=256, k_sup: int | None = None,
+                                   "tuned", "with_sims", "diag",
+                                   "interpret"))
+def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None, tuned=None,
+                 with_sims: bool = False, diag: bool = False, b_blk=None,
+                 k_blk=None, d_blk=None, k_sup: int | None = None,
                  interpret: bool | None = None):
     """Fused Region-1/2 exact similarity + Region-3 L1 mass.
 
@@ -156,10 +198,11 @@ def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None,
     — all accumulated off one densified slab per (B, D) block.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b, k = ids.shape[0], means_t.shape[1]
     d = means_t.shape[0]
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup, cap=cfg.k_sup_cap)
     occ, head, headc, n_head = _plan_operands(
         plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=diag)
     out = _eg.esicp_gather_pallas(pi, pv, pm, t_th, v_th, occ, head, headc,
@@ -185,12 +228,14 @@ def esicp_filter(rho12, y, rho_max, col_ok, v_th, *, b_blk=128, k_blk=256,
 
 
 @partial(jax.jit, static_argnames=("k", "d", "b_blk", "k_blk", "d_blk",
-                                   "k_sup", "interpret"))
+                                   "k_sup", "tuned", "interpret"))
 def segment_update(assign, ids, vals, *, k: int, d: int, plan=None,
-                   b_blk=128, k_blk=128, d_blk=256, k_sup: int | None = None,
+                   tuned=None, b_blk=None, k_blk=None, d_blk=None,
+                   k_sup: int | None = None,
                    interpret: bool | None = None):
     """(K, D) cluster sums λ. Padding objects get assign = k (out of range)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
+    cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     # Padded rows get assign = k: when k is block-aligned that index falls
     # past the last superblock's iota range, otherwise into a padding
     # column — either way it contributes nothing to the sliced result.
@@ -200,7 +245,7 @@ def segment_update(assign, ids, vals, *, k: int, d: int, plan=None,
     pv = _pad_to(_pad_to(vals, 8, 1), b_blk, 0)
     kp = k + ((-k) % k_blk)
     dp = d + ((-d) % d_blk)
-    ks = _pick_k_sup(kp, k_blk, k_sup)
+    ks = _pick_k_sup(kp, k_blk, k_sup, cap=cfg.k_sup_cap)
     occ, head, _, n_head = _plan_operands(
         plan, pi, pv, b, d, dp, b_blk, d_blk, need_counts=False)
     out = _su.segment_update_pallas(pa, pi, pv, kp, dp, occ, head,
@@ -210,21 +255,22 @@ def segment_update(assign, ids, vals, *, k: int, d: int, plan=None,
 
 
 @partial(jax.jit, static_argnames=("b_blk", "k_blk", "d_blk", "k_sup",
-                                   "interpret"))
-def rho_gather(assign, ids, vals, means_t, *, plan=None, b_blk=128,
-               k_blk=128, d_blk=256, k_sup: int | None = None,
+                                   "tuned", "interpret"))
+def rho_gather(assign, ids, vals, means_t, *, plan=None, tuned=None,
+               b_blk=None, k_blk=None, d_blk=None, k_sup: int | None = None,
                interpret: bool | None = None):
     """(B,) ρ_self refresh: each object's similarity vs its own centroid.
 
     Padding objects get assign = k (out of range) and read back ρ = 0.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b = ids.shape[0]
     k = means_t.shape[1]
     d = means_t.shape[0]
     pa = _pad_to(assign, b_blk, 0, value=k)
     pi, pv, pm = _align(ids, vals, means_t, b_blk, k_blk, d_blk)
-    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup)
+    ks = _pick_k_sup(pm.shape[1], k_blk, k_sup, cap=cfg.k_sup_cap)
     occ, head, _, n_head = _plan_operands(
         plan, pi, pv, b, d, pm.shape[0], b_blk, d_blk, need_counts=False)
     out = _rg.rho_gather_pallas(pa, pi, pv, pm, occ, head, b_blk=b_blk,

@@ -60,6 +60,11 @@ class KernelPlan:
             None → kernels densify every block.
     headc:  (B, n_head·d_blk) float32 — live-count twin of ``head`` for the
             fused Mult accumulator; None when diagnostics are off.
+    tuned:  optional :class:`repro.tune.config.TunedConfig` the plan was
+            built for — the autotuner's winning knob vector, serialized
+            alongside the occupancy maps so ``Backend.prepare`` reuses it
+            across fits.  Rides the static aux data (it is hashable and
+            changes the launch geometry, i.e. the trace).
     """
 
     occ: jax.Array | None
@@ -69,17 +74,18 @@ class KernelPlan:
     d_blk: int = DEFAULT_D_BLK
     n_head: int = 0
     dim: int = 0
+    tuned: object | None = None
 
     def tree_flatten(self):
         return ((self.occ, self.head, self.headc),
-                (self.b_blk, self.d_blk, self.n_head, self.dim))
+                (self.b_blk, self.d_blk, self.n_head, self.dim, self.tuned))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         occ, head, headc = leaves
-        b_blk, d_blk, n_head, dim = aux
+        b_blk, d_blk, n_head, dim, tuned = aux
         return cls(occ=occ, head=head, headc=headc, b_blk=b_blk,
-                   d_blk=d_blk, n_head=n_head, dim=dim)
+                   d_blk=d_blk, n_head=n_head, dim=dim, tuned=tuned)
 
     def without_occ(self) -> "KernelPlan":
         """Drop the occupancy map (kept: head cache).  Used when the call's
@@ -182,14 +188,27 @@ def head_slabs(ids, vals, *, dim: int, d_blk: int = DEFAULT_D_BLK,
     return head, (jnp.concatenate(parts_c, axis=1) if with_counts else None)
 
 
-def prepare_plan(ids, vals, *, dim: int, b_blk: int = DEFAULT_B_BLK,
-                 d_blk: int = DEFAULT_D_BLK,
+def prepare_plan(ids, vals, *, dim: int, b_blk: int | None = None,
+                 d_blk: int | None = None,
                  tile_rows: int | None = None,
-                 head_bytes: int = DEFAULT_HEAD_BYTES,
-                 with_counts: bool = True) -> KernelPlan:
+                 head_bytes: int | None = None,
+                 with_counts: bool = True,
+                 tuned=None) -> KernelPlan:
     """Build the full plan for a corpus (chunk): tiled occupancy + cached
     head slabs.  Rows are padded to the tile multiple so the plan arrays
-    reshape per tile exactly like the data arrays they ride beside."""
+    reshape per tile exactly like the data arrays they ride beside.
+
+    ``tuned`` (a :class:`repro.tune.config.TunedConfig`) supplies the block
+    geometry and head budget when the explicit kwargs are omitted, and is
+    carried on the returned plan so every kernel consuming it launches with
+    the same tuned parameters the plan was laid out for."""
+    if b_blk is None:
+        b_blk = tuned.b_blk if tuned is not None else DEFAULT_B_BLK
+    if d_blk is None:
+        d_blk = tuned.d_blk if tuned is not None else DEFAULT_D_BLK
+    if head_bytes is None:
+        head_bytes = (tuned.head_bytes if tuned is not None
+                      else DEFAULT_HEAD_BYTES)
     ids = jnp.asarray(ids)
     vals = jnp.asarray(vals)
     if tile_rows:
@@ -203,4 +222,4 @@ def prepare_plan(ids, vals, *, dim: int, b_blk: int = DEFAULT_B_BLK,
                              with_counts=with_counts)
     return KernelPlan(occ=occ, head=head, headc=headc, b_blk=b_blk,
                       d_blk=d_blk, n_head=0 if head is None else n_head,
-                      dim=dim)
+                      dim=dim, tuned=tuned)

@@ -1,0 +1,37 @@
+"""repro.tune — compiled-mode kernel autotuning (DESIGN.md §5).
+
+Public surface:
+
+* :class:`TunedConfig` / ``DEFAULT_TUNED`` — the kernel-engine knob vector
+  (tune/config.py);
+* ``TUNED_CACHE`` / :func:`corpus_signature` — the per-process winning-
+  config cache keyed by shape/skew signature (tune/cache.py);
+* :func:`search_tuned_config` / :func:`ensure_tuned` / ``SearchBudget`` —
+  the roofline-pruned search (tune/search.py);
+* the cost model lives in tune/cost.py.
+
+``search`` pulls in the kernel wrappers (which themselves import
+tune.config), so it is re-exported lazily to keep the package import-cycle
+free and cheap to load.
+"""
+from __future__ import annotations
+
+from repro.tune.cache import TUNED_CACHE, corpus_signature
+from repro.tune.config import DEFAULT_TUNED, TunedConfig
+
+__all__ = [
+    "TunedConfig", "DEFAULT_TUNED", "TUNED_CACHE", "corpus_signature",
+    "SearchBudget", "SearchStats", "search_tuned_config", "ensure_tuned",
+    "candidate_space",
+]
+
+_LAZY = {"SearchBudget", "SearchStats", "search_tuned_config",
+         "ensure_tuned", "candidate_space"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.tune import search
+
+        return getattr(search, name)
+    raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")

@@ -1,0 +1,96 @@
+"""TunedConfig cache: winning configs keyed by a shape/skew signature.
+
+A tuned config is a property of the *regime* a corpus puts the kernels in —
+batch geometry, tuple width, vocabulary size, K, and how skewed the
+occupancy is — not of the individual corpus.  The cache key therefore
+buckets exactly those quantities: two corpora with the same signature reuse
+one search, across fits and (through the ``FittedModel`` extra sidecar)
+across processes.
+
+The cache is deliberately a plain in-process dict: ``Backend.prepare``
+consults it on every fit with ``tune != 'off'``, a search populates it on
+miss, and ``FittedModel.load`` re-seeds it from a saved artifact — no
+daemon, no file locking, no global config file.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tune.config import TunedConfig
+
+
+def _pow2_bucket(n: int) -> int:
+    """Round up to the next power of two — batch/row counts land in stable
+    buckets regardless of padding residue."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def occupancy_fraction(ids, vals, *, dim: int, b_blk: int = 128,
+                       d_blk: int = 256) -> float:
+    """Fraction of (b_blk row-group, d_blk D-block) cells holding at least
+    one live tuple — the skew statistic the kernels' occupancy pruning
+    exploits, computed host-side in one pass."""
+    ids = np.asarray(ids)
+    vals = np.asarray(vals)
+    b, p = ids.shape
+    nb = -(-b // b_blk)
+    nd = -(-dim // d_blk)
+    occ = np.zeros((nb, nd), np.bool_)
+    grp = np.repeat(np.arange(nb), b_blk)[:b]
+    blk = np.minimum(ids // d_blk, nd - 1)
+    live = vals != 0.0
+    occ[np.broadcast_to(grp[:, None], blk.shape)[live], blk[live]] = True
+    return float(occ.mean()) if occ.size else 0.0
+
+
+def corpus_signature(ids, vals, *, dim: int, k: int,
+                     platform: str | None = None) -> str:
+    """Cache key: platform / bucketed-B / P / D / K / bucketed occupancy.
+
+    Occupancy is measured at the *default* geometry and bucketed to 0.05 so
+    minor corpus perturbations (reshuffles, small appends) still hit."""
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    b, p = np.asarray(ids).shape
+    occ = occupancy_fraction(ids, vals, dim=dim)
+    occ_bucket = round(round(occ / 0.05) * 0.05, 2)
+    return (f"{platform}/b{_pow2_bucket(b)}/p{_pow2_bucket(p)}/"
+            f"d{dim}/k{k}/occ{occ_bucket:.2f}")
+
+
+class TunedConfigCache:
+    """signature -> TunedConfig, with dict round-trip for persistence."""
+
+    def __init__(self):
+        self._store: dict[str, TunedConfig] = {}
+
+    def get(self, signature: str) -> TunedConfig | None:
+        return self._store.get(signature)
+
+    def put(self, signature: str, cfg: TunedConfig) -> TunedConfig:
+        cfg = cfg.replace(signature=signature)
+        self._store[signature] = cfg
+        return cfg
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, signature: str) -> bool:
+        return signature in self._store
+
+    def to_dict(self) -> dict:
+        return {sig: cfg.to_dict() for sig, cfg in self._store.items()}
+
+    def from_dict(self, d: dict) -> None:
+        for sig, cfg in d.items():
+            self._store[sig] = TunedConfig.from_dict(cfg)
+
+
+#: The process-wide cache every ``Backend.prepare`` consults.
+TUNED_CACHE = TunedConfigCache()

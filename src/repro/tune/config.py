@@ -1,0 +1,98 @@
+"""The kernel-engine knob vector the autotuner searches over.
+
+The paper determines its two structural parameters by *minimizing the
+approximate number of multiplications* (§EstParams); the TPU engine has the
+same shape of problem one level down: the kernel wrappers in
+:mod:`repro.kernels.ops` expose a handful of structural knobs — block
+geometry, the K-superblock VMEM cap, the head-slab byte budget — that were
+hard-coded until ISSUE 6.  A :class:`TunedConfig` is one point in that knob
+space, hashable (it rides jit static args and the :class:`~repro.kernels.
+plan.KernelPlan` aux data) and JSON-serializable (it round-trips through
+``FittedModel.save/load`` and the per-process cache).
+
+``DEFAULT_TUNED`` reproduces the pre-tuner hard-coded behaviour exactly —
+every wrapper called without a config resolves to it, so tuning is strictly
+opt-in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.plan import DEFAULT_B_BLK, DEFAULT_D_BLK, DEFAULT_HEAD_BYTES
+
+# Pre-tuner hard-coded values (kernels/ops.py v2 engine).
+DEFAULT_K_BLK = 128
+DEFAULT_K_SUP_CAP = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One candidate (or winning) kernel-engine configuration.
+
+    b_blk/d_blk: (B-tile, D-block) geometry shared by all four kernels AND
+        the prepared :class:`~repro.kernels.plan.KernelPlan` (occupancy map,
+        head slabs) — the plan's layout contract is why these are one knob,
+        not four.
+    k_blk:      K padding multiple (and superblock granularity).
+    k_sup_cap:  VMEM budget on the K-superblock width; ``ops._pick_k_sup``
+        picks the widest ``k_blk`` multiple under it that divides padded K.
+    head_bytes: per-chunk byte budget for the cached high-df head slabs
+        (0 disables the head cache entirely).
+    source:     provenance — 'default' | 'search' | 'cache' | 'manual'.
+    signature:  the corpus/shape signature the config was tuned for
+        (tune/cache.py); '' for untuned configs.
+    """
+
+    b_blk: int = DEFAULT_B_BLK
+    d_blk: int = DEFAULT_D_BLK
+    k_blk: int = DEFAULT_K_BLK
+    k_sup_cap: int = DEFAULT_K_SUP_CAP
+    head_bytes: int = DEFAULT_HEAD_BYTES
+    source: str = "default"
+    signature: str = ""
+
+    def __post_init__(self):
+        if self.b_blk < 8 or self.b_blk % 8:
+            raise ValueError(f"b_blk must be a positive multiple of 8, "
+                             f"got {self.b_blk}")
+        if self.d_blk < 128 or self.d_blk % 128:
+            raise ValueError(f"d_blk must be a positive multiple of 128, "
+                             f"got {self.d_blk}")
+        if self.k_blk < 8 or self.k_blk % 8:
+            raise ValueError(f"k_blk must be a positive multiple of 8, "
+                             f"got {self.k_blk}")
+        if self.k_sup_cap < self.k_blk:
+            raise ValueError(f"k_sup_cap ({self.k_sup_cap}) must be >= "
+                             f"k_blk ({self.k_blk})")
+        if self.head_bytes < 0:
+            raise ValueError("head_bytes must be >= 0")
+
+    def replace(self, **changes) -> "TunedConfig":
+        return dataclasses.replace(self, **changes)
+
+    # -- serialization (FittedModel extra sidecar, cache files) -------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    def geometry_key(self, *, b: int, p: int, d: int, k: int) -> tuple:
+        """The *effective* launch parameters this config produces at a
+        shape — two configs with the same key launch identical grids, so
+        the search deduplicates on it before costing/timing."""
+        from repro.kernels.ops import _pick_k_sup
+        from repro.kernels.plan import pick_n_head
+
+        bp = b + (-b) % self.b_blk
+        kp = k + (-k) % self.k_blk
+        dp = d + (-d) % self.d_blk
+        ks = _pick_k_sup(kp, self.k_blk, None, cap=self.k_sup_cap)
+        n_head = pick_n_head(bp, d, d_blk=self.d_blk,
+                             head_bytes=self.head_bytes)
+        return (self.b_blk, self.d_blk, kp, ks, dp, n_head)
+
+
+DEFAULT_TUNED = TunedConfig()

@@ -39,7 +39,8 @@ EXPECTED_SIGNATURES = {
         "est_iters=(1, 2), seed: 'int' = 0, mesh=None, "
         "chunk_size: 'int' = 1024, algo_mode: 'str' = 'full', "
         "checkpoint_dir: 'str | None' = None, "
-        "checkpoint_every: 'int' = 5)",
+        "checkpoint_every: 'int' = 5, tune: 'str' = 'off', "
+        "tune_budget=None)",
     "SphericalKMeans.fit": "(self, docs, df=None) -> 'SphericalKMeans'",
     "SphericalKMeans.predict": "(self, docs) -> 'np.ndarray'",
     "SphericalKMeans.transform": "(self, docs) -> 'np.ndarray'",
@@ -81,12 +82,12 @@ EXPECTED_SIGNATURES = {
 EXPECTED_CONFIG_FIELDS = [
     "k", "algo", "backend", "params", "batch_size", "chunk_size", "max_iter",
     "est_grid", "est_iters", "seed", "mesh", "algo_mode", "checkpoint_dir",
-    "checkpoint_every",
+    "checkpoint_every", "tune", "tune_budget",
 ]
 
 EXPECTED_MODEL_FIELDS = [
     "index", "labels", "rho_self", "history", "converged", "n_iter", "algo",
-    "backend", "strategy", "cursor",
+    "backend", "strategy", "cursor", "tuned",
 ]
 
 

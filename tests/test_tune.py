@@ -1,0 +1,261 @@
+"""repro.tune — the cost-model-pruned kernel autotuner (ISSUE 6).
+
+Covers the TunedConfig knob vector, the exact ``_pick_k_sup`` selection,
+analytic pruning (>= 50% of candidates never timed), search determinism
+under a fixed seed/budget, the TUNED_CACHE / FittedModel round-trip, and
+the parity contract: tuned configs change launch geometry, never results —
+bit-identical assignments tuned vs default across all six algorithms on
+both backends.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import K_SUP_CAP, _pick_k_sup
+from repro.sparse import SparseDocs
+from repro.tune import TUNED_CACHE, DEFAULT_TUNED, TunedConfig, corpus_signature
+from repro.tune.cost import KernelShape
+from repro.tune.search import (SearchBudget, candidate_space,
+                               search_tuned_config)
+
+
+def _zipf_docs(n=256, p=16, d=256, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(1.3, size=(n, p)), d)
+    ids = np.sort((d - ranks).astype(np.int32), axis=1)
+    vals = rng.random((n, p)).astype(np.float32)
+    return SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                      nnz=jnp.full((n,), p, jnp.int32), dim=d)
+
+
+@pytest.fixture(autouse=True)
+def _clean_cache():
+    TUNED_CACHE.clear()
+    yield
+    TUNED_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# _pick_k_sup exactness (ISSUE 6 satellite: largest k_blk multiple <= cap).
+# ---------------------------------------------------------------------------
+
+def _exact_k_sup(kp, k_blk, cap):
+    """Brute-force oracle: largest multiple of k_blk <= cap dividing kp,
+    else gcd(kp, k_blk)."""
+    best = [m for m in range(k_blk, cap + 1, k_blk) if kp % m == 0]
+    return max(best) if best else (math.gcd(kp, k_blk) or k_blk)
+
+
+@pytest.mark.parametrize("kp,k_blk,cap", [
+    (1152, 128, 1024),   # 1152 = 9*128: 1024 doesn't divide, 384 does
+    (2560, 128, 1024),   # largest divisor multiple is 640, not 512
+    (3200, 64, 1024),    # 640 again, from a 64 ladder
+    (2304, 768, 1024),   # k_blk itself > half the cap
+    (4096, 2048, 1024),  # no multiple fits the cap -> gcd fallback
+    (1024, 128, 1024),   # fits entirely
+    (1920, 128, 96),     # cap below k_blk -> gcd fallback
+    (1280, 256, 1000),   # awkward cap residue (1000 % 256 != 0)
+    (896, 128, 512),     # 896 = 7*128: 512/384/256 don't divide, 448 does
+])
+def test_pick_k_sup_exact(kp, k_blk, cap):
+    got = _pick_k_sup(kp, k_blk, None, cap=cap)
+    want = _exact_k_sup(kp, k_blk, cap)
+    assert got == want
+    assert kp % got == 0
+
+
+def test_pick_k_sup_explicit_and_default_cap():
+    assert _pick_k_sup(1024, 128, 256) == 256          # explicit wins
+    with pytest.raises(AssertionError):
+        _pick_k_sup(1024, 128, 300)                    # must divide
+    assert _pick_k_sup(512, 128, None) == 512          # <= K_SUP_CAP: whole K
+    assert K_SUP_CAP == DEFAULT_TUNED.k_sup_cap
+
+
+# ---------------------------------------------------------------------------
+# TunedConfig + cache basics.
+# ---------------------------------------------------------------------------
+
+def test_tuned_config_validates_and_roundtrips():
+    with pytest.raises(ValueError):
+        TunedConfig(b_blk=12)
+    with pytest.raises(ValueError):
+        TunedConfig(d_blk=64)
+    with pytest.raises(ValueError):
+        TunedConfig(k_blk=128, k_sup_cap=64)
+    cfg = TunedConfig(b_blk=64, d_blk=512, head_bytes=0, source="search")
+    assert TunedConfig.from_dict(cfg.to_dict()) == cfg
+    assert hash(cfg) == hash(cfg.replace())             # jit-static viable
+
+
+def test_corpus_signature_buckets_regime():
+    docs = _zipf_docs()
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8)
+    assert f"/d{docs.dim}/k8/" in sig
+    # Same regime, slightly different row count in the same pow2 bucket.
+    again = corpus_signature(docs.ids[:250], docs.vals[:250], dim=docs.dim,
+                             k=8)
+    assert sig == again
+    cfg = TUNED_CACHE.put(sig, TunedConfig(b_blk=64, source="search"))
+    assert cfg.signature == sig
+    assert TUNED_CACHE.get(sig) == cfg
+
+
+# ---------------------------------------------------------------------------
+# The search: pruning fraction, determinism, budget accounting.
+# ---------------------------------------------------------------------------
+
+def test_search_prunes_majority_analytically():
+    docs = _zipf_docs()
+    timed = []
+
+    def counting_measure(cfg):
+        timed.append(cfg)
+        return 1.0   # every survivor "measures" equal -> bound breaks ties
+
+    budget = SearchBudget(max_timed=4, repeat=1, probe_rows=256)
+    winner, stats = search_tuned_config(
+        docs.ids, docs.vals, dim=docs.dim, k=16, budget=budget,
+        measure=counting_measure)
+    space = candidate_space(KernelShape(b=256, p=16, d=docs.dim, k=16))
+    assert stats.n_candidates == len(space) > 8
+    # The acceptance bar: at least half the space is discarded on the cost
+    # model alone — only the budgeted head ever reaches wall-clock timing.
+    assert stats.pruned_fraction >= 0.5
+    assert stats.n_timed == len(timed) <= budget.max_timed
+    assert stats.n_pruned == stats.n_candidates - stats.n_timed
+    # The incumbent default is always among the timed candidates.
+    assert any(c.source == "default" for c in timed)
+    assert isinstance(winner, TunedConfig)
+
+
+def test_search_deterministic_under_fixed_seed_and_budget():
+    docs = _zipf_docs(seed=3)
+
+    def analytic_measure(cfg):
+        # Pure function of the candidate -> any wall-clock noise removed;
+        # determinism of enumeration/pruning/tie-breaking is what's tested.
+        return 1.0 / (cfg.b_blk * cfg.d_blk) + cfg.head_bytes * 1e-12
+
+    budget = SearchBudget(max_timed=5, repeat=1, probe_rows=256)
+    out = [search_tuned_config(docs.ids, docs.vals, dim=docs.dim, k=16,
+                               budget=budget, seed=7,
+                               measure=analytic_measure)
+           for _ in range(2)]
+    (w1, s1), (w2, s2) = out
+    assert w1 == w2
+    assert s1.to_dict() == s2.to_dict()
+    assert [c for c, _ in s1.timed] == [c for c, _ in s2.timed]
+
+
+def test_search_winner_beats_or_matches_default():
+    docs = _zipf_docs()
+
+    def analytic_measure(cfg):
+        return 1.0 / (cfg.b_blk * cfg.d_blk)
+
+    winner, stats = search_tuned_config(
+        docs.ids, docs.vals, dim=docs.dim, k=16,
+        budget=SearchBudget(max_timed=4, repeat=1, probe_rows=256),
+        measure=analytic_measure)
+    assert stats.best_measured_s <= stats.default_measured_s
+    if winner != DEFAULT_TUNED.replace(source="default"):
+        assert winner.source == "search"
+
+
+# ---------------------------------------------------------------------------
+# ensure_tuned / Backend.prepare / estimator threading.
+# ---------------------------------------------------------------------------
+
+def test_ensure_tuned_modes():
+    from repro.tune.search import ensure_tuned
+
+    docs = _zipf_docs()
+    with pytest.raises(ValueError):
+        ensure_tuned(docs, k=8, mode="always")
+    assert ensure_tuned(docs, k=None, mode="search") is None
+    assert ensure_tuned(docs, k=8, mode="cached") is None      # cold miss
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8)
+    seeded = TUNED_CACHE.put(sig, TunedConfig(b_blk=64, source="search"))
+    assert ensure_tuned(docs, k=8, mode="cached") == seeded
+    assert ensure_tuned(docs, k=8, mode="search") == seeded    # hit, no search
+
+
+def test_prepare_carries_tuned_into_plan():
+    from repro.core.backends import BACKENDS
+
+    docs = _zipf_docs()
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8)
+    seeded = TUNED_CACHE.put(
+        sig, TunedConfig(b_blk=64, d_blk=128, source="search"))
+    plan = BACKENDS["pallas"].prepare(docs, k=8, tune="cached")
+    assert plan.tuned == seeded
+    assert plan.b_blk == 64 and plan.d_blk == 128
+    # Reference backend: tuning is a no-op, never an error.
+    assert BACKENDS["reference"].prepare(docs, k=8, tune="cached") is None
+    # Off: plan built on defaults, no tuned payload.
+    plain = BACKENDS["pallas"].prepare(docs)
+    assert plain.tuned is None
+
+
+def test_cluster_config_validates_tune():
+    from repro.cluster import ClusterConfig
+
+    ClusterConfig(k=4, tune="search").validate()
+    with pytest.raises(ValueError):
+        ClusterConfig(k=4, tune="aggressive").validate()
+
+
+# ---------------------------------------------------------------------------
+# Parity: tuned configs change launch geometry, never assignments.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["mivi", "icp", "es", "esicp", "ta-icp",
+                                  "cs-icp"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_fit_parity_tuned_vs_default(algo, backend):
+    from repro.core.lloyd import lloyd_fit
+
+    docs = _zipf_docs(n=192, p=16, d=256, seed=1)
+    k = 8
+    base = lloyd_fit(docs, k=k, algo=algo, backend=backend, batch_size=192,
+                     max_iter=3)
+    # A decidedly non-default geometry, seeded as this corpus's winner.
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=k)
+    TUNED_CACHE.put(sig, TunedConfig(b_blk=64, d_blk=128, k_sup_cap=128,
+                                     head_bytes=1 << 20, source="search"))
+    tuned = lloyd_fit(docs, k=k, algo=algo, backend=backend, batch_size=192,
+                      max_iter=3, tune="cached")
+    np.testing.assert_array_equal(base.assign, tuned.assign)
+    if backend == "pallas":
+        assert tuned.tuned is not None and tuned.tuned.b_blk == 64
+    else:
+        assert tuned.tuned is None
+
+
+def test_fitted_model_roundtrips_tuned_config(tmp_path):
+    from repro.cluster import SphericalKMeans
+    from repro.cluster.model import FittedModel
+
+    docs = _zipf_docs(n=192, p=16, d=256, seed=2)
+    est = SphericalKMeans(
+        8, algo="esicp", backend="pallas", max_iter=3, batch_size=192,
+        tune="search",
+        tune_budget=SearchBudget(max_timed=2, repeat=1, probe_rows=128))
+    est.fit(docs)
+    model = est.model_
+    assert model.tuned is not None and model.tuned["signature"]
+    model.save(str(tmp_path))
+
+    TUNED_CACHE.clear()
+    loaded = FittedModel.load(str(tmp_path))
+    assert loaded.tuned == model.tuned
+    # load reseeds the process cache: the next cached-mode fit reuses the
+    # artifact's winner without searching.
+    sig = model.tuned["signature"]
+    assert TUNED_CACHE.get(sig) == TunedConfig.from_dict(model.tuned)
+    again = SphericalKMeans(8, algo="esicp", backend="pallas", max_iter=3,
+                            batch_size=192, tune="cached").fit(docs)
+    np.testing.assert_array_equal(loaded.labels, again.labels_)
