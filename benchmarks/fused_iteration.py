@@ -45,7 +45,7 @@ def run():
     prev = jnp.roll(assign, 1)
     state_sub = dataclasses.replace(
         state, assign=assign, rho_self=state.rho_self[:_N_SUB],
-        rho_self_prev=state.rho_self_prev[:_N_SUB])
+        rho_self_prev=state.rho_self_prev[:_N_SUB], ub=state.ub[:_N_SUB])
 
     for backend in ("reference", "pallas"):
         def one_update(b=backend):

@@ -1,0 +1,100 @@
+"""Compounded-pruning suite (ISSUE 7; DESIGN.md §11): per-iteration Mult +
+wall-time for every algo mode, machine-readable as ``BENCH_pruning.json``.
+
+One fit per mode on a shared well-separated corpus (the regime where bound
+maintenance legitimately pays from iteration 2: topics sharp enough that
+ρ_self rises quickly, documents long enough that a skipped row scan is worth
+real work).  Every mode is exact — bit-identical assignments to ``mivi`` per
+backend (asserted here, not assumed) — so the rows compare *pruning
+economics only*:
+
+  ``pruning/<mode>/iter<r>``  — per-iteration rows: ``mult`` (the paper's
+      multiply-add count a CPU implementation of that mode would execute),
+      ``cpr``, ``us_per_call`` = the fit's mean per-iteration wall time
+      (the fused while_loop runs all iterations in one device call, so
+      per-iteration wall time is only observable as the mean — the field
+      says so via ``wall: "fit_mean"``).
+  ``pruning/<mode>/fit``      — one per mode: total steady-state fit wall
+      time, iterations, total Mult, and a wall-clock ``speedup`` vs the
+      matched ``mivi`` fit (same backend, same execution mode — the only
+      comparison ``benchmarks.ratchet`` accepts).
+
+The ratchet invariants (enforced by ``benchmarks/ratchet.py`` on this
+file's JSON): ``bounds``/``sketch`` rows report Mult <= the matched
+``mivi`` row at every iteration, and the compounded ``bounds-esicp`` row is
+*strictly* below every single-technique row on iterations >= 2.
+
+``REPRO_BENCH_SMOKE=1`` keeps the corpus (the invariants are corpus
+statements, not scale statements) and trims the iteration budget.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import (bench_row, default_backend, make_estimator,
+                               speedup_fields)
+from repro.data import make_corpus
+from repro.data.synthetic import CorpusSpec
+
+# Single-technique modes the compounded mode must strictly beat on
+# iterations >= 2, plus the exhaustive baseline they are all measured
+# against.  Order fixes the row order in the JSON artifact.
+MODES = ("mivi", "icp", "es", "esicp", "bounds", "sketch", "bounds-esicp")
+COMBINED = "bounds-esicp"
+
+# Well-separated long-document regime (DESIGN.md §11): nt ~ 300 makes a
+# skipped row scan worth ~K·nt multiply-adds, sharp topics make ρ_self
+# beat the drift-loosened group bounds from iteration 2 on.
+SPEC = CorpusSpec(n_docs=6000, vocab=8192, nt_mean=300.0, n_topics=96,
+                  topic_sharpness=2000.0, seed=3)
+K = 64
+MAX_ITER = 8
+SEED = 0
+
+
+def _fit(docs, df, mode, backend, max_iter):
+    est = make_estimator(K, algo=mode, backend=backend, max_iter=max_iter,
+                         batch_size=2048, seed=SEED)
+    t0 = time.perf_counter()
+    est.fit(docs, df=df)
+    return est, time.perf_counter() - t0
+
+
+def run():
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    max_iter = 4 if smoke else MAX_ITER
+    backend = default_backend()
+    docs, df, _, _ = make_corpus(SPEC)
+
+    fits = {}
+    rows = []
+    for mode in MODES:
+        # Warm fit compiles (per-mode traces); the second fit is the timed,
+        # steady-state one — the time_call_warm discipline at fit scope.
+        _fit(docs, df, mode, backend, max_iter)
+        fits[mode] = _fit(docs, df, mode, backend, max_iter)
+
+    ref, ref_wall = fits["mivi"]
+    ref_iter_s = ref_wall / max(len(ref.history_), 1)
+    for mode in MODES:
+        est, wall = fits[mode]
+        assert np.array_equal(est.labels_, ref.labels_), (
+            f"exactness violated: {mode} diverged from mivi")
+        n_iter = len(est.history_)
+        per_iter_s = wall / max(n_iter, 1)
+        for h in est.history_:
+            rows.append(bench_row(
+                f"pruning/{mode}/iter{h['iteration']}", per_iter_s * 1e6,
+                backend, algo=mode, iteration=h["iteration"],
+                mult=float(h["mult"]), cpr=float(h["cpr"]),
+                wall="fit_mean"))
+        rows.append(bench_row(
+            f"pruning/{mode}/fit", per_iter_s * 1e6,
+            backend, algo=mode, n_iter=n_iter, total_s=round(wall, 4),
+            mult_total=float(sum(h["mult"] for h in est.history_)),
+            vs="pruning/mivi/fit",
+            **speedup_fields(ref_iter_s, per_iter_s, comparable=True)))
+    return rows

@@ -1,7 +1,11 @@
-"""Kernel perf ratchet over ``BENCH_kernels.json`` (the CI bench-kernels
-job's gate).
+"""Perf ratchet over the machine-readable bench artifacts (the CI bench
+jobs' gate): ``BENCH_kernels.json`` (kernel checks below) and
+``BENCH_pruning.json`` (the compounded-pruning invariants of
+:mod:`benchmarks.pruning_suite` — see :func:`check_pruning`).  ``main``
+dispatches on the rows' names, so both files run through the same entry
+point: ``python -m benchmarks.ratchet <file.json>``.
 
-Two checks:
+Kernel checks:
 
 1. **Compiled-mode ratchet** — on platforms where the Pallas kernels
    compile (rows with ``comparable: true``), every kernel's best
@@ -89,10 +93,94 @@ def check(rows: list[dict]) -> int:
     return 1 if failures else 0
 
 
+SINGLE_TECHNIQUES = ("mivi", "icp", "es", "esicp", "bounds", "sketch")
+COMBINED = "bounds-esicp"
+
+
+def check_pruning(rows: list[dict]) -> int:
+    """Compounded-pruning invariants over ``BENCH_pruning.json``.
+
+    1. **Bounded/sketch Mult ratchet** — at every iteration, the ``bounds``
+       and ``sketch`` rows must report Mult <= the matched ``mivi`` row:
+       a pruning mode whose honest cost accounting exceeds the exhaustive
+       scan it replaces is a regression, whatever the wall clock says.
+    2. **Compounding ratchet** — on iterations >= 2 the combined
+       ``bounds-esicp`` row must be *strictly* below every single
+       technique's row: the whole point of stacking the three filter
+       families is that none of them alone reaches the compound's Mult.
+       (Iteration 1 is exempt by construction: no ρ history exists, so
+       every bound degenerates and the ES-family modes pay the one-time
+       region-accumulation premium.)
+    3. **Honesty invariants** — a ``speedup`` is only admissible against
+       the row named by ``vs`` when both ran the same execution mode and
+       backend (``comparable`` must say false otherwise): an interpret-mode
+       fit against a compiled one measures the interpreter, and a
+       cross-backend ratio measures the engine swap, not the pruning.
+    """
+    failures = []
+    by_name = {r["name"]: r for r in rows}
+    iters: dict[int, dict[str, float]] = {}
+    for r in rows:
+        if "iteration" in r and "mult" in r:
+            iters.setdefault(int(r["iteration"]), {})[r["algo"]] = r["mult"]
+    if not iters:
+        print("::error::no pruning iteration rows found")
+        return 1
+
+    for it in sorted(iters):
+        v = iters[it]
+        if "mivi" not in v:
+            failures.append(f"iteration {it}: no mivi baseline row")
+            continue
+        for m in ("bounds", "sketch"):
+            if m in v and v[m] > v["mivi"]:
+                failures.append(
+                    f"iteration {it}: {m} Mult {v[m]:.0f} > mivi "
+                    f"{v['mivi']:.0f} — the bounded mode lost to the "
+                    f"exhaustive scan")
+        if it >= 2 and COMBINED in v:
+            for m in SINGLE_TECHNIQUES:
+                if m in v and not v[COMBINED] < v[m]:
+                    failures.append(
+                        f"iteration {it}: {COMBINED} Mult {v[COMBINED]:.0f} "
+                        f">= {m} {v[m]:.0f} — compounding failed to beat "
+                        f"the single technique")
+    for it in sorted(iters):
+        v = iters[it]
+        if COMBINED in v and it >= 2:
+            best_single = min(v[m] for m in SINGLE_TECHNIQUES if m in v)
+            print(f"pruning iter {it}: combined {v[COMBINED]:.3e} vs best "
+                  f"single {best_single:.3e} "
+                  f"({v[COMBINED] / best_single:.3f}x)")
+
+    for r in rows:
+        if r.get("speedup") is None and not r.get("comparable"):
+            continue
+        ref = by_name.get(r.get("vs", ""))
+        if ref is None:
+            failures.append(f"{r['name']}: speedup with no resolvable "
+                            f"vs={r.get('vs')!r} row")
+        elif (r.get("mode"), r.get("backend")) != (ref.get("mode"),
+                                                  ref.get("backend")):
+            failures.append(
+                f"{r['name']}: marked comparable across execution modes "
+                f"({r.get('backend')}/{r.get('mode')} vs {ref['name']}'s "
+                f"{ref.get('backend')}/{ref.get('mode')})")
+
+    for msg in failures:
+        print(f"::error title=pruning ratchet::{msg}")
+    if not failures:
+        print(f"pruning ratchet: {len(iters)} iterations checked, "
+              f"all invariants hold")
+    return 1 if failures else 0
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
     with open(path) as f:
         rows = json.load(f)
+    if any(str(r.get("name", "")).startswith("pruning/") for r in rows):
+        return check_pruning(rows)
     return check(rows)
 
 

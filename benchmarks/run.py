@@ -34,10 +34,12 @@ SUITES = [
     ("roofline", "benchmarks.roofline_report"),
     ("fused", "benchmarks.fused_iteration"),
     ("kernels", "benchmarks.kernel_suite"),
+    ("pruning", "benchmarks.pruning_suite"),
 ]
 
 JSON_SUITES = {"fused": "BENCH_fused_iteration.json",
-               "kernels": "BENCH_kernels.json"}
+               "kernels": "BENCH_kernels.json",
+               "pruning": "BENCH_pruning.json"}
 
 
 def _as_csv(row) -> str:

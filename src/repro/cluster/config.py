@@ -21,7 +21,9 @@ class ClusterConfig:
     """Everything a spherical k-means fit needs, declared up front.
 
     k:          number of clusters.
-    algo:       'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'.
+    algo:       'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
+                | 'bounds' | 'sketch' | 'bounds-esicp' (the compounded
+                pruning modes — core/assignment.py).
     algo_mode:  'full' (exact Lloyd, the paper's setting) | 'minibatch'
                 (Sculley-style streaming updates over DocStore chunks —
                 always runs on the 'streaming' strategy).
@@ -115,7 +117,8 @@ class ClusterConfig:
             # The shard-local step implements the shared-bound algorithms
             # only (distributed/kmeans.py); fail here, not deep inside
             # shard_map tracing.
-            mesh_algos = ("esicp", "mivi", "icp")
+            mesh_algos = ("esicp", "mivi", "icp",
+                          "bounds", "sketch", "bounds-esicp")
             if self.algo not in mesh_algos:
                 raise ValueError(
                     f"algo {self.algo!r} is not available on the mesh "

@@ -115,6 +115,7 @@ class MeshStrategy:
             rho_self=state.rho_self[:n],
             rho_self_prev=state.rho_prev[:n],
             iteration=state.iteration,
+            ub=state.ub[:n],
         )
         return LloydResult(
             state=core_state,
@@ -141,6 +142,10 @@ def resolve_strategy(config: ClusterConfig, docs=None) -> Strategy:
     input promotes 'single_host' to 'streaming', since the fused resident
     fit cannot hold the corpus on device.
     """
+    if isinstance(config, ClusterConfig):
+        # Every front door fails fast on an unrunnable config (duck-typed
+        # registry extensions validate — or not — on their own terms).
+        config.validate()
     name = config.strategy
     if name == "single_host" and isinstance(docs, DocStore):
         name = "streaming"

@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.sparse import SparseDocs
-from repro.core.meanindex import MeanIndex
+from repro.core.meanindex import MeanIndex, doc_sketch
 
 
 def col_ok_mask(index: MeanIndex, xstate: jax.Array) -> jax.Array:
@@ -70,8 +70,20 @@ class Backend(Protocol):
       mode 'ta'     -> {sims, rho12, y, mult}   (per-object v_ta threshold)
       mode 'cs'     -> {sims, rho1, sq, mult}
 
+    ``with_counts=True`` (diag required) additionally returns ``counts`` —
+    the RAW per-(object, centroid) visited-pair counts of the mode's exact
+    region, *without* the ICP ``col_ok`` mask (``mult`` keeps applying it).
+    The bounds/sketch algo modes re-weight these per-row for their honest
+    Mult accounting.
+
     ``es_filter`` evaluates the ES upper bound (Eq. 4) and returns the
     survivor mask and per-object candidate counts |Z_i|.
+
+    ``sketch_sim`` produces the (B, K) block-vector sketch similarity used
+    by the sketch gate: each entry upper-bounds the exact cosine similarity
+    (per-group Cauchy-Schwarz on non-negative data).  The doc sketches come
+    from the shared :func:`repro.core.meanindex.doc_sketch`, so both
+    backends gate on bitwise-identical sketches.
 
     Update phase (Alg. 6) — both methods take raw padded tuple arrays so the
     single-device driver and the shard-local distributed step share them;
@@ -113,10 +125,14 @@ class Backend(Protocol):
     def accumulate(self, docs: SparseDocs, index: MeanIndex, xstate: jax.Array,
                    *, mode: str, v_ta: jax.Array | None = None,
                    diag: bool = True, unroll: bool | int = False,
-                   p_block: int = 1, plan=None) -> dict: ...
+                   p_block: int = 1, plan=None,
+                   with_counts: bool = False) -> dict: ...
 
     def es_filter(self, rho12: jax.Array, y: jax.Array, rho_self: jax.Array,
                   col_ok: jax.Array, v_th: jax.Array): ...
+
+    def sketch_sim(self, docs: SparseDocs, index: MeanIndex, *,
+                   plan=None) -> jax.Array: ...
 
     def accumulate_means(self, ids: jax.Array, vals: jax.Array,
                          assign: jax.Array, *, k: int, dim: int,
@@ -144,7 +160,8 @@ def _pad_p(ids, vals, pb: int):
 
 def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
                    v_ta: jax.Array | None = None, diag: bool = True,
-                   unroll: bool | int = False, p_block: int = 1):
+                   unroll: bool | int = False, p_block: int = 1,
+                   with_counts: bool = False):
     """One fused TAAT pass — the paper's MIVI loop order (Alg. 1 lines 1–5).
 
     On TPU each scan step is one (B,)-gather of a posting row ξ_s block plus
@@ -172,6 +189,7 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
     col_ok = col_ok_mask(index, xstate)      # (B, K) — ICP lane mask
     f32 = jnp.float32
     pb = max(int(p_block), 1)
+    assert not with_counts or diag, "with_counts requires diag=True"
 
     def body(carry, xs):
         idp, vp = xs                          # (pb, B), (pb, B)
@@ -182,9 +200,14 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
         if diag:
             live = vp != 0.0
             nz = (rows > 0) & col_ok[None] & live[..., None]
+            # Raw visited pairs (no ICP mask) — the per-(B, K) twin the
+            # Pallas diag accumulator produces; ``mult`` keeps col_ok.
+            nzr = (rows > 0) & live[..., None]
         if mode == "exact":
             if diag:
                 out["mult"] = carry["mult"] + jnp.sum(nz, dtype=f32)
+                if with_counts:
+                    out["counts"] = carry["counts"] + jnp.sum(nzr, 0, dtype=f32)
         elif mode == "esicp":
             tail = (idp >= t_th)[..., None]   # (pb, B, 1)
             hi = rows >= v_th
@@ -195,6 +218,9 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
                 jnp.where(tail & ~hi, vp[..., None], 0.0), 0)
             if diag:
                 out["mult"] = carry["mult"] + jnp.sum(nz & exact_mask, dtype=f32)
+                if with_counts:
+                    out["counts"] = carry["counts"] + jnp.sum(
+                        nzr & exact_mask, 0, dtype=f32)
         elif mode == "ta":
             tail = (idp >= t_th)[..., None]
             hi = rows >= v_ta[None, :, None]  # per-object threshold (Eq. 16)
@@ -220,6 +246,9 @@ def reference_scan(docs: SparseDocs, index: MeanIndex, xstate, *, mode: str,
         return out, None
 
     carry = {"sims": jnp.zeros((b, k), f32), "mult": jnp.zeros((), f32)}
+    if with_counts:
+        assert mode in ("exact", "esicp"), mode
+        carry["counts"] = jnp.zeros((b, k), f32)
     if mode == "esicp" or mode == "ta":
         carry["rho12"] = jnp.zeros((b, k), f32)
         carry["y"] = jnp.zeros((b, k), f32)
@@ -310,9 +339,10 @@ class ReferenceBackend:
         return None
 
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
-                   unroll=False, p_block=1, plan=None):
+                   unroll=False, p_block=1, plan=None, with_counts=False):
         return reference_scan(docs, index, xstate, mode=mode, v_ta=v_ta,
-                              diag=diag, unroll=unroll, p_block=p_block)
+                              diag=diag, unroll=unroll, p_block=p_block,
+                              with_counts=with_counts)
 
     def es_filter(self, rho12, y, rho_self, col_ok, v_th):
         # Upper bound (Eq. 4): rho12 + y·v_th.  The paper's App.-A scaling
@@ -320,6 +350,10 @@ class ReferenceBackend:
         ub = rho12 + y * v_th
         survivors = (ub > rho_self[:, None]) & col_ok
         return survivors, jnp.sum(survivors, axis=1).astype(jnp.int32)
+
+    def sketch_sim(self, docs, index, *, plan=None):
+        sk = doc_sketch(docs.ids, docs.vals, index.dim)
+        return jnp.dot(sk, index.sketch_t, preferred_element_type=jnp.float32)
 
     def accumulate_means(self, ids, vals, assign, *, k, dim, init=None,
                          plan=None):
@@ -384,11 +418,12 @@ class PallasBackend:
                             tuned=tuned)
 
     def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
-                   unroll=False, p_block=1, plan=None):
+                   unroll=False, p_block=1, plan=None, with_counts=False):
         # unroll / p_block are reference-scan tiling knobs; the kernels tile
         # via their own block specs, so both are accepted and ignored here.
         from repro.kernels import ops
 
+        assert not with_counts or diag, "with_counts requires diag=True"
         if mode == "ta":
             # Per-object v_ta threshold: not expressible as a shared-threshold
             # mask over the (D_blk, K_sup) means block, so no kernel exists.
@@ -408,6 +443,10 @@ class PallasBackend:
             if diag:
                 out["sims"], counts = res
                 out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+                if with_counts:
+                    # The fused diag accumulator is already the raw
+                    # per-(B, K) count — same launch, no extra kernel.
+                    out["counts"] = counts
             else:
                 out["sims"] = res
             if mode == "cs":
@@ -435,6 +474,8 @@ class PallasBackend:
             if diag:
                 out["rho12"], out["y"], out["sims"], counts = res
                 out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+                if with_counts:
+                    out["counts"] = counts
             else:
                 out["rho12"], out["y"], out["sims"] = res
         else:
@@ -446,6 +487,12 @@ class PallasBackend:
 
         mask, count = ops.esicp_filter(rho12, y, rho_self, col_ok, v_th)
         return mask.astype(bool), count
+
+    def sketch_sim(self, docs, index, *, plan=None):
+        from repro.kernels import ops
+
+        sk = doc_sketch(docs.ids, docs.vals, index.dim)
+        return ops.sketch_sim(sk, index.sketch_t, plan=plan)
 
     def accumulate_means(self, ids, vals, assign, *, k, dim, init=None,
                          plan=None):

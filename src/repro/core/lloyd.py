@@ -37,8 +37,9 @@ from repro.core.backends import resolve_backend
 from repro.core.meanindex import (StructuralParams, build_mean_index,
                                   normalized_means)
 from repro.core.assignment import assign_batch
-from repro.core.update import (KMeansState, init_state, init_state_from_store,
-                               moving_flags, update_step)
+from repro.core.update import (KMeansState, drift_loosen, group_drift,
+                               init_state, init_state_from_store,
+                               n_ub_groups, moving_flags, update_step)
 from repro.core.estparams import estimate_params, EstGrid
 
 # Single host-sync points — module-level so tests can wrap them and count
@@ -76,45 +77,50 @@ def _update_plan(plan, bs: int):
 
 @partial(jax.jit, static_argnames=("algo", "backend", "bs"))
 def _fused_epoch(algo: str, backend: str, docs: SparseDocs, index,
-                 assign, rho_self, xstate, valid, bs: int, plan=None):
+                 assign, rho_self, xstate, valid, bs: int, plan=None,
+                 ub=None):
     """One full assignment epoch over a resident slab, on device.
 
     A chunk-scan: ``lax.scan`` over ``bs``-row tiles whose *carry* is the
     scalar diagnostic accumulators (Mult, |Z| sum, #changed) and whose
-    stacked output is the per-tile assignment — no per-batch host syncs,
-    and no (nb,)-shaped diagnostic intermediates to reduce afterwards.
-    The same scan body serves every tile (uniform shapes), which is what
-    lets the streaming fit reuse this function per DocStore chunk.
-    (Per-object ρ is not returned: the update step refreshes ρ_self against
-    the *new* means anyway.)
+    stacked output is the per-tile assignment + refreshed per-object bound —
+    no per-batch host syncs, and no (nb,)-shaped diagnostic intermediates to
+    reduce afterwards.  The same scan body serves every tile (uniform
+    shapes), which is what lets the streaming fit reuse this function per
+    DocStore chunk.  (Per-object ρ is not returned: the update step
+    refreshes ρ_self against the *new* means anyway.)
 
     ``plan`` is the backend's prepared epoch-invariant cache built with
     ``tile_rows=bs`` (``Backend.prepare``); its occupancy/head-slab arrays
-    ride the scan as per-tile xs beside the data tiles.
+    ride the scan as per-tile xs beside the data tiles.  ``ub`` is the
+    maintained per-object bound (bounds modes; None → +inf 'unknown').
     """
     n = docs.ids.shape[0]
     nb = n // bs
+    if ub is None:
+        ub = jnp.full((n, n_ub_groups(index.k)), jnp.inf, jnp.float32)
     resh = lambda a: a.reshape((nb, bs) + a.shape[1:])
 
     def tile_fn(carry, xs):
-        (bids, bvals, bnnz, bassign, brho, bxs, bvalid), xs_plan = xs
+        (bids, bvals, bnnz, bassign, brho, bxs, bvalid, bub), xs_plan = xs
         bdocs = SparseDocs(ids=bids, vals=bvals, nnz=bnnz, dim=docs.dim)
         res = assign_batch(algo, backend, bdocs, index, bassign, brho, bxs,
-                           _tile_plan(plan, xs_plan))
+                           _tile_plan(plan, xs_plan), bub)
         mult, cand, changed = carry
         carry = (mult + res.mult,
                  cand + jnp.sum(jnp.where(bvalid, res.n_candidates, 0)),
                  changed + jnp.sum(res.changed & bvalid))
-        return carry, res.assign
+        return carry, (res.assign, res.ub)
 
     carry0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
               jnp.zeros((), jnp.int32))
-    (mult, cand, changed), a = lax.scan(
+    (mult, cand, changed), (a, u) = lax.scan(
         tile_fn, carry0,
         ((resh(docs.ids), resh(docs.vals), resh(docs.nnz),
-          resh(assign), resh(rho_self), resh(xstate), resh(valid)),
+          resh(assign), resh(rho_self), resh(xstate), resh(valid),
+          resh(ub)),
          _plan_tiles(plan, nb, bs)))
-    return a.reshape(n), mult, cand, changed
+    return a.reshape(n), u.reshape((n,) + u.shape[2:]), mult, cand, changed
 
 
 def _device_iteration(algo, backend, docs, state, valid, *, bs, k,
@@ -126,12 +132,12 @@ def _device_iteration(algo, backend, docs, state, valid, *, bs, k,
     the identical computation graph.
     """
     prev_assign = state.assign
-    assign, mult, cand_sum, n_changed = _fused_epoch(
+    assign, ub, mult, cand_sum, n_changed = _fused_epoch(
         algo, backend, docs, state.index, state.assign, state.rho_self,
-        state.xstate, valid, bs, plan)
+        state.xstate, valid, bs, plan, state.ub)
     state = update_step(docs, assign, prev_assign, state,
                         state.index.params, k=k, backend=backend,
-                        plan=_update_plan(plan, bs))
+                        plan=_update_plan(plan, bs), ub=ub)
     objective = jnp.sum(jnp.where(valid, state.rho_self, 0.0))
     return state, (mult, cand_sum, n_changed, objective)
 
@@ -297,6 +303,11 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
             assign=jnp.pad(state.assign, (0, pad)),
             rho_self=jnp.pad(state.rho_self, (0, pad)),
             rho_self_prev=jnp.pad(state.rho_self_prev, (0, pad)),
+            # Dead rows pad ub = 0 (the ρ_self convention's twin): their
+            # bound may drift upward across updates, which is harmless —
+            # dead rows have no live tuples, so they contribute zero Mult
+            # and are valid-masked out of |Z| / #changed.
+            ub=jnp.pad(state.ub, ((0, pad), (0, 0))),
         )
 
     history = []
@@ -364,6 +375,7 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
             assign=state.assign[:n],
             rho_self=state.rho_self[:n],
             rho_self_prev=state.rho_self_prev[:n],
+            ub=state.ub[:n],
         )
     return LloydResult(
         state=state,
@@ -389,7 +401,9 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
 # and the floor once the host must feed chunks).
 # ---------------------------------------------------------------------------
 
-STREAM_CKPT_FORMAT = "repro.cluster/stream-ckpt-v1"
+# v2 added the per-object bound state (ub / ub_work) for the bounds algo
+# modes; v1 checkpoints are rejected loudly by the format check below.
+STREAM_CKPT_FORMAT = "repro.cluster/stream-ckpt-v2"
 
 # Host-memory ceiling for cached per-chunk kernel plans (occupancy + head
 # slabs).  Chunks over budget are re-prepared each epoch instead of cached —
@@ -465,7 +479,8 @@ def _pad_chunk(cdocs: SparseDocs, extras: tuple, bs: int):
     if pad == 0:
         return cdocs, extras
     return (pad_rows(cdocs, bs),
-            tuple(jnp.pad(e, (0, pad)) for e in extras))
+            tuple(jnp.pad(e, ((0, pad),) + ((0, 0),) * (e.ndim - 1))
+                  for e in extras))
 
 
 # One jitted slice-writer shared by every per-document array update: `start`
@@ -476,8 +491,8 @@ _set_slice = jax.jit(
 
 @partial(jax.jit, static_argnames=("algo", "backend", "bs", "k"))
 def _stream_chunk_step(algo: str, backend: str, cdocs: SparseDocs, index,
-                       a_c, rho_c, xs_c, valid_c, lam, mult, cand, changed,
-                       *, bs: int, k: int, plan=None):
+                       a_c, rho_c, xs_c, valid_c, ub_c, lam, mult, cand,
+                       changed, *, bs: int, k: int, plan=None):
     """Full-batch streaming: one chunk's share of the epoch.
 
     Runs the identical chunk-scan `_fused_epoch` on the (C, P) tile and
@@ -488,15 +503,16 @@ def _stream_chunk_step(algo: str, backend: str, cdocs: SparseDocs, index,
     chunk's prepared kernel cache, carried H2D beside the chunk by the
     prefetcher (built once per chunk per fit)."""
     n_c = cdocs.ids.shape[0]
-    cdocs, (a_c, rho_c, xs_c, valid_c) = _pad_chunk(
-        cdocs, (a_c, rho_c, xs_c, valid_c), bs)
-    a_new, m, c, ch = _fused_epoch(algo, backend, cdocs, index, a_c, rho_c,
-                                   xs_c, valid_c, bs, plan)
+    cdocs, (a_c, rho_c, xs_c, valid_c, ub_c) = _pad_chunk(
+        cdocs, (a_c, rho_c, xs_c, valid_c, ub_c), bs)
+    a_new, ub_new, m, c, ch = _fused_epoch(algo, backend, cdocs, index, a_c,
+                                           rho_c, xs_c, valid_c, bs, plan,
+                                           ub_c)
     mvals = jnp.where(cdocs.row_mask(), cdocs.vals, 0.0)
     bk = resolve_backend(backend)
     lam = bk.accumulate_means(cdocs.ids, mvals, a_new, k=k, dim=cdocs.dim,
                               init=lam, plan=_update_plan(plan, bs))
-    return a_new[:n_c], lam, mult + m, cand + c, changed + ch
+    return a_new[:n_c], ub_new[:n_c], lam, mult + m, cand + c, changed + ch
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -574,17 +590,19 @@ def _stream_minibatch_chunk(backend: str, cdocs: SparseDocs, index, a_old,
 
 
 def _stream_ckpt_save(directory, *, step, state, lam, mult, cand, changed,
-                      assign_work, m_mean, counts, cursor, history,
+                      assign_work, ub_work, m_mean, counts, cursor, history,
                       algo_mode):
     from repro.checkpoint.store import save_checkpoint
 
     tree = {
         "assign": state.assign, "rho_self": state.rho_self,
         "rho_prev": state.rho_self_prev, "iteration": state.iteration,
+        "ub": state.ub,
         "means_t": state.index.means_t, "moving": state.index.moving,
         "t_th": state.index.params.t_th, "v_th": state.index.params.v_th,
         "lam": lam, "mult": mult, "cand": cand, "changed": changed,
-        "assign_work": assign_work, "m_mean": m_mean, "counts": counts,
+        "assign_work": assign_work, "ub_work": ub_work,
+        "m_mean": m_mean, "counts": counts,
     }
     save_checkpoint(directory, tree, step=step,
                     extra={"format": STREAM_CKPT_FORMAT,
@@ -605,6 +623,7 @@ def _stream_ckpt_restore(directory, *, n_rows, k, dim):
         "rho_self": np.zeros((n_rows,), np.float32),
         "rho_prev": np.zeros((n_rows,), np.float32),
         "iteration": np.asarray(0, np.int32),
+        "ub": np.zeros((n_rows, n_ub_groups(k)), np.float32),
         "means_t": np.zeros((dim, k), np.float32),
         "moving": np.zeros((k,), bool),
         "t_th": np.asarray(0, np.int32),
@@ -614,6 +633,7 @@ def _stream_ckpt_restore(directory, *, n_rows, k, dim):
         "cand": np.asarray(0, np.int32),
         "changed": np.asarray(0, np.int32),
         "assign_work": np.zeros((n_rows,), np.int32),
+        "ub_work": np.zeros((n_rows, n_ub_groups(k)), np.float32),
         "m_mean": np.zeros((k, dim), np.float32),
         "counts": np.zeros((k,), np.float32),
     }
@@ -626,7 +646,8 @@ def _stream_ckpt_restore(directory, *, n_rows, k, dim):
     state = KMeansState(index=index, assign=tree["assign"],
                         rho_self=tree["rho_self"],
                         rho_self_prev=tree["rho_prev"],
-                        iteration=tree["iteration"])
+                        iteration=tree["iteration"],
+                        ub=tree["ub"])
     return (state, tree, tuple(extra["cursor"]), list(extra["history"]),
             extra.get("algo_mode", "full"))
 
@@ -708,6 +729,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                                     tree["changed"])
         assign_work, m_mean, counts = (tree["assign_work"], tree["m_mean"],
                                        tree["counts"])
+        ub_work = tree["ub_work"]
     else:
         init_params = initial_params(None if minibatch else params,
                                      store.dim)
@@ -718,6 +740,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                                     jnp.zeros((), jnp.int32),
                                     jnp.zeros((), jnp.int32))
         assign_work = state.assign
+        ub_work = state.ub
         history = []
         start_epoch, start_chunk = 1, 0
 
@@ -731,8 +754,9 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
         _stream_ckpt_save(
             checkpoint_dir, step=(r - 1) * (n_chunks + 1) + next_chunk,
             state=state, lam=lam, mult=mult, cand=cand, changed=changed,
-            assign_work=assign_work, m_mean=m_mean, counts=counts,
-            cursor=(r, next_chunk), history=history, algo_mode=algo_mode)
+            assign_work=assign_work, ub_work=ub_work, m_mean=m_mean,
+            counts=counts, cursor=(r, next_chunk), history=history,
+            algo_mode=algo_mode)
 
     converged = False
     r = start_epoch - 1
@@ -749,6 +773,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                                         jnp.zeros((), jnp.int32),
                                         jnp.zeros((), jnp.int32))
             assign_work = state.assign
+            ub_work = state.ub
 
         xs_full = state.xstate
         # ---- pass A: assignment (+ λ / center updates), chunk-streamed ----
@@ -768,10 +793,12 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                 # means_t must be the post-chunk centers
                 state = dataclasses.replace(state, index=mb_index)
             else:
-                a_new, lam, mult, cand, changed = _stream_chunk_step(
+                a_new, ub_new, lam, mult, cand, changed = _stream_chunk_step(
                     algo, backend, cdocs, state.index, state.assign[sl],
                     state.rho_self[sl], xs_full[sl], valid[sl],
-                    lam, mult, cand, changed, bs=bs, k=k, plan=cplan)
+                    state.ub[sl], lam, mult, cand, changed, bs=bs, k=k,
+                    plan=cplan)
+                ub_work = _set_slice(ub_work, ub_new, s)
             assign_work = _set_slice(assign_work, a_new, s)
             maybe_ckpt(r, ci + 1)
 
@@ -790,10 +817,22 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
                                                assign_work[sl],
                                                index.means_t, cplan))
         rho_new = jnp.concatenate(rho_parts)
+        if minibatch:
+            # Minibatch never consults the bound (exact argmax assignment);
+            # carry it untouched.
+            ub_full = state.ub
+        else:
+            # Same semantics as the resident update_step: the refreshed
+            # bound holds against the OLD means, so loosen each bound group
+            # by its own centroids' worst angular drift this epoch.
+            ub_full = drift_loosen(
+                ub_work, group_drift(index.means_t,
+                                     state.index.means_t))
         state = KMeansState(index=index, assign=assign_work,
                             rho_self=rho_new,
                             rho_self_prev=state.rho_self,
-                            iteration=state.iteration + 1)
+                            iteration=state.iteration + 1,
+                            ub=ub_full)
 
         if not minibatch and params == "auto" and r in est_iters:
             # Full-corpus estimate, chunk-streamed (φ̃3 is an object-chunked
@@ -825,6 +864,7 @@ def streaming_fit(store, *, k: int, algo: str = "esicp",
         assign=state.assign[:n],
         rho_self=state.rho_self[:n],
         rho_self_prev=state.rho_self_prev[:n],
+        ub=state.ub[:n],
     )
     return LloydResult(
         state=state,

@@ -21,6 +21,55 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+# Block-vector sketch width (Knittel, Koch & Ertl, arxiv_2108.00895): the
+# vocabulary is split into S contiguous groups of g dimensions and each
+# vector is summarised by the per-group L2 norms.  For non-negative data
+# every group satisfies Cauchy-Schwarz, so the S-dim dense dot of two
+# sketches upper-bounds the exact D-dim dot — a sound pre-filter for the
+# sparse_sim pass.  S is capped at SKETCH_DIM so the sketch similarity is
+# a tiny dense matmul regardless of vocabulary size.
+SKETCH_DIM = 64
+
+
+def sketch_group_width(dim: int) -> int:
+    """Group width g so that ceil(dim / g) <= SKETCH_DIM."""
+    return -(-dim // SKETCH_DIM)
+
+
+def sketch_size(dim: int) -> int:
+    """Number of sketch slots S = ceil(dim / g) (<= SKETCH_DIM)."""
+    g = sketch_group_width(dim)
+    return -(-dim // g)
+
+
+def sketch_means(means_t: jax.Array) -> jax.Array:
+    """(D, K) transposed means -> (S, K) block-vector sketch.
+
+    Slot s holds the L2 norm of rows [s*g, (s+1)*g) of means_t per centroid.
+    """
+    d = means_t.shape[0]
+    g = sketch_group_width(d)
+    s = sketch_size(d)
+    seg = jnp.arange(d, dtype=jnp.int32) // g
+    sq = jax.ops.segment_sum(means_t * means_t, seg, num_segments=s)
+    return jnp.sqrt(sq)
+
+
+def doc_sketch(ids: jax.Array, vals: jax.Array, dim: int) -> jax.Array:
+    """(B, P) padded sparse docs -> (B, S) block-vector sketch.
+
+    Dead slots carry val 0 and contribute nothing regardless of their id,
+    so the padding convention needs no special-casing.  Shared verbatim by
+    both backends so the sketches are bitwise identical across them.
+    """
+    g = sketch_group_width(dim)
+    s = sketch_size(dim)
+    seg = jnp.clip(ids.astype(jnp.int32) // g, 0, s - 1)
+    sq = jax.vmap(
+        lambda sg, v: jax.ops.segment_sum(v * v, sg, num_segments=s)
+    )(seg, vals)
+    return jnp.sqrt(sq)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +104,7 @@ class MeanIndex:
     n_moving:() int32       — number of moving centroids (nMv).
     params:  StructuralParams.
     mf_h:    (D,) int32     — (mfH)_s: entries with v >= v_th (Region-2 width).
+    sketch_t:(S, K) float32 — block-vector sketch of the means (sketch modes).
     """
 
     means_t: jax.Array
@@ -63,9 +113,11 @@ class MeanIndex:
     n_moving: jax.Array
     params: StructuralParams
     mf_h: jax.Array
+    sketch_t: jax.Array
 
     def tree_flatten(self):
-        return (self.means_t, self.mf, self.moving, self.n_moving, self.params, self.mf_h), None
+        return (self.means_t, self.mf, self.moving, self.n_moving,
+                self.params, self.mf_h, self.sketch_t), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -114,6 +166,7 @@ def build_mean_index(means: jax.Array, params: StructuralParams,
         n_moving=jnp.sum(moving).astype(jnp.int32),
         params=params,
         mf_h=mf_h,
+        sketch_t=sketch_means(means_t),
     )
 
 

@@ -35,9 +35,19 @@ class KMeansState:
     rho_self: jax.Array     # (N,) float32 — ρ_{a(i)} vs the current means
     rho_self_prev: jax.Array  # (N,) float32 — previous refresh (Eq. 5 input)
     iteration: jax.Array    # () int32
+    ub: jax.Array           # (N, G) float32 — drift-loosened upper bounds on
+    #                         the best non-assigned similarity per centroid
+    #                         BOUND GROUP (bounds modes; +inf = no bound
+    #                         known, the init value).  G = n_ub_groups(k):
+    #                         per-center when k <= UB_GROUPS, else centroids
+    #                         tier into ceil(k/G)-wide groups so one fast-
+    #                         moving outlier center only voids its own
+    #                         group's bound (Yinyang-style group filter,
+    #                         cosine-adapted).
 
     def tree_flatten(self):
-        return (self.index, self.assign, self.rho_self, self.rho_self_prev, self.iteration), None
+        return (self.index, self.assign, self.rho_self, self.rho_self_prev,
+                self.iteration, self.ub), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -48,6 +58,80 @@ class KMeansState:
         """Eq. (5): object is 'more similar' if its refreshed self-similarity
         did not decrease.  False on the first two iterations (no history)."""
         return (self.rho_self >= self.rho_self_prev) & (self.iteration >= 2)
+
+
+# Additive slack on the drift-loosened bound: absorbs the float32 rounding
+# of the arccos/cos round trip so the loosened bound stays a TRUE upper
+# bound on the drifted similarity (hypothesis-tested in test_pruning.py).
+UB_DRIFT_EPS = 1e-5
+
+# Bound-group cap: per-object bounds are maintained per centroid GROUP, one
+# bound per center up to this many, then ceil(k/UB_GROUPS)-wide tiers.  The
+# scalar (Hamerly-style) bound dies the moment ANY center moves fast — and
+# early Lloyd iterations always have a few outlier movers (measured: median
+# drift 5–10°, max 55–70° at iteration 2).  Grouping confines an outlier's
+# drift to its own group, so the other groups' bounds keep pruning.
+UB_GROUPS = 16
+
+
+def ub_group_size(k: int) -> int:
+    """Centroids per bound group: 1 while k <= UB_GROUPS (true per-center
+    bounds), else the smallest tier width that fits UB_GROUPS groups."""
+    return -(-k // min(k, UB_GROUPS))
+
+
+def n_ub_groups(k: int) -> int:
+    """G — number of bound groups (= state width of ``KMeansState.ub``)."""
+    return -(-k // ub_group_size(k))
+
+
+def ub_group_of(k: int) -> jax.Array:
+    """(K,) int32 — static centroid-id → bound-group map (contiguous tiers,
+    matching the 'model'-axis column sharding so a mesh shard's centroids
+    land in contiguous groups)."""
+    return jnp.arange(k, dtype=jnp.int32) // ub_group_size(k)
+
+
+def max_center_drift(means_t_new: jax.Array,
+                     means_t_old: jax.Array) -> jax.Array:
+    """() float32 — max_j angular drift arccos(<c_j_new, c_j_old>).
+
+    Both operands are unit columns ((D, K) transposed means); empty clusters
+    keep their previous mean (normalized_means), so their drift is exactly
+    zero and never loosens anyone's bound.
+    """
+    dots = jnp.sum(means_t_new * means_t_old, axis=0)
+    return jnp.max(jnp.arccos(jnp.clip(dots, -1.0, 1.0)))
+
+
+def group_drift(means_t_new: jax.Array,
+                means_t_old: jax.Array) -> jax.Array:
+    """(G,) float32 — per-bound-group max angular drift (the per-center
+    drift aggregated over each group's centroids).  Pads with zero drift,
+    so a ragged final group is never loosened by phantom centroids."""
+    dots = jnp.sum(means_t_new * means_t_old, axis=0)
+    d = jnp.arccos(jnp.clip(dots, -1.0, 1.0))
+    k = d.shape[0]
+    gsz = ub_group_size(k)
+    g = n_ub_groups(k)
+    d = jnp.pad(d, (0, g * gsz - k))
+    return jnp.max(d.reshape(g, gsz), axis=1)
+
+
+def drift_loosen(ub: jax.Array, delta_max: jax.Array) -> jax.Array:
+    """Loosen per-object similarity upper bounds by the center drift.
+
+    Spherical triangle inequality: if ρ(x, c_old) <= u = cos(θ) then
+    ρ(x, c_new) <= cos(max(0, θ − δ)) for any center that rotated by at
+    most δ.  Non-finite bounds (+inf 'unknown') pass through unchanged;
+    finite ones gain UB_DRIFT_EPS so float rounding never tightens them.
+
+    Elementwise with broadcasting: a (N, G) bound matrix against a (G,)
+    per-group drift loosens each group by its own centroids' worst drift.
+    """
+    theta = jnp.arccos(jnp.clip(ub, -1.0, 1.0))
+    loose = jnp.cos(jnp.maximum(theta - delta_max, 0.0)) + UB_DRIFT_EPS
+    return jnp.where(jnp.isfinite(ub), loose, ub)
 
 
 def moving_flags(assign: jax.Array, prev_assign: jax.Array, k: int) -> jax.Array:
@@ -63,11 +147,18 @@ def moving_flags(assign: jax.Array, prev_assign: jax.Array, k: int) -> jax.Array
 @partial(jax.jit, static_argnames=("k", "backend"))
 def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
                 prev_state: KMeansState, params: StructuralParams, *, k: int,
-                backend: str = "reference", plan=None) -> KMeansState:
+                backend: str = "reference", plan=None,
+                ub: jax.Array | None = None) -> KMeansState:
     """Full update: new means, moving flags, refreshed ρ_self, xstate shift.
 
     ``plan`` is the backend's prepared epoch-invariant cache for ``docs``
-    (``Backend.prepare``; the Lloyd drivers build it once per fit)."""
+    (``Backend.prepare``; the Lloyd drivers build it once per fit).
+
+    ``ub`` is the assignment step's refreshed per-object bound (bounds
+    modes); None keeps the previous state's.  Either way the stored bound
+    is loosened by the max per-center angular drift of THIS update, so it
+    remains a true upper bound against the new means.
+    """
     from repro.core.backends import resolve_backend
 
     bk = resolve_backend(backend)
@@ -78,12 +169,15 @@ def update_step(docs: SparseDocs, assign: jax.Array, prev_assign: jax.Array,
     index = build_mean_index(means, params,
                              moving=moving_flags(assign, prev_assign, k))
     rho_self = bk.self_sims(docs.ids, vals, assign, index.means_t, plan=plan)
+    ub = prev_state.ub if ub is None else ub
+    delta = group_drift(index.means_t, prev_state.index.means_t)
     return KMeansState(
         index=index,
         assign=assign,
         rho_self=rho_self,
         rho_self_prev=prev_state.rho_self,
         iteration=prev_state.iteration + 1,
+        ub=drift_loosen(ub, delta),
     )
 
 
@@ -122,6 +216,7 @@ def init_state(docs: SparseDocs, k: int, params: StructuralParams, *, seed: int 
         rho_self=jnp.full((n,), -jnp.inf, jnp.float32),
         rho_self_prev=jnp.full((n,), -jnp.inf, jnp.float32),
         iteration=jnp.asarray(0, jnp.int32),
+        ub=jnp.full((n, n_ub_groups(k)), jnp.inf, jnp.float32),
     )
 
 
@@ -146,4 +241,10 @@ def init_state_from_store(store, k: int, params: StructuralParams, *,
         rho_self=rho0,
         rho_self_prev=rho0,
         iteration=jnp.asarray(0, jnp.int32),
+        # Dead tail rows get ub = 0 (the ρ_self pad convention's twin):
+        # their bound drifting is harmless (zero counts), and a finite pad
+        # keeps the padded state free of inf-arithmetic surprises.
+        ub=jnp.broadcast_to(
+            jnp.where(valid, jnp.inf, 0.0).astype(jnp.float32)[:, None],
+            (n_rows, n_ub_groups(k))),
     )

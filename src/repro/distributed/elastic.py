@@ -39,6 +39,7 @@ def reshard_state(state: DistKMeansState, new_mesh: Mesh) -> DistKMeansState:
         rho_prev=jax.device_put(state.rho_prev, sh(P(axes_obj))),
         moving=jax.device_put(state.moving, sh(P("model"))),
         iteration=state.iteration,
+        ub=jax.device_put(state.ub, sh(P(axes_obj, None))),
     )
 
 

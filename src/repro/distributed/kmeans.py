@@ -76,6 +76,13 @@ class DistKMeansState:
     rho_prev: jax.Array   # (N,)     P(obj)
     moving: jax.Array     # (K,)     P('model')
     iteration: jax.Array  # ()       replicated
+    ub: jax.Array         # (N, G)   P(obj, None) — drift-loosened per-bound-
+    #                       group similarity upper bounds (bounds modes;
+    #                       +inf = no bound known).  G = n_ub_groups(k),
+    #                       replicated over 'model': groups tier the GLOBAL
+    #                       centroid ids (core/update.ub_group_of), so a
+    #                       shard's contiguous column slice maps to
+    #                       contiguous groups.
 
 
 def _local_index(means_t, moving, t_th, v_th):
@@ -88,14 +95,16 @@ def _local_index(means_t, moving, t_th, v_th):
     return build_mean_index(means_t.T, params, moving=moving)
 
 
-def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
-                t_th, v_th, iteration, *plan_args, algo: str, axes_obj,
+def _step_local(ids, vals, valid, assign, rho_self, rho_prev, ub, means_t,
+                moving, t_th, v_th, iteration, *plan_args, algo: str, axes_obj,
                 k: int, obj_chunk: int, lambda_dtype=jnp.float32,
                 taat_unroll: bool = False, two_phase: bool = False,
                 p_block: int = 1, p_tail: int = 16,
                 backend: str = "reference", plan_meta=None):
+    from repro.core.assignment import SKETCH_MARGIN_BETA, _region3_bound
     from repro.core.backends import BACKENDS, gather_verify_scan
     from repro.core.meanindex import normalized_means
+    from repro.core.update import drift_loosen, n_ub_groups, ub_group_size
     from repro.sparse import SparseDocs
 
     bk = BACKENDS[backend]
@@ -104,6 +113,12 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     k0 = lax.axis_index("model") * k_loc
     xstate = (rho_self >= rho_prev) & (iteration >= 2) & valid
     index_loc = _local_index(means_t, moving, t_th, v_th)
+    # Bound groups tier the GLOBAL centroid ids (static geometry; k0 is
+    # traced, so the local-column → group map is a traced gather index).
+    gsz = ub_group_size(k)
+    n_grp = n_ub_groups(k)
+    gid_loc = (k0 + jnp.arange(k_loc, dtype=jnp.int32)) // gsz   # (K_loc,)
+    gmat = gid_loc[:, None] == jnp.arange(n_grp, dtype=jnp.int32)[None, :]
 
     # ---------------- assignment, chunked over local objects ---------------
     nc = n_loc // obj_chunk
@@ -132,9 +147,11 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
             return None
 
     def chunk_fn(args):
-        (cids, cvals, cval, cassign, crho, cxs), (cocc, chead) = args
+        (cids, cvals, cval, cassign, crho, cxs, cub), (cocc, chead) = args
         col_ok = moving[None, :] | ~cxs[:, None]
         cnnz = jnp.sum(cvals != 0.0, axis=1)       # tf-idf: live ⇔ val > 0
+        bounded = algo in ("bounds", "sketch", "bounds-esicp")
+        sk = es_ub = None
         if two_phase and algo == "esicp":
             masked, surv = gather_verify_scan(
                 cids, cvals, cnnz, means_t, t_th, v_th, crho, col_ok,
@@ -144,21 +161,51 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
             # TAAT scan or the pallas kernels, exactly as the single-host
             # engine runs them (core/backends.py).
             cdocs = SparseDocs(ids=cids, vals=cvals, nnz=cnnz, dim=d)
-            mode = "esicp" if algo == "esicp" else "exact"
+            mode = "esicp" if algo in ("esicp", "bounds-esicp") else "exact"
             out = bk.accumulate(cdocs, index_loc, cxs, mode=mode, diag=False,
                                 unroll=taat_unroll, p_block=p_block,
                                 plan=_chunk_plan(cocc, chead))
             sims = out["sims"]
-            if algo == "esicp":
+            if bounded:
+                # The compounded modes are exact by construction: sims is
+                # the full exact similarity row, selection runs unmasked;
+                # the gates below drive only the candidate diagnostics and
+                # the bound refresh (mirrors core/assignment.py).
+                ga = (cub > crho[:, None]) & cval[:, None]   # (C, G)
+                pa = jnp.take(ga, gid_loc, axis=1)           # (C, K_loc)
+                rho_pos = crho > 0.0
+                if algo == "bounds":
+                    surv = pa
+                elif algo == "sketch":
+                    sk = bk.sketch_sim(cdocs, index_loc,
+                                       plan=_chunk_plan(cocc, chead))
+                    surv = jnp.where(rho_pos[:, None],
+                                     sk > crho[:, None], True)
+                else:                               # bounds-esicp
+                    es_ub = out["rho12"] + out["y"] * v_th
+                    gate = col_ok & pa
+                    crude = (es_ub > crho[:, None]) & gate
+                    r3_bound, _ = _region3_bound(cdocs, index_loc)
+                    ref_ub = out["rho12"] + jnp.minimum(
+                        out["y"] * v_th, r3_bound)
+                    checked = crude & (
+                        out["rho12"] + SKETCH_MARGIN_BETA * out["y"] * v_th
+                        <= crho[:, None])
+                    surv = crude & jnp.where(checked,
+                                             ref_ub > crho[:, None], True)
+                masked = sims
+            elif algo == "esicp":
                 surv = ((out["rho12"] + out["y"] * v_th)
                         > crho[:, None]) & col_ok
+                masked = jnp.where(surv, sims, -jnp.inf)
             elif algo == "mivi":
                 surv = jnp.ones_like(col_ok)
+                masked = jnp.where(surv, sims, -jnp.inf)
             elif algo == "icp":
                 surv = col_ok
+                masked = jnp.where(surv, sims, -jnp.inf)
             else:
                 raise ValueError(algo)
-            masked = jnp.where(surv, sims, -jnp.inf)
         lbest = jnp.max(masked, axis=1)
         lidx = (jnp.argmax(masked, axis=1) + k0).astype(jnp.int32)
         best = lax.pmax(lbest, "model")
@@ -168,15 +215,39 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
         na = jnp.where(improve, widx, cassign)
         n_surv = jnp.sum(jnp.where(cval[:, None], surv, False),
                          dtype=jnp.float32)
-        return na, n_surv
+        cub_new = cub
+        if bounded and algo != "sketch":
+            # Refresh active groups to the global per-group second-best:
+            # per local column, the tightest applicable upper bound with
+            # the global winner column masked out; a local per-group max
+            # (one-hot over the column→group map), then pmax over 'model'
+            # completes each group's max — shards owning none of a group's
+            # columns contribute -inf.
+            if algo == "bounds":
+                b = sims
+            else:
+                b = jnp.where(surv, sims, jnp.inf)
+                b = jnp.minimum(b, jnp.where(checked, ref_ub, jnp.inf))
+                b = jnp.minimum(b, jnp.where(gate, es_ub, jnp.inf))
+                b = jnp.minimum(b, jnp.where(pa & ~col_ok,
+                                             crho[:, None], jnp.inf))
+            gcols = k0 + jnp.arange(k_loc, dtype=jnp.int32)[None, :]
+            nb = jnp.where(gcols == na[:, None], -jnp.inf, b)
+            gb = jnp.max(jnp.where(gmat[None, :, :], nb[:, :, None],
+                                   -jnp.inf), axis=1)         # (C, G)
+            gb = lax.pmax(gb, "model")
+            cub_new = jnp.where(ga, gb, cub)
+        return na, n_surv, cub_new
 
     resh = lambda a: a.reshape((nc, obj_chunk) + a.shape[1:])
     occ_r = None if occ is None else occ.reshape((nc, gpt) + occ.shape[1:])
     head_r = None if head is None else resh(head)
-    na, n_surv = lax.map(chunk_fn, ((resh(ids), resh(vals), resh(valid),
-                                     resh(assign), resh(rho_self),
-                                     resh(xstate)), (occ_r, head_r)))
+    na, n_surv, nub = lax.map(chunk_fn, ((resh(ids), resh(vals), resh(valid),
+                                          resh(assign), resh(rho_self),
+                                          resh(xstate), resh(ub)),
+                                         (occ_r, head_r)))
     assign_new = na.reshape(n_loc)
+    ub_new = nub.reshape((n_loc,) + nub.shape[2:])
     n_candidates = lax.psum(jnp.sum(n_surv), axes_obj + ("model",))
 
     # ---------------- update: cluster sums for owned centroids -------------
@@ -235,7 +306,19 @@ def _step_local(ids, vals, valid, assign, rho_self, rho_prev, means_t, moving,
     n_changed = lax.psum(jnp.sum(changed, dtype=jnp.float32), axes_obj)
     objective = lax.psum(jnp.sum(jnp.where(valid, rho_new, 0.0)), axes_obj)
 
-    return (means_new_t, assign_new, rho_new, rho_self, moving_new,
+    # Bound maintenance against the means THIS step just produced: each
+    # bound group's worst per-center angular drift (local columns scattered
+    # into their global groups, zero for unowned groups), pmax'ed over the
+    # centroid shards ('model'), loosens every object's refreshed bounds
+    # (core/update.drift_loosen) — the mesh twin of update_step's
+    # group_drift pass.
+    dots = jnp.sum(means_new_t * means_t, axis=0)
+    d_loc = jnp.arccos(jnp.clip(dots, -1.0, 1.0))             # (K_loc,)
+    delta = lax.pmax(
+        jnp.max(jnp.where(gmat, d_loc[:, None], 0.0), axis=0), "model")
+    ub_new = drift_loosen(ub_new, delta)
+
+    return (means_new_t, assign_new, rho_new, rho_self, ub_new, moving_new,
             n_changed, n_candidates, objective)
 
 
@@ -265,6 +348,7 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
     specs_in = (
         P(axes_obj, None), P(axes_obj, None), po,       # ids, vals, valid
         po, po, po,                                     # assign, rho_self, rho_prev
+        P(axes_obj, None),                              # ub (N, G)
         P(None, "model"), P("model"),                   # means_t, moving
         P(), P(), P(),                                  # t_th, v_th, iteration
     )
@@ -273,7 +357,7 @@ def make_step_fn(mesh: Mesh, *, algo: str = "esicp", k: int,
         if plan_meta.n_head > 0:
             specs_in += (P(axes_obj, None),)            # head slabs
     specs_out = (
-        P(None, "model"), po, po, po, P("model"),
+        P(None, "model"), po, po, po, P(axes_obj, None), P("model"),
         P(), P(), P(),
     )
     fn = shard_map(
@@ -357,11 +441,14 @@ def dist_init_state(docs, k: int, mesh: Mesh, *, seed: int = 0) -> DistKMeansSta
         assign = jnp.zeros((n,), jnp.int32)
         rho_self = jnp.full((n,), -jnp.inf, jnp.float32)
         rho_prev = jnp.full((n,), -jnp.inf, jnp.float32)
+        from repro.core.update import n_ub_groups
+        ub = jnp.full((n, n_ub_groups(k)), jnp.inf, jnp.float32)
     else:
         core = init_state(docs, k, StructuralParams.trivial(docs.dim),
                           seed=seed)
         means_t, assign = core.index.means_t, core.assign
         rho_self, rho_prev = core.rho_self, core.rho_self_prev
+        ub = core.ub
     axes_obj = object_axes(mesh)
     sh = lambda spec: NamedSharding(mesh, spec)
     return DistKMeansState(
@@ -371,6 +458,7 @@ def dist_init_state(docs, k: int, mesh: Mesh, *, seed: int = 0) -> DistKMeansSta
         rho_prev=jax.device_put(rho_prev, sh(P(axes_obj))),
         moving=jax.device_put(jnp.ones((k,), bool), sh(P("model"))),
         iteration=jnp.asarray(0, jnp.int32),
+        ub=jax.device_put(ub, sh(P(axes_obj, None))),
     )
 
 
@@ -423,15 +511,15 @@ def dist_assignment_update(step_fn, state: DistKMeansState, ids, vals, valid,
     """One fused step; returns (new_state, diag dict).  ``plan_operands``
     are the once-per-fit prepared-plan arrays a ``plan_meta``-built step
     expects (see :func:`build_plan_operands`)."""
-    (means_t, assign, rho_self, rho_prev, moving,
+    (means_t, assign, rho_self, rho_prev, ub, moving,
      n_changed, n_cand, objective) = step_fn(
         ids, vals, valid, state.assign, state.rho_self, state.rho_prev,
-        state.means_t, state.moving,
+        state.ub, state.means_t, state.moving,
         jnp.asarray(t_th, jnp.int32), jnp.asarray(v_th, jnp.float32),
         state.iteration, *plan_operands)
     new = DistKMeansState(means_t=means_t, assign=assign, rho_self=rho_self,
                           rho_prev=rho_prev, moving=moving,
-                          iteration=state.iteration + 1)
+                          iteration=state.iteration + 1, ub=ub)
     diag = {"n_changed": n_changed, "n_candidates": n_cand,
             "objective": objective}
     return new, diag
@@ -459,9 +547,18 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
     which trims padding and wraps the result in a FittedModel.
     """
     import numpy as np
+    from repro.cluster.config import ClusterConfig
     from repro.core.estparams import estimate_params
     from repro.core.meanindex import StructuralParams
     from repro.sparse.store import DocStore
+
+    # Front-door validation (the same fail-fast contract as the estimator
+    # and resolve_strategy): unknown algo/backend/tune, a K that doesn't
+    # divide over 'model' — all rejected before any sharded work starts.
+    ClusterConfig(k=k, algo=algo, backend=backend, max_iter=max_iter,
+                  chunk_size=obj_chunk, mesh=mesh, est_iters=est_iters,
+                  checkpoint_dir=checkpoint_dir,
+                  checkpoint_every=checkpoint_every, tune=tune).validate()
 
     store = docs if isinstance(docs, DocStore) else None
     n = docs.n_docs
@@ -499,6 +596,10 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
                                     sh(P(axes_obj))),
             rho_prev=jax.device_put(jnp.pad(state.rho_prev, (0, pad)),
                                     sh(P(axes_obj))),
+            # Dead tail rows get ub = 0 — the ρ_self pad convention's twin
+            # (see core/update.init_state_from_store).
+            ub=jax.device_put(jnp.pad(state.ub, ((0, pad), (0, 0))),
+                              sh(P(axes_obj, None))),
         )
     from repro.core.backends import resolve_backend
 
@@ -594,6 +695,7 @@ def mesh_fit(docs, k: int, mesh: Mesh, *, algo: str = "esicp",
                 "means_t": state.means_t, "assign": state.assign,
                 "rho_self": state.rho_self, "rho_prev": state.rho_prev,
                 "moving": state.moving, "iteration": state.iteration,
+                "ub": state.ub,
                 "t_th": params.t_th, "v_th": params.v_th}, step=r)
         if history[-1]["n_changed"] == 0:
             converged = True

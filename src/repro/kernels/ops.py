@@ -42,6 +42,7 @@ from repro.kernels import esicp_gather as _eg
 from repro.kernels import esicp_filter as _ef
 from repro.kernels import segment_update as _su
 from repro.kernels import rho_gather as _rg
+from repro.kernels import sketch_sim as _sk
 from repro.kernels import flash_attention as _fa
 
 # Widest K superblock the default auto policy will pick: bounds the
@@ -210,6 +211,25 @@ def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None, tuned=None,
                                   n_head=n_head, with_sims=with_sims,
                                   diag=diag, interpret=interpret)
     return tuple(o[:b, :k] for o in out)
+
+
+@partial(jax.jit, static_argnames=("b_blk", "k_blk", "tuned", "interpret"))
+def sketch_sim(sk_docs, sketch_t, *, plan=None, tuned=None, b_blk=None,
+               k_blk=None, interpret: bool | None = None):
+    """(B, K) block-vector sketch similarity — the sketch gate's dense pass.
+
+    Zero-padding S to the 128-lane tile and K to ``k_blk`` leaves every
+    retained dot product bitwise equal to the unpadded reference matmul
+    (kernels/ref.py sketch_sim), which the backend parity matrix relies on.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    cfg, b_blk, k_blk, _ = _resolve_cfg(tuned, plan, b_blk, k_blk, None)
+    b, s = sk_docs.shape
+    k = sketch_t.shape[1]
+    px = _pad_to(_pad_to(sk_docs, 128, 1), b_blk, 0)
+    pm = _pad_to(_pad_to(sketch_t, 128, 0), k_blk, 1)
+    out = _sk.sketch_sim_pallas(px, pm, b_blk=b_blk, interpret=interpret)
+    return out[:b, :k]
 
 
 @partial(jax.jit, static_argnames=("b_blk", "k_blk", "interpret"))

@@ -38,6 +38,14 @@ def esicp_filter(rho12, y, rho_max, col_ok, v_th):
     return mask.astype(jnp.int8), jnp.sum(mask, axis=1).astype(jnp.int32)
 
 
+def sketch_sim(sk_docs, sketch_t):
+    """(B, S) doc sketches × (S, K) mean sketches -> (B, K) sketch bounds.
+
+    A plain dense matmul: each entry upper-bounds the exact cosine similarity
+    for non-negative data (per-group Cauchy-Schwarz)."""
+    return jnp.dot(sk_docs, sketch_t, preferred_element_type=jnp.float32)
+
+
 def segment_update(assign, ids, vals, k: int, d: int):
     x = densify(ids, vals, d)
     out = jnp.zeros((k, d), jnp.float32)

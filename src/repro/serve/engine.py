@@ -115,7 +115,15 @@ class ClusterEngine:
                 "(repro.cluster).", DeprecationWarning, stacklevel=2)
             self._source = None
             self.index = index
+        # Front-door validation, the serving twin of ClusterConfig.validate():
+        # an unknown backend or a degenerate batch fails at construction,
+        # not on the first classify/refit request.
+        from repro.core.backends import resolve_backend
+
         self.backend = backend or "auto"
+        resolve_backend(self.backend)
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         self.batch_size = batch_size
         self._last_assign = None
         self._last_rho = None

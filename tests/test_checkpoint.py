@@ -91,12 +91,14 @@ def test_mesh_fit_resume_from_checkpoint(tmp_path, small_corpus):
                          checkpoint_every=2).fit(sub, df=df)
     assert latest_step(d) is not None
     k, dim, n_pad = 8, sub.dim, 512
+    from repro.core.update import n_ub_groups
     example = {"means_t": jnp.zeros((dim, k)),
                "assign": jnp.zeros((n_pad,), jnp.int32),
                "rho_self": jnp.zeros((n_pad,)),
                "rho_prev": jnp.zeros((n_pad,)),
                "moving": jnp.zeros((k,), bool),
                "iteration": jnp.asarray(0),
+               "ub": jnp.zeros((n_pad, n_ub_groups(k))),
                "t_th": jnp.asarray(0), "v_th": jnp.asarray(0.0)}
     restored, step = restore_checkpoint(d, example)
     assert restored["means_t"].shape == (dim, k)

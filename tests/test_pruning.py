@@ -1,0 +1,329 @@
+"""Compounded pruning modes (DESIGN.md §11): bound soundness + exactness.
+
+The load-bearing invariant is the group-bound bracket: the maintained
+``(N, G)`` upper bound — refreshed from exact similarities, then loosened
+by per-group center drift — must stay >= the true best non-assigned
+similarity of every (object, group) pair, for any means perturbation and
+any number of consecutive loosen steps (the streaming-resume situation:
+bounds can drift-loosen many times between exact refreshes).  A single
+inversion makes the ``bounds`` family lossy and voids the exactness
+contract.
+
+Also under test: padding rows are inert under the ρ_self = 0 / ub = 0 pad
+convention; the three new modes are bit-identical to ``mivi`` over full
+fits on both backends, through mesh runs, and across a mid-fit streaming
+checkpoint/resume; and ``ClusterConfig.validate()`` fires from every
+front door (estimator fit, resolve_strategy, mesh_fit, serving engine).
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+try:                            # hypothesis: CI-installed, optional locally —
+    import hypothesis           # the deterministic sweep below always runs
+    from hypothesis import given, strategies as st
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.load_profile("ci")
+except ImportError:             # pragma: no cover
+    hypothesis = None
+
+import jax.numpy as jnp
+
+from repro.cluster import ClusterConfig, ClusterEngine, SphericalKMeans
+from repro.core import StructuralParams, build_mean_index
+from repro.core.assignment import assignment_step, _scan
+from repro.core.lloyd import streaming_fit
+from repro.core.update import (UB_DRIFT_EPS, drift_loosen, group_drift,
+                               n_ub_groups, ub_group_size)
+from repro.data import CorpusSpec, make_corpus
+from repro.launch.mesh import make_test_mesh
+from repro.sparse import DocStore, SparseDocs
+
+NEW_MODES = ("bounds", "sketch", "bounds-esicp")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(n_docs=400, vocab=512, nt_mean=20,
+                                  n_topics=8, seed=0))
+
+
+@pytest.fixture(scope="module")
+def mesh_corpus():
+    return make_corpus(CorpusSpec(n_docs=1024, vocab=768, nt_mean=30,
+                                  n_topics=12, seed=9))
+
+
+# ---------------------------------------------------------------------------
+# Group-bound bracket (hypothesis).
+# ---------------------------------------------------------------------------
+
+def _make_case(b, p, d, k, t_th, n_drifts, scale, seed):
+    rng = np.random.default_rng(seed)
+    ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
+    vals = rng.random((b, p)).astype(np.float32)
+    nnz = rng.integers(1, p + 1, b).astype(np.int32)
+    for i in range(b):
+        vals[i, nnz[i]:] = 0.0
+        ids[i, nnz[i]:] = 0
+    # Unit-norm docs (the production tf-idf → L2 pipeline guarantee): the
+    # spherical bound math is about cosines, so similarities must BE
+    # cosines.  Norm over the DENSE vector — duplicate ids accumulate.
+    for i in range(b):
+        dense = np.zeros(d)
+        np.add.at(dense, ids[i, :nnz[i]], vals[i, :nnz[i]])
+        vals[i] /= max(np.linalg.norm(dense), 1e-9)
+    means = np.where(rng.random((k, d)) < 0.4, rng.random((k, d)), 0.0)
+    means += 1e-3                                       # no zero rows
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    docs = SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                      nnz=jnp.asarray(nnz), dim=d)
+    return docs, means.astype(np.float32), t_th, n_drifts, scale, seed
+
+
+if hypothesis is not None:
+    @st.composite
+    def bound_case(draw):
+        b = draw(st.integers(2, 12))
+        p = draw(st.integers(2, 10))
+        d = draw(st.integers(8, 48))
+        k = draw(st.integers(2, 24))      # crosses the UB_GROUPS=16 tier edge
+        return _make_case(b, p, d, k, t_th=draw(st.integers(0, d)),
+                          n_drifts=draw(st.integers(1, 3)),
+                          scale=draw(st.floats(0.0, 1.5)),
+                          seed=draw(st.integers(0, 2**31 - 1)))
+
+
+def _true_group_max(sims, assign, k):
+    """Per-group max of the non-assigned exact similarities, in numpy —
+    independent of the production ``_group_bounds`` it checks."""
+    sims = np.array(sims, np.float64)
+    b = sims.shape[0]
+    sims[np.arange(b), assign] = -np.inf
+    gsz, g = ub_group_size(k), n_ub_groups(k)
+    sims = np.pad(sims, ((0, 0), (0, g * gsz - k)), constant_values=-np.inf)
+    return sims.reshape(b, g, gsz).max(axis=2)
+
+
+def _check_bracket(case):
+    """Refreshed bounds, drift-loosened through 1..3 consecutive center
+    perturbations WITHOUT re-tightening, still bracket the true per-group
+    best non-assigned similarity against the final means."""
+    docs, means, t_th, n_drifts, scale, seed = case
+    k = means.shape[0]
+    params = StructuralParams(t_th=jnp.asarray(t_th, jnp.int32),
+                              v_th=jnp.asarray(0.1, jnp.float32))
+    index = build_mean_index(jnp.asarray(means), params)
+    b = docs.n_docs
+    sims0 = np.asarray(
+        _scan(docs, index, jnp.zeros((b,), bool), mode="esicp")["sims"])
+    assign = sims0.argmax(axis=1).astype(np.int32)
+    rho_self = jnp.asarray(sims0.max(axis=1))
+    res = assignment_step("bounds", docs, index, jnp.asarray(assign),
+                          rho_self, jnp.zeros((b,), bool))
+    assert (np.asarray(res.assign) == assign).all()     # already optimal
+
+    ub = res.ub
+    rng = np.random.default_rng(seed + 1)
+    cur = means
+    for _ in range(n_drifts):
+        new = cur + scale * rng.normal(size=cur.shape).astype(np.float32) \
+            * rng.random(k).astype(np.float32)[:, None]   # uneven per-center
+        new /= np.maximum(np.linalg.norm(new, axis=1, keepdims=True), 1e-9)
+        delta = group_drift(jnp.asarray(new.T), jnp.asarray(cur.T))
+        ub = drift_loosen(ub, delta)
+        cur = new
+
+    index2 = build_mean_index(jnp.asarray(cur), params)
+    sims2 = _scan(docs, index2, jnp.zeros((b,), bool), mode="esicp")["sims"]
+    true = _true_group_max(sims2, assign, k)
+    loose = np.asarray(ub)
+    # The bracket: every loosened bound >= the true group max (the
+    # UB_DRIFT_EPS slack absorbs the f32 arccos/cos round trip; direct
+    # comparison, not subtraction — -inf - -inf would NaN on the singleton
+    # assigned-only groups, where both sides are legitimately -inf).
+    viol = true > loose + (n_drifts * UB_DRIFT_EPS + 1e-5)
+    assert not viol.any(), float((true - loose)[viol].max())
+
+
+@pytest.mark.parametrize("sweep_seed", range(12))
+def test_group_bounds_bracket_seeded_sweep(sweep_seed):
+    """Deterministic bracket sweep — runs with or without hypothesis."""
+    rng = np.random.default_rng(1000 + sweep_seed)
+    d = int(rng.integers(8, 48))
+    _check_bracket(_make_case(
+        b=int(rng.integers(2, 12)), p=int(rng.integers(2, 10)), d=d,
+        k=int(rng.integers(2, 24)), t_th=int(rng.integers(0, d)),
+        n_drifts=int(rng.integers(1, 4)), scale=float(rng.random() * 1.5),
+        seed=int(rng.integers(0, 2**31 - 1))))
+
+
+@pytest.mark.skipif(hypothesis is None, reason="hypothesis not installed")
+def test_group_bounds_bracket_hypothesis():
+    given(bound_case())(_check_bracket)()
+
+
+def test_drift_loosen_passthrough_and_monotone():
+    ub = jnp.asarray([[jnp.inf, 0.9, -jnp.inf, 0.0]], jnp.float32)
+    delta = jnp.asarray([0.0, 0.3, 0.3, 0.3], jnp.float32)
+    out = np.asarray(drift_loosen(ub, delta))
+    assert np.isposinf(out[0, 0]) and np.isneginf(out[0, 2])
+    assert out[0, 1] >= 0.9 and out[0, 3] >= 0.0    # loosening only
+
+
+# ---------------------------------------------------------------------------
+# Padding rows are inert.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["bounds", "bounds-esicp"])
+def test_dead_rows_never_activate_bounds(algo):
+    """The store/pad convention (ρ_self = 0, ub = 0) makes a dead row's
+    group test 0 > 0 = False: zero candidates, zero Mult contribution."""
+    rng = np.random.default_rng(4)
+    b, p, d, k = 6, 8, 64, 12
+    ids = np.sort(rng.integers(0, d, (b, p)), axis=1).astype(np.int32)
+    vals = rng.random((b, p)).astype(np.float32)
+    nnz = np.full(b, p, np.int32)
+    nnz[4:] = 0                                        # two dead tail rows
+    ids[4:] = 0
+    vals[4:] = 0.0
+    docs = SparseDocs(ids=jnp.asarray(ids), vals=jnp.asarray(vals),
+                      nnz=jnp.asarray(nnz), dim=d)
+    means = rng.random((k, d)).astype(np.float32)
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    params = StructuralParams(t_th=jnp.asarray(d // 2, jnp.int32),
+                              v_th=jnp.asarray(0.1, jnp.float32))
+    index = build_mean_index(jnp.asarray(means), params)
+    rho = jnp.where(jnp.arange(b) < 4, 0.5, 0.0).astype(jnp.float32)
+    ub = jnp.where(jnp.arange(b)[:, None] < 4, jnp.inf, 0.0).astype(
+        jnp.float32) * jnp.ones((1, n_ub_groups(k)))
+    res = assignment_step(algo, docs, index, jnp.zeros((b,), jnp.int32),
+                          rho, jnp.zeros((b,), bool), ub=ub)
+    assert (np.asarray(res.n_candidates)[4:] == 0).all()
+    assert not np.asarray(res.changed)[4:].any()
+    live = SparseDocs(ids=docs.ids[:4], vals=docs.vals[:4], nnz=docs.nnz[:4],
+                      dim=d)
+    res_live = assignment_step(algo, live, index,
+                               jnp.zeros((4,), jnp.int32), rho[:4],
+                               jnp.zeros((4,), bool), ub=ub[:4])
+    assert float(res.mult) == float(res_live.mult)
+
+
+# ---------------------------------------------------------------------------
+# Full-fit bit-identity to mivi, both backends.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("algo", NEW_MODES)
+def test_full_fit_identical_to_mivi(corpus, backend, algo):
+    docs, df, perm, topics = corpus
+    iters = 20 if backend == "reference" else 6
+    ref = SphericalKMeans(k=8, algo="mivi", max_iter=iters, batch_size=100,
+                          seed=1, backend=backend).fit(docs, df=df)
+    km = SphericalKMeans(k=8, algo=algo, max_iter=iters, batch_size=100,
+                         seed=1, backend=backend).fit(docs, df=df)
+    assert (km.labels_ == ref.labels_).all()
+    assert km.n_iter_ == ref.n_iter_
+    # Structural accounting guarantee: the bounds gate is free (it reads
+    # the carried ub), so its Mult can never exceed the exhaustive scan.
+    # sketch/bounds-esicp pay for their own pre-passes, which only win on
+    # realistic corpora — that economics is the benchmark ratchet's job
+    # (benchmarks/ratchet.py check_pruning), not a tiny-corpus invariant.
+    if algo == "bounds":
+        for h, hr in zip(km.history_, ref.history_):
+            assert h["mult"] <= hr["mult"] * (1 + 1e-6), h["iteration"]
+
+
+# ---------------------------------------------------------------------------
+# Streaming: mid-fit checkpoint/resume with a bounded mode.
+# ---------------------------------------------------------------------------
+
+def test_streaming_resume_bounded_mode(corpus, tmp_path):
+    docs, df, perm, topics = corpus
+    store = DocStore.from_docs(docs, chunk_size=100)
+    ckpt = str(tmp_path / "ckpt")
+    full = streaming_fit(store, k=8, algo="bounds-esicp", max_iter=20,
+                         batch_size=100, seed=1, df=df,
+                         checkpoint_dir=ckpt, checkpoint_every=3)
+    assert full.converged
+
+    from repro.checkpoint.store import all_steps
+    steps = all_steps(ckpt)
+    mid = [s for s in steps if s % (store.n_chunks + 1) != 0]
+    assert mid, "expected a surviving mid-epoch checkpoint"
+    for s in steps:                    # rewind the run to the mid-epoch cut
+        if s > mid[-1]:
+            shutil.rmtree(os.path.join(ckpt, f"step_{s:08d}"))
+    resumed = streaming_fit(store, k=8, algo="bounds-esicp", max_iter=20,
+                            batch_size=100, seed=1, df=df,
+                            checkpoint_dir=ckpt, resume=True)
+    assert (resumed.assign == full.assign).all()
+    assert resumed.n_iter == full.n_iter
+    for hr, hn in zip(full.history, resumed.history):
+        assert hr["mult"] == hn["mult"] and hr["n_changed"] == hn["n_changed"]
+
+    # and streaming == resident for the same mode (exactness through the
+    # chunked ub work-buffer + finalize drift-loosening)
+    resident = SphericalKMeans(k=8, algo="bounds-esicp", max_iter=20,
+                               batch_size=100, seed=1).fit(docs, df=df)
+    assert (full.assign == np.asarray(resident.labels_)).all()
+
+
+# ---------------------------------------------------------------------------
+# Mesh runs stay exact.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", NEW_MODES)
+def test_mesh_new_modes_match_single_device(mesh_corpus, algo):
+    docs, df, perm, topics = mesh_corpus
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    ref = SphericalKMeans(k=16, algo="mivi", max_iter=12, batch_size=512,
+                          seed=5).fit(docs, df=df)
+    km = SphericalKMeans(k=16, algo=algo, max_iter=12, chunk_size=128,
+                         mesh=mesh, seed=5).fit(docs, df=df)
+    assert km.model_.strategy == "mesh"
+    assert (km.labels_ == ref.labels_).all()
+
+
+# ---------------------------------------------------------------------------
+# ClusterConfig.validate() fires from every front door.
+# ---------------------------------------------------------------------------
+
+def test_validate_admits_new_modes():
+    for algo in NEW_MODES:
+        cfg = ClusterConfig(k=8, algo=algo).validate()
+        assert cfg.algo == algo
+
+
+def test_validate_from_estimator_fit(corpus):
+    docs, df, perm, topics = corpus
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        SphericalKMeans(k=8, algo="hamerly").fit(docs, df=df)
+
+
+def test_validate_from_resolve_strategy():
+    from repro.cluster.strategies import resolve_strategy
+    with pytest.raises(ValueError, match="k must be"):
+        resolve_strategy(ClusterConfig(k=0))
+
+
+def test_validate_from_mesh_fit(mesh_corpus):
+    from repro.distributed import mesh_fit
+    docs, df, perm, topics = mesh_corpus
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    with pytest.raises(ValueError, match="mesh strategy"):
+        mesh_fit(docs, 16, mesh, algo="ta-icp", max_iter=1, df=df)
+
+
+def test_validate_from_serving_engine(corpus):
+    docs, df, perm, topics = corpus
+    km = SphericalKMeans(k=8, algo="bounds", max_iter=5, batch_size=100,
+                         seed=1).fit(docs, df=df)
+    with pytest.raises(ValueError, match="unknown backend"):
+        ClusterEngine.from_model(km.model_, backend="vector-db")
+    with pytest.raises(ValueError, match="batch_size"):
+        ClusterEngine.from_model(km.model_, batch_size=0)
