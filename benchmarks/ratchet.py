@@ -175,10 +175,86 @@ def check_pruning(rows: list[dict]) -> int:
     return 1 if failures else 0
 
 
+def check_serving(rows: list[dict]) -> int:
+    """Serving-plane invariants over ``BENCH_serving.json``
+    (:mod:`benchmarks.serving_suite`).
+
+    1. **Liveness** — the load run completed traffic: ``qps > 0`` and the
+       latency distribution is sane (``p99_ms >= p50_ms > 0``).
+    2. **Zero failed requests** — the mid-run hot-swap is zero-downtime by
+       contract; a single failed request (including a torn-index parity
+       mismatch, ``parity: false``) fails the gate.
+    3. **Occupancy honesty** — every bucket row reports
+       ``0 < mean_occupancy <= 1``: dead-row padding can dilute a batch but
+       a bucket can never run more live rows than its padded size.
+    4. **No steady-state recompilation** — every bucket compiles at most
+       ONCE across the whole run (first use), and the post-swap warm-bucket
+       probe adds ZERO traces (``recompiles_after_warm == 0``): the index
+       is a traced argument, so a same-geometry hot-swap is free.
+    5. **Admission control held** — ``peak_live_batches`` never exceeded
+       the configured ``max_live_batches``.
+    """
+    failures = []
+    lat = next((r for r in rows if r["name"] == "serving/latency"), None)
+    if lat is None:
+        print("::error::BENCH_serving.json holds no serving/latency row")
+        return 1
+    if not lat.get("qps", 0) > 0:
+        failures.append(f"serving/latency: qps {lat.get('qps')} — the load "
+                        f"run completed no traffic")
+    p50, p99 = lat.get("p50_ms", 0), lat.get("p99_ms", 0)
+    if not 0 < p50 <= p99:
+        failures.append(f"serving/latency: implausible percentiles "
+                        f"p50={p50}ms p99={p99}ms")
+    if lat.get("n_failures", 1) != 0:
+        failures.append(f"serving/latency: {lat.get('n_failures')} failed "
+                        f"requests — hot-swap/admission must not drop traffic")
+    if not lat.get("parity", False):
+        failures.append("serving/latency: parity false — some response "
+                        "matched neither live index (torn or wrong results)")
+    if lat.get("peak_live_batches", 0) > lat.get("max_live_batches", 0):
+        failures.append(
+            f"serving/latency: peak_live_batches "
+            f"{lat.get('peak_live_batches')} > max_live_batches "
+            f"{lat.get('max_live_batches')} — admission control breached")
+
+    buckets = [r for r in rows if r["name"].startswith("serving/bucket")]
+    if not buckets:
+        failures.append("no serving/bucket rows — the run served no batches")
+    for r in buckets:
+        occ = r.get("mean_occupancy", -1)
+        if not 0 < occ <= 1:
+            failures.append(f"{r['name']}: mean_occupancy {occ} outside "
+                            f"(0, 1]")
+        if r.get("compiles", 99) > 1:
+            failures.append(f"{r['name']}: {r.get('compiles')} compiles — "
+                            f"steady-state serving recompiled a bucket")
+
+    swap = next((r for r in rows if r["name"] == "serving/swap"), None)
+    if swap is None:
+        failures.append("no serving/swap row — the mid-run hot-swap did "
+                        "not happen")
+    elif swap.get("recompiles_after_warm", 99) != 0:
+        failures.append(
+            f"serving/swap: {swap.get('recompiles_after_warm')} traces on "
+            f"warm buckets after the swap — a same-geometry hot-swap must "
+            f"cost zero recompiles")
+
+    for msg in failures:
+        print(f"::error title=serving ratchet::{msg}")
+    if not failures:
+        print(f"serving ratchet: p50 {p50}ms / p99 {p99}ms at "
+              f"{lat['qps']} qps over {lat['n_requests']} requests, "
+              f"{len(buckets)} buckets, 0 failures — all invariants hold")
+    return 1 if failures else 0
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
     with open(path) as f:
         rows = json.load(f)
+    if any(str(r.get("name", "")).startswith("serving/") for r in rows):
+        return check_serving(rows)
     if any(str(r.get("name", "")).startswith("pruning/") for r in rows):
         return check_pruning(rows)
     return check(rows)

@@ -35,11 +35,13 @@ SUITES = [
     ("fused", "benchmarks.fused_iteration"),
     ("kernels", "benchmarks.kernel_suite"),
     ("pruning", "benchmarks.pruning_suite"),
+    ("serving", "benchmarks.serving_suite"),
 ]
 
 JSON_SUITES = {"fused": "BENCH_fused_iteration.json",
                "kernels": "BENCH_kernels.json",
-               "pruning": "BENCH_pruning.json"}
+               "pruning": "BENCH_pruning.json",
+               "serving": "BENCH_serving.json"}
 
 
 def _as_csv(row) -> str:

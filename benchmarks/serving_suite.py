@@ -1,0 +1,173 @@
+"""Serving-plane load benchmark (DESIGN.md §12): a closed-loop generator
+against a live :class:`repro.serve.ClusterServer`, machine-readable as
+``BENCH_serving.json``.
+
+N client threads issue classify requests of random sizes against one hosted
+FittedModel; halfway through, the model hot-swaps to a refreshed index
+(different init) while traffic keeps flowing.  Rows:
+
+  ``serving/latency``    — the headline row: ``us_per_call`` = mean
+      end-to-end request latency, plus ``p50_ms``/``p99_ms``, ``qps``
+      (completed requests / wall), request/row/failure counts and the
+      ``parity`` verdict (every response bit-identical to the direct
+      ``ClusterEngine.classify`` on one of the two live indices — a
+      response matching neither would be a torn index).
+  ``serving/bucket<B>``  — per padded batch-size bucket: ``batches``,
+      ``mean_occupancy`` (live rows / bucket — must sit in (0, 1]) and
+      ``compiles`` (jit traces charged to the bucket during the run,
+      measured as a ``servable.compile_counts`` delta — at most ONE, the
+      no-steady-state-recompilation invariant).
+  ``serving/swap``       — ``us_per_call`` = hot-swap wall time;
+      ``recompiles_after_warm`` counts traces added by post-swap requests
+      on already-compiled buckets (must be 0: the index is a traced
+      argument, so a same-geometry swap never recompiles).
+
+``benchmarks/ratchet.py check_serving`` gates all of the above.
+``REPRO_BENCH_SMOKE=1`` shrinks the corpus and the client budget (the
+invariants are structural, not scale statements).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_row, default_backend
+from repro.cluster import ClusterConfig, fit
+from repro.data import make_corpus
+from repro.data.synthetic import CorpusSpec
+from repro.serve import ClusterEngine, ClusterServer
+
+K = 16
+BATCH_SIZES = (16, 32, 64, 128)
+SEED = 0
+
+
+def _sizing(smoke: bool):
+    if smoke:
+        spec = CorpusSpec(n_docs=2000, vocab=1024, nt_mean=30.0,
+                          n_topics=16, seed=3)
+        return spec, 4, 25          # clients, requests per client
+    spec = CorpusSpec(n_docs=12000, vocab=8192, nt_mean=60.0,
+                      n_topics=48, seed=3)
+    return spec, 8, 150
+
+
+def run():
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    backend = default_backend()
+    spec, n_clients, n_req = _sizing(smoke)
+    docs, df, _, _ = make_corpus(spec)
+    ids = np.asarray(docs.ids)
+    vals = np.asarray(docs.vals)
+    nnz = np.asarray(docs.nnz)
+
+    cfg = dict(k=K, max_iter=4, batch_size=4096, backend=backend)
+    model_a = fit(docs, ClusterConfig(seed=1, **cfg), df=df)
+    model_b = fit(docs, ClusterConfig(seed=7, **cfg), df=df)
+    # Direct-path ground truth for BOTH live indices: under a mid-run swap
+    # every response must match one of them exactly (parity), whichever
+    # index its batch was assembled against (atomicity).
+    a_ref_a, _ = ClusterEngine.from_model(model_a).classify(docs)
+    a_ref_b, _ = ClusterEngine.from_model(model_b).classify(docs)
+
+    lock = threading.Lock()
+    latencies: list[float] = []
+    n_done = [0]
+    n_parity_bad = [0]
+    n_errors = [0]
+    max_rows = BATCH_SIZES[-1]
+
+    with ClusterServer(max_live_batches=4, batch_timeout_s=0.002) as srv:
+        servable = srv.load("bench", model_a, batch_sizes=BATCH_SIZES,
+                            backend=backend)
+        compiles_before = servable.compile_counts()
+
+        def client(ci: int):
+            rng = np.random.RandomState(1000 + ci)
+            for _ in range(n_req):
+                size = int(rng.randint(1, max_rows + 1))
+                lo = int(rng.randint(0, spec.n_docs - size + 1))
+                hi = lo + size
+                t0 = time.perf_counter()
+                try:
+                    a, _ = srv.classify(
+                        "bench", (ids[lo:hi], vals[lo:hi], nnz[lo:hi]),
+                        timeout=600)
+                except Exception:
+                    with lock:
+                        n_errors[0] += 1
+                        n_done[0] += 1
+                    continue
+                dt = time.perf_counter() - t0
+                ok = ((a == a_ref_a[lo:hi]).all()
+                      or (a == a_ref_b[lo:hi]).all())
+                with lock:
+                    latencies.append(dt)
+                    n_done[0] += 1
+                    if not ok:
+                        n_parity_bad[0] += 1
+
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(n_clients)]
+        t_start = time.perf_counter()
+        for t in threads:
+            t.start()
+
+        # Mid-run zero-downtime hot-swap: wait for half the traffic, then
+        # atomically reroute to the refreshed index while clients keep going.
+        total = n_clients * n_req
+        while True:
+            with lock:
+                if n_done[0] >= total // 2:
+                    break
+            time.sleep(0.002)
+        t0 = time.perf_counter()
+        srv.swap("bench", model_b, batch_sizes=BATCH_SIZES, backend=backend)
+        swap_s = time.perf_counter() - t0
+
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t_start
+        stats = srv.stats("bench")
+        swapped = srv.registry.get("bench")
+
+        # Deterministic recompile probe: every bucket the run already
+        # compiled must serve the swapped index with ZERO new traces.
+        warm = [b for b, c in swapped.compile_counts().items() if c > 0]
+        probe_before = swapped.compile_counts()
+        for b in warm:
+            srv.classify("bench", (ids[:b], vals[:b], nnz[:b]), timeout=600)
+        probe_after = swapped.compile_counts()
+        recompiles_after_warm = sum(probe_after[b] - probe_before[b]
+                                    for b in warm)
+        compiles_after = swapped.compile_counts()
+
+    lat = np.asarray(sorted(latencies), np.float64)
+    n_failures = n_errors[0] + int(stats["n_failures"])
+    parity = n_parity_bad[0] == 0 and lat.size > 0
+    rows = [bench_row(
+        "serving/latency", float(lat.mean() * 1e6) if lat.size else 0.0,
+        backend,
+        p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3) if lat.size else 0.0,
+        p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3) if lat.size else 0.0,
+        qps=round(len(latencies) / wall, 2),
+        n_clients=n_clients, n_requests=int(stats["n_requests"]),
+        n_rows=int(stats["n_rows"]), n_batches=int(stats["n_batches"]),
+        n_failures=n_failures, parity=bool(parity),
+        peak_live_batches=int(stats["peak_live_batches"]),
+        max_live_batches=int(stats["max_live_batches"]))]
+    for b_str, occ in stats["occupancy"].items():
+        b = int(b_str)
+        rows.append(bench_row(
+            f"serving/bucket{b}", 0.0, backend, bucket=b,
+            batches=int(occ["batches"]),
+            mean_occupancy=round(float(occ["mean_occupancy"]), 4),
+            compiles=int(compiles_after[b] - compiles_before[b])))
+    rows.append(bench_row(
+        "serving/swap", swap_s * 1e6, backend,
+        recompiles_after_warm=int(recompiles_after_warm),
+        warm_buckets=len(warm)))
+    return rows

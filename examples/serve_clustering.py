@@ -1,0 +1,125 @@
+"""Serving a fitted clustering model: fit → save → load into a live
+continuous-batching server → concurrent clients → refit → zero-downtime
+hot-swap.
+
+Demonstrates the serving plane (DESIGN.md §12):
+
+  1. ``fit`` produces a :class:`FittedModel` artifact, saved and re-loaded
+     exactly as a production pipeline would hand it from trainer to server;
+  2. :class:`ClusterServer` hosts the artifact behind per-model request
+     queues, a continuous batcher with padded batch-size buckets (every
+     device launch hits an already-compiled shape), ``max_live_batches``
+     admission control and an async device thread;
+  3. concurrent client threads classify random slices and every response
+     is checked bit-identical to the direct ``ClusterEngine.classify``;
+  4. ``ClusterEngine.refit`` rebuilds the index from a fresh corpus
+     (streamed chunk by chunk when given a DocStore) and ``server.swap``
+     reroutes traffic atomically — in-flight batches finish on the old
+     index, no request fails, and a same-geometry swap costs zero
+     recompiles.
+
+    PYTHONPATH=src python examples/serve_clustering.py
+    PYTHONPATH=src python examples/serve_clustering.py --smoke   # tiny (CI)
+"""
+import argparse
+import os
+import shutil
+import tempfile
+import threading
+
+import numpy as np
+
+from repro.cluster import ClusterConfig, FittedModel, fit
+from repro.data import make_corpus, CorpusSpec
+from repro.serve import ClusterEngine, ClusterServer
+from repro.sparse import DocStore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic corpus so CI can smoke-run the "
+                         "example end to end in seconds")
+    args = ap.parse_args()
+
+    if args.smoke:
+        spec = CorpusSpec(n_docs=800, vocab=512, nt_mean=20, n_topics=8,
+                          seed=0)
+        k, n_clients, n_req = 8, 4, 10
+    else:
+        spec = CorpusSpec(n_docs=20_000, vocab=4_096, nt_mean=60,
+                          n_topics=64, seed=0)
+        k, n_clients, n_req = 64, 8, 50
+
+    # ---- trainer side: fit and persist the artifact ----------------------
+    docs, df, perm, topics = make_corpus(spec)
+    model = fit(docs, ClusterConfig(k=k, algo="esicp", max_iter=10, seed=0),
+                df=df)
+    workdir = tempfile.mkdtemp(prefix="serve_clustering_")
+    model.save(os.path.join(workdir, "model"))
+    print(f"[fit]   k={k} n_iter={model.n_iter} J={model.objective:.2f} "
+          f"→ saved to {workdir}/model")
+
+    # ---- server side: load the artifact into a live server ---------------
+    served = FittedModel.load(os.path.join(workdir, "model"))
+    a_ref, _ = ClusterEngine.from_model(served).classify(docs)
+    ids, vals, nnz = (np.asarray(docs.ids), np.asarray(docs.vals),
+                      np.asarray(docs.nnz))
+
+    with ClusterServer(max_live_batches=4) as server:
+        server.load("news", served)
+        print(f"[serve] hosting {server.registry.names()} with buckets "
+              f"{server.stats('news')['buckets']}")
+
+        # ---- concurrent clients ------------------------------------------
+        bad = []
+
+        def client(ci):
+            rng = np.random.RandomState(100 + ci)
+            for _ in range(n_req):
+                size = int(rng.randint(1, 200))
+                lo = int(rng.randint(0, spec.n_docs - size + 1))
+                a, _ = server.classify(
+                    "news", (ids[lo:lo + size], vals[lo:lo + size],
+                             nnz[lo:lo + size]))
+                if not (a == a_ref[lo:lo + size]).all():
+                    bad.append(ci)
+
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # Warm the exact bucket the post-swap probe will use, so the
+        # compile-count comparison below is deterministic.
+        server.classify("news", (ids[:128], vals[:128], nnz[:128]))
+        stats = server.stats("news")
+        assert not bad and stats["n_failures"] == 0, "serving parity broke!"
+        occ = {b: round(v["mean_occupancy"], 2)
+               for b, v in stats["occupancy"].items()}
+        print(f"[load]  {stats['n_requests']} requests "
+              f"({stats['n_rows']} rows) in {stats['n_batches']} batches, "
+              f"mean latency {stats['mean_server_latency_ms']:.2f} ms, "
+              f"occupancy {occ}, compiles {stats['compile_counts']} ✓")
+
+        # ---- refit on fresh data, hot-swap with zero downtime ------------
+        engine = ClusterEngine.from_model(served)
+        store = DocStore.from_docs(docs, chunk_size=max(spec.n_docs // 4, 1))
+        engine.refit(store, n_iter=2)        # streams chunk by chunk
+        a_new, _ = engine.classify(docs)
+        server.swap("news", engine.to_model())
+        a_post, _ = server.classify("news", (ids[:128], vals[:128],
+                                             nnz[:128]))
+        assert (a_post == a_new[:128]).all(), "post-swap routing broke!"
+        compiles_after = server.stats("news")["compile_counts"]
+        assert compiles_after == stats["compile_counts"], \
+            "same-geometry hot-swap must not recompile!"
+        print(f"[swap]  refit on a {store.n_chunks}-chunk store, hot-swapped "
+              f"atomically; compiles unchanged {compiles_after} ✓")
+
+    shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

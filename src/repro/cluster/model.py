@@ -102,6 +102,17 @@ class FittedModel:
                                 batch_size=batch_size)
         return float(np.sum(sims))
 
+    def servable(self, **kw):
+        """Wrap the artifact for the continuous-batching service plane —
+        ``repro.serve.ServableClusterModel(self, **kw)`` (DESIGN.md §12).
+        The servable inherits this model's backend and re-seeds the
+        process-wide autotuner cache from ``tuned``, so the server runs the
+        fit's kernel-engine winner without re-searching.  Load it (or the
+        model directly) with ``ClusterServer.load``."""
+        from repro.serve.servable import ServableClusterModel
+
+        return ServableClusterModel(self, **kw)
+
     # -- persistence -------------------------------------------------------
     def save(self, directory: str, *, step: int = 0) -> str:
         """Atomically persist the artifact; returns the committed path."""

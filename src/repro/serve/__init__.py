@@ -1,4 +1,43 @@
-from repro.serve.engine import (make_prefill_fn, make_decode_fn, ServeLoop,
-                                ClusterEngine)
+"""``repro.serve`` — the serving plane over fitted clustering artifacts.
 
-__all__ = ["make_prefill_fn", "make_decode_fn", "ServeLoop", "ClusterEngine"]
+Two layers (DESIGN.md §12):
+
+  * :class:`ClusterEngine` (engine.py) — the in-process serving object:
+    classify/refit against a frozen MeanIndex, one caller at a time; its
+    ``refit`` streams DocStores chunk by chunk and its ``serve()`` lifts
+    the artifact into the service below.
+  * :class:`ClusterServer` (server.py) — the continuous-batching classify
+    *service*: per-model request queues and batching threads
+    (batching.py), padded batch-size buckets so every launch hits a
+    compiled shape (servable.py), ``max_live_batches`` admission control,
+    one async device thread decoupled from pre/post-processing workers,
+    and a :class:`ModelRegistry` (registry.py) hosting several
+    FittedModels on one device with load/unload and zero-downtime
+    hot-swap after a refit.
+
+The LM template surfaces (``ServeLoop``/``make_prefill_fn``/
+``make_decode_fn``) moved to :mod:`repro.serve.lm` and load lazily: simply
+importing ``repro.serve`` no longer imports ``repro.models`` (the
+clustering plane has no LM dependency — DESIGN.md §11).
+"""
+from repro.serve.batching import ClassifyFuture, ServerClosed
+from repro.serve.engine import ClusterEngine
+from repro.serve.registry import ModelRegistry
+from repro.serve.servable import ServableClusterModel
+from repro.serve.server import ClusterServer
+
+_LM_NAMES = ("make_prefill_fn", "make_decode_fn", "ServeLoop")
+
+__all__ = ["ClassifyFuture", "ClusterEngine", "ClusterServer",
+           "ModelRegistry", "ServableClusterModel", "ServerClosed",
+           *_LM_NAMES]
+
+
+def __getattr__(name):
+    # Lazy LM surface: pulled in only when actually requested, so the
+    # cluster serving plane never drags repro.models into the process.
+    if name in _LM_NAMES:
+        import repro.serve.lm as _lm
+
+        return getattr(_lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,23 +1,22 @@
-"""Serving engines: LM prefill/decode steps and cluster classification.
+"""Cluster serving engine: classify/refit against a frozen MeanIndex.
 
-LM shapes contract (matches the assigned input-shape grid):
-  prefill_*  → prefill_fn(params, tokens (B, S))            -> logits (B, V)
-  decode_* / long_* → decode_fn(params, cache, tok (B,1), pos) -> (logits, cache)
+:class:`ClusterEngine` is the k-means serving runtime: a frozen
+mean-inverted index served as a lookup service, with the assignment
+accumulators produced by a pluggable backend (core/backends.py) — the same
+engine the Lloyd loop uses, and the same fused classify path
+(repro/cluster/classify.py) behind ``SphericalKMeans.predict``.  ``refit``
+treats index (re)construction as a first-class serving operation (the SIVF
+companion paper's stance): one backend-owned update phase rebuilds the
+frozen index from a fresh corpus — resident SparseDocs or a chunk-streamed
+DocStore — without a full training fit.  ``ClusterEngine.from_model(model)``
+/ ``engine.to_model()`` close the train→serve→refit loop on the one
+:class:`repro.cluster.FittedModel` artifact, and ``engine.serve()`` lifts
+the artifact into the continuous-batching service plane
+(serve/server.py, DESIGN.md §12).
 
-The decode cache is pre-allocated at seq_len (rotating window caches stay at
-min(window, seq_len)); the dry-run lowers decode_fn against cache_specs, so
-full-size caches are never allocated on the host.
-
-:class:`ClusterEngine` is the k-means analogue: a frozen mean-inverted index
-served as a lookup service, with the assignment accumulators produced by a
-pluggable backend (core/backends.py) — the same engine the Lloyd loop uses,
-and the same fused classify path (repro/cluster/classify.py) behind
-``SphericalKMeans.predict``.  ``refit`` treats index (re)construction as a
-first-class serving operation (the SIVF companion paper's stance): one
-backend-owned update phase rebuilds the frozen index from a fresh corpus
-without a full training fit.  ``ClusterEngine.from_model(model)`` /
-``engine.to_model()`` close the train→serve→refit loop on the one
-:class:`repro.cluster.FittedModel` artifact.
+The LM template surfaces (``ServeLoop``/``make_prefill_fn``/
+``make_decode_fn``) live in :mod:`repro.serve.lm`; this module imports no
+``repro.models`` code.
 """
 from __future__ import annotations
 
@@ -27,25 +26,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.models import forward, decode_forward, init_cache
-from repro.models.config import ModelConfig
-from repro.models.transformer import _logits
-
-
-def make_prefill_fn(cfg: ModelConfig):
-    def prefill(params, tokens, frontend_embeds=None):
-        h = forward(params, tokens, cfg, frontend_embeds=frontend_embeds,
-                    remat=False)
-        logits = _logits(params, h[:, -1:, :], cfg)      # next-token head only
-        return logits[:, 0, :cfg.vocab]
-    return prefill
-
-
-def make_decode_fn(cfg: ModelConfig):
-    def decode(params, cache, token, pos):
-        return decode_forward(params, cache, token, pos, cfg)
-    return decode
 
 
 def _classify_fused(backend, ids, vals, nnz, dim, index, bs):
@@ -75,6 +55,42 @@ def _rebuild_index(backend: str, ids, vals, nnz, assign, dim: int, index,
     rebuilt = build_mean_index(means, index.params)
     rho = bk.self_sims(ids, mvals, assign, rebuilt.means_t)
     return rebuilt, rho
+
+
+@partial(jax.jit, static_argnames=("backend", "k", "dim", "bs"))
+def _refit_chunk_accumulate(backend: str, ids, vals, nnz, valid, dim: int,
+                            index, bs: int, k: int, lam):
+    """One streaming-refit chunk: classify vs the pre-round index, mask the
+    dead tail (assign = K selects no centroid column in either backend's
+    accumulator), fold the chunk's cluster sums into the running λ."""
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    a, _ = _classify_fused(backend, ids, vals, nnz, dim, index, bs)
+    a = jnp.where(valid, a, k)
+    live = jnp.arange(ids.shape[1])[None, :] < nnz[:, None]
+    mvals = jnp.where(live, vals, 0.0)
+    return a, bk.accumulate_means(ids, mvals, a, k=k, dim=dim, init=lam)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _refit_chunk_rho(backend: str, ids, vals, nnz, assign, means_t):
+    """ρ refresh for one chunk vs the *rebuilt* means (Alg. 6 lines 6–7)."""
+    from repro.core.backends import resolve_backend
+
+    bk = resolve_backend(backend)
+    live = jnp.arange(ids.shape[1])[None, :] < nnz[:, None]
+    return bk.self_sims(ids, jnp.where(live, vals, 0.0), assign, means_t)
+
+
+@jax.jit
+def _rebuild_from_sums(lam, index):
+    """λ (K, D) cluster sums → fresh MeanIndex (empty clusters keep their
+    previous unit-norm centroid, the streaming twin of _rebuild_index)."""
+    from repro.core.meanindex import build_mean_index, normalized_means
+
+    return build_mean_index(normalized_means(lam, index.means_t),
+                            index.params)
 
 
 class ClusterEngine:
@@ -155,6 +171,23 @@ class ClusterEngine:
         return FittedModel(index=self.index, labels=labels, rho_self=rho,
                            backend=self.backend, strategy="serving")
 
+    def serve(self, *, name: str = "default", **server_kw):
+        """Lift this engine's artifact into a running continuous-batching
+        :class:`repro.serve.ClusterServer` hosting it under ``name``
+        (DESIGN.md §12).  Extra kwargs reach the server constructor
+        (``max_live_batches``, ``batch_timeout_s``, …); the servable
+        inherits this engine's backend and batch ceiling.  Callers own the
+        returned server's lifecycle (``close()`` / context manager)."""
+        from repro.serve.server import ClusterServer
+
+        server = ClusterServer(**server_kw)
+        try:
+            server.load(name, self.to_model(), backend=self.backend)
+        except BaseException:
+            server.close()
+            raise
+        return server
+
     def classify(self, docs):
         """docs: SparseDocs | DocStore -> (assign (N,) int32, sims (N,)).
 
@@ -173,6 +206,13 @@ class ClusterEngine:
         reconstruction): classify → backend-owned update phase (cluster
         sums, L2 normalise, index rebuild) — per round.
 
+        ``docs`` may be a resident SparseDocs or an out-of-core
+        :class:`repro.sparse.DocStore`: a store streams chunk by chunk
+        (classify + λ accumulation per chunk, ONE index rebuild per round,
+        then a ρ-refresh pass vs the rebuilt means) exactly like
+        ``classify`` already does, so a refit corpus need not fit on the
+        device either.
+
         Empty clusters keep their previous centroid, so a small refit batch
         cannot wipe out the index.  Returns (assign (N,) int32, rho (N,)
         float32): ``assign`` is the membership the final rebuild consumed
@@ -182,7 +222,10 @@ class ClusterEngine:
         assignment as its pruning threshold.
         """
         from repro.sparse import pad_rows
+        from repro.sparse.store import DocStore
 
+        if isinstance(docs, DocStore):
+            return self._refit_store(docs, n_iter=n_iter)
         if docs.n_docs == 0:
             raise ValueError("refit needs a non-empty corpus")
         bs = min(self.batch_size, docs.n_docs)
@@ -203,29 +246,45 @@ class ClusterEngine:
         self._last_rho = np.asarray(rho)[:n]
         return self._last_assign, self._last_rho
 
+    def _refit_store(self, store, *, n_iter: int = 1):
+        """Chunk-streamed refit over a DocStore: per round, one prefetched
+        pass classifies each chunk against the pre-round index and folds its
+        cluster sums into λ on device; the index rebuilds ONCE from the full
+        λ; a second prefetched pass refreshes ρ against the rebuilt means.
+        Between the passes only the per-document assignment (4 bytes/doc)
+        stays on the host — chunks never pile up on device.  Chunk-order
+        independent by construction (λ accumulation commutes), and
+        bitwise-identical to the resident ``refit`` for a one-chunk store
+        (parity-tested in tests/test_serving.py)."""
+        from repro.cluster.classify import _store_tiles
+        from repro.sparse.store import ChunkPrefetcher
 
-class ServeLoop:
-    """Minimal batched serving driver (greedy) for the runnable examples."""
-
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 256):
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self._prefill = jax.jit(make_prefill_fn(cfg))
-        self._decode = jax.jit(make_decode_fn(cfg))
-
-    def generate(self, prompts: jnp.ndarray, n_new: int = 16):
-        """prompts: (B, S0) int32 -> (B, S0 + n_new) greedy continuation."""
-        b, s0 = prompts.shape
-        cache = init_cache(self.cfg, b, self.max_len)
-        # teacher-forced cache warmup via the decode path (exact, if slow);
-        # a fused prefill-with-cache is the §Perf hillclimb variant.
-        tok = prompts[:, :1]
-        out = [prompts]
-        for pos in range(s0 + n_new - 1):
-            logits, cache = self._decode(self.params, cache, tok, jnp.asarray(pos))
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            tok = prompts[:, pos + 1:pos + 2] if pos + 1 < s0 else nxt
-            if pos + 1 >= s0:
-                out.append(nxt)
-        return jnp.concatenate(out, axis=1)
+        if store.n_docs == 0:
+            raise ValueError("refit needs a non-empty corpus")
+        k, n = self.index.k, store.n_docs
+        bs, padder = _store_tiles(store, self.batch_size)
+        assigns = None
+        for _ in range(max(n_iter, 1)):
+            lam = jnp.zeros((k, self.index.dim), jnp.float32)
+            chunk_assign = []           # host-side (padded-C,) per chunk
+            for ci, cdocs in ChunkPrefetcher(store):
+                cdocs = padder(cdocs)
+                valid = np.zeros((cdocs.n_docs,), bool)
+                valid[:store.chunk_size] = store.chunk_valid(ci)
+                a, lam = _refit_chunk_accumulate(
+                    self.backend, cdocs.ids, cdocs.vals, cdocs.nnz,
+                    jnp.asarray(valid), store.dim, self.index, bs, k, lam)
+                chunk_assign.append(np.asarray(a))
+            self.index = _rebuild_from_sums(lam, self.index)
+            assigns, rhos = [], []
+            for ci, cdocs in ChunkPrefetcher(store):
+                cdocs = padder(cdocs)
+                a = chunk_assign[ci]
+                rho = _refit_chunk_rho(self.backend, cdocs.ids, cdocs.vals,
+                                       cdocs.nnz, jnp.asarray(a),
+                                       self.index.means_t)
+                assigns.append(a[:store.chunk_size])
+                rhos.append(np.asarray(rho)[:store.chunk_size])
+        self._last_assign = np.concatenate(assigns)[:n]
+        self._last_rho = np.concatenate(rhos)[:n]
+        return self._last_assign, self._last_rho

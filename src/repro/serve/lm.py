@@ -1,0 +1,67 @@
+"""LM serving surfaces: prefill/decode step builders and the greedy loop.
+
+These are the seed template's language-model serving pieces (DESIGN.md §11
+"out-of-scope seed-template surfaces"), split out of the cluster serving
+path so that ``import repro.serve`` never pulls in ``repro.models``: the
+clustering plane (engine/servable/batching/registry/server) has no LM
+dependency, and this module is only imported when one of the three LM names
+is actually requested (lazy ``__getattr__`` in ``repro/serve/__init__.py``).
+
+LM shapes contract (matches the assigned input-shape grid):
+  prefill_*  → prefill_fn(params, tokens (B, S))            -> logits (B, V)
+  decode_* / long_* → decode_fn(params, cache, tok (B,1), pos) -> (logits, cache)
+
+The decode cache is pre-allocated at seq_len (rotating window caches stay at
+min(window, seq_len)); the dry-run lowers decode_fn against cache_specs, so
+full-size caches are never allocated on the host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, decode_forward, init_cache
+from repro.models.config import ModelConfig
+from repro.models.transformer import _logits
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def prefill(params, tokens, frontend_embeds=None):
+        h = forward(params, tokens, cfg, frontend_embeds=frontend_embeds,
+                    remat=False)
+        logits = _logits(params, h[:, -1:, :], cfg)      # next-token head only
+        return logits[:, 0, :cfg.vocab]
+    return prefill
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode(params, cache, token, pos):
+        return decode_forward(params, cache, token, pos, cfg)
+    return decode
+
+
+class ServeLoop:
+    """Minimal batched serving driver (greedy) for the runnable examples."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_fn(cfg))
+        self._decode = jax.jit(make_decode_fn(cfg))
+
+    def generate(self, prompts: jnp.ndarray, n_new: int = 16):
+        """prompts: (B, S0) int32 -> (B, S0 + n_new) greedy continuation."""
+        b, s0 = prompts.shape
+        cache = init_cache(self.cfg, b, self.max_len)
+        # teacher-forced cache warmup via the decode path (exact, if slow);
+        # a fused prefill-with-cache is the §Perf hillclimb variant.
+        tok = prompts[:, :1]
+        out = [prompts]
+        for pos in range(s0 + n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok, jnp.asarray(pos))
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            tok = prompts[:, pos + 1:pos + 2] if pos + 1 < s0 else nxt
+            if pos + 1 >= s0:
+                out.append(nxt)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,74 @@
+"""Model registry: several FittedModels hosted on one device, hot-swappable.
+
+The saxml ``ServableModel`` hosting story reduced to its essentials: a
+name → :class:`~repro.serve.servable.ServableClusterModel` map with
+
+  * ``load`` / ``unload`` — admit / retire a model;
+  * ``get`` — the batching thread's per-batch snapshot read;
+  * ``swap`` — **zero-downtime hot-swap**: atomically replace the servable
+    behind a name (e.g. after ``ClusterEngine.refit`` produced a rebuilt
+    index).  The replacement is one reference assignment under the registry
+    lock, so a reader sees either the old servable or the new one, never a
+    torn mix; batches already assembled keep their reference to the old
+    servable and complete against the pre-swap index (batching.py).
+
+Swapping same-geometry models (same dim/K/buckets/backend) costs zero
+recompiles: the jitted classify epoch takes the index as a traced argument
+(servable.py), so the new means hit the existing executable.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.serve.servable import ServableClusterModel
+
+
+class ModelRegistry:
+    """Thread-safe name → servable map with atomic replacement."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._models: dict[str, ServableClusterModel] = {}
+
+    def _missing(self, name: str) -> KeyError:
+        return KeyError(f"no model {name!r} is loaded; "
+                        f"serving: {sorted(self._models) or '(none)'}")
+
+    def load(self, name: str, servable: ServableClusterModel):
+        with self._lock:
+            if name in self._models:
+                raise ValueError(f"model {name!r} is already loaded; use "
+                                 f"swap() to replace it atomically")
+            self._models[name] = servable
+
+    def unload(self, name: str) -> ServableClusterModel:
+        with self._lock:
+            if name not in self._models:
+                raise self._missing(name)
+            return self._models.pop(name)
+
+    def get(self, name: str) -> ServableClusterModel:
+        with self._lock:
+            try:
+                return self._models[name]
+            except KeyError:
+                raise self._missing(name) from None
+
+    def swap(self, name: str,
+             servable: ServableClusterModel) -> ServableClusterModel:
+        """Atomically route new batches for ``name`` to ``servable``;
+        returns the previous servable (still referenced by any in-flight
+        batches, which finish against it)."""
+        with self._lock:
+            if name not in self._models:
+                raise self._missing(name)
+            old, self._models[name] = self._models[name], servable
+            return old
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._models

@@ -1,0 +1,205 @@
+"""ServableClusterModel: a FittedModel prepared for continuous batching.
+
+The saxml ``ServableMethod``/``ServableModel`` shape (DESIGN.md §12): a
+servable owns the three stages a request batch moves through —
+
+  * ``pre_process``  — host-side: coalesce request rows, fit them to the
+    servable's static tuple width, pick a padded batch-size *bucket* from
+    ``sorted_batch_sizes`` (``get_padded_batch_size``-style selection) and
+    pad with dead rows, so every device launch hits a shape that is already
+    compiled after its first use;
+  * ``device_compute`` — the jitted fused classify epoch (the SAME
+    ``repro/cluster/classify._classify_fused`` behind ``predict`` and
+    ``ClusterEngine.classify``, so server results are bit-identical to the
+    direct path by construction).  Dispatch is async: the call returns
+    device arrays without a host sync, which is what lets one device thread
+    stay ahead of the post-processing workers;
+  * ``post_process`` — host-side: block on the device result, trim the
+    dead-row padding, split back per request.
+
+Compile discipline: ``_serving_classify`` wraps the fused epoch in one
+module-level jit whose trace-time side effect counts compilations per
+(backend, dim, K, bucket).  Hot-swapping a refreshed index of the same
+geometry therefore costs ZERO recompiles (the index is a traced argument),
+and the serving benchmark ratchets per-bucket compile counts
+(benchmarks/ratchet.py check_serving: no steady-state recompilation).
+
+The servable also re-seeds the process-wide autotuner cache from the
+artifact's ``tuned`` winner (repro.tune), so the serving plane inherits the
+fit-time kernel configuration without re-searching.
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BATCH_SIZES = (8, 16, 32, 64, 128, 256)
+
+# (backend, dim, K, bucket) -> number of jit traces.  The body of a jitted
+# function runs exactly once per compilation, so incrementing here counts
+# real (re)compiles — the serving ratchet's ground truth.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+_TRACE_LOCK = threading.Lock()
+
+
+@partial(jax.jit, static_argnames=("backend", "dim", "bs"))
+def _serving_classify(backend: str, ids, vals, nnz, dim: int, index, bs: int):
+    from repro.cluster.classify import _classify_fused
+
+    with _TRACE_LOCK:
+        TRACE_COUNTS[(backend, dim, int(index.means_t.shape[1]), bs)] += 1
+    return _classify_fused(backend, ids, vals, nnz, dim, index, bs)
+
+
+class PreparedBatch:
+    """One pre-processed request batch, ready for the device thread."""
+
+    __slots__ = ("ids", "vals", "nnz", "n_rows", "bucket")
+
+    def __init__(self, ids, vals, nnz, n_rows: int, bucket: int):
+        self.ids, self.vals, self.nnz = ids, vals, nnz
+        self.n_rows = n_rows              # live rows (<= bucket)
+        self.bucket = bucket              # padded batch size actually run
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_rows / self.bucket
+
+
+class ServableClusterModel:
+    """A FittedModel wrapped for the continuous-batching service plane.
+
+    model:       the :class:`repro.cluster.FittedModel` artifact to serve.
+    batch_sizes: the padded batch-size buckets, any order (stored sorted
+                 ascending as ``sorted_batch_sizes``); the largest bucket is
+                 the per-launch row ceiling.
+    pad_width:   static tuple width P every request is fitted to.  ``None``
+                 (default) locks to the first batch's width; requests with
+                 live tuples beyond the locked width fail with an error
+                 naming the construction-time fix.
+    backend:     accumulator engine override (defaults to the artifact's).
+    """
+
+    def __init__(self, model, *, batch_sizes=DEFAULT_BATCH_SIZES,
+                 pad_width: int | None = None, backend: str | None = None):
+        from repro.core.backends import resolve_backend
+
+        sizes = tuple(sorted({int(b) for b in batch_sizes}))
+        if not sizes or sizes[0] < 1:
+            raise ValueError(f"batch_sizes must be positive, got {batch_sizes}")
+        self.model = model
+        self.index = model.index
+        self.sorted_batch_sizes = sizes
+        self.backend = backend or model.backend
+        resolve_backend(self.backend)
+        self._pad_width = None if pad_width is None else int(pad_width)
+        self.dim = int(self.index.dim)
+        self.k = int(self.index.k)
+        # Serving inherits the fit's autotuned kernel config: reseed the
+        # process-wide cache from the artifact (the same reseed
+        # FittedModel.load performs — repeated here so in-memory hand-offs
+        # fit→serve get it too).
+        tuned = getattr(model, "tuned", None)
+        if tuned and tuned.get("signature"):
+            from repro.tune import TUNED_CACHE, TunedConfig
+
+            TUNED_CACHE.put(tuned["signature"], TunedConfig.from_dict(tuned))
+
+    # -- bucket selection ---------------------------------------------------
+    @property
+    def max_batch_size(self) -> int:
+        return self.sorted_batch_sizes[-1]
+
+    @property
+    def pad_width(self) -> int | None:
+        return self._pad_width
+
+    def get_padded_batch_size(self, n_rows: int) -> int:
+        """Smallest bucket >= n_rows (the saxml selection rule).  The
+        batcher never assembles past ``max_batch_size``, so a larger n is a
+        caller bug and raises."""
+        if n_rows < 1:
+            raise ValueError(f"n_rows must be >= 1, got {n_rows}")
+        i = bisect.bisect_left(self.sorted_batch_sizes, n_rows)
+        if i == len(self.sorted_batch_sizes):
+            raise ValueError(
+                f"{n_rows} rows exceed the largest bucket "
+                f"{self.max_batch_size}; split the request or construct the "
+                f"servable with a larger batch_sizes ceiling")
+        return self.sorted_batch_sizes[i]
+
+    # -- the three stages -----------------------------------------------------
+    def _fit_width(self, ids, vals, nnz):
+        """Fit (r, P_in) rows to the servable's static width (host-side)."""
+        p_in = ids.shape[1]
+        if self._pad_width is None:
+            self._pad_width = p_in
+        p = self._pad_width
+        if p_in == p:
+            return ids, vals
+        if p_in < p:
+            wide_i = np.zeros((ids.shape[0], p), np.int32)
+            wide_v = np.zeros((ids.shape[0], p), np.float32)
+            wide_i[:, :p_in], wide_v[:, :p_in] = ids, vals
+            return wide_i, wide_v
+        if int(nnz.max(initial=0)) > p:
+            raise ValueError(
+                f"request rows carry up to {int(nnz.max())} live tuples but "
+                f"this servable is locked to pad_width={p}; construct it "
+                f"with pad_width>={int(nnz.max())}")
+        # Rows are prefix-packed (live tuples occupy slots [0, nnz)), so a
+        # narrowing slice only drops dead padding.
+        return ids[:, :p], vals[:, :p]
+
+    def pre_process(self, rows) -> PreparedBatch:
+        """rows: list of (ids (r_i, P_i) int32, vals (r_i, P_i) float32,
+        nnz (r_i,) int32) numpy triples (one per request) → PreparedBatch
+        padded to the selected bucket with dead rows (nnz = 0, the repo-wide
+        inert-row convention)."""
+        fitted = [self._fit_width(np.asarray(i, np.int32),
+                                  np.asarray(v, np.float32),
+                                  np.asarray(z, np.int32)) + (np.asarray(z, np.int32),)
+                  for i, v, z in rows]
+        ids = np.concatenate([f[0] for f in fitted])
+        vals = np.concatenate([f[1] for f in fitted])
+        nnz = np.concatenate([f[2] for f in fitted])
+        n = ids.shape[0]
+        bucket = self.get_padded_batch_size(n)
+        if n < bucket:
+            pad = bucket - n
+            ids = np.concatenate([ids, np.zeros((pad, ids.shape[1]), np.int32)])
+            vals = np.concatenate([vals,
+                                   np.zeros((pad, vals.shape[1]), np.float32)])
+            nnz = np.concatenate([nnz, np.zeros((pad,), np.int32)])
+        return PreparedBatch(ids, vals, nnz, n, bucket)
+
+    def device_compute(self, batch: PreparedBatch):
+        """Launch the fused classify epoch for one prepared batch.  Returns
+        the (assign, sims) DEVICE arrays without a host sync — jax dispatch
+        is async, so the device thread moves on to the next batch while this
+        one computes."""
+        return _serving_classify(self.backend, jnp.asarray(batch.ids),
+                                 jnp.asarray(batch.vals),
+                                 jnp.asarray(batch.nnz), self.dim,
+                                 self.index, batch.bucket)
+
+    def post_process(self, out, n_rows: int):
+        """Block on the device result and trim the dead-row padding."""
+        a, s = out
+        return (np.asarray(a)[:n_rows].astype(np.int32),
+                np.asarray(s)[:n_rows].astype(np.float32))
+
+    # -- introspection --------------------------------------------------------
+    def compile_counts(self) -> dict[int, int]:
+        """{bucket: jit traces} for this servable's geometry.  Steady-state
+        serving must keep every bucket at <= 1 (ratcheted by
+        ``check_serving``); a hot-swap of same-geometry means costs zero."""
+        with _TRACE_LOCK:
+            return {b: TRACE_COUNTS[(self.backend, self.dim, self.k, b)]
+                    for b in self.sorted_batch_sizes}

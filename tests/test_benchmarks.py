@@ -96,3 +96,41 @@ def test_time_call_warm_excludes_first_call():
     assert out == 3
     assert warmup >= 0.05
     assert best < warmup               # steady-state excludes the warmup
+
+
+def test_serving_suite_registered():
+    names = [n for n, _ in SUITES]
+    assert "serving" in names
+    assert JSON_SUITES["serving"] == "BENCH_serving.json"
+
+
+def test_check_serving_gates():
+    """The serving ratchet passes a healthy artifact and fails each broken
+    invariant: dropped requests, parity break, implausible percentiles,
+    zero throughput, admission breach, occupancy > 1, steady-state
+    recompilation, post-swap recompiles."""
+    from benchmarks.ratchet import check_serving
+
+    good = [
+        {"name": "serving/latency", "qps": 100.0, "p50_ms": 1.0,
+         "p99_ms": 5.0, "n_failures": 0, "parity": True,
+         "peak_live_batches": 2, "max_live_batches": 4, "n_requests": 10},
+        {"name": "serving/bucket32", "mean_occupancy": 0.8, "compiles": 1},
+        {"name": "serving/swap", "recompiles_after_warm": 0},
+    ]
+    assert check_serving([dict(r) for r in good]) == 0
+    breakages = [
+        lambda r: r[0].update(n_failures=1),
+        lambda r: r[0].update(parity=False),
+        lambda r: r[0].update(p99_ms=0.5),
+        lambda r: r[0].update(qps=0.0),
+        lambda r: r[0].update(peak_live_batches=9),
+        lambda r: r[1].update(mean_occupancy=1.2),
+        lambda r: r[1].update(compiles=2),
+        lambda r: r[2].update(recompiles_after_warm=3),
+    ]
+    for mutate in breakages:
+        rows = [dict(r) for r in good]
+        mutate(rows)
+        assert check_serving(rows) == 1
+    assert check_serving([dict(r) for r in good[:1]]) == 1  # no bucket rows

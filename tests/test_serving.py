@@ -1,0 +1,385 @@
+"""Serving-plane tests: buckets, batching, hot-swap, parity (DESIGN.md §12).
+
+Covers the continuous-batching service over FittedModel artifacts:
+
+  * bucket selection picks the smallest padded size >= the request;
+  * server-path results are bit-identical to ``ClusterEngine.classify``;
+  * hot-swap atomicity — no request observes a torn index, in-flight
+    batches complete on the pre-swap index while new traffic routes to the
+    new one with zero recompiles;
+  * admission control backpressures at ``max_live_batches``;
+  * ``ClusterEngine.refit`` streams DocStores chunk by chunk (bitwise equal
+    to the resident refit for a one-chunk store);
+  * ``import repro.serve`` stays free of ``repro.models`` (lazy LM split).
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterEngine, fit
+from repro.data import CorpusSpec, make_corpus
+from repro.serve import ClusterServer, ModelRegistry, ServableClusterModel
+from repro.serve.batching import ServerClosed
+from repro.sparse import DocStore, SparseDocs
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(docs, df, modelA, modelB): two same-geometry artifacts with
+    genuinely different means (different init seeds), so hot-swap tests can
+    tell which index served a request."""
+    docs, df, perm, topics = make_corpus(
+        CorpusSpec(n_docs=420, vocab=256, nt_mean=15, n_topics=8, seed=3))
+    model_a = fit(docs, ClusterConfig(k=8, max_iter=8, batch_size=420,
+                                      seed=1), df=df)
+    model_b = fit(docs, ClusterConfig(k=8, max_iter=2, batch_size=420,
+                                      seed=7), df=df)
+    return docs, df, model_a, model_b
+
+
+def _rows(docs, lo=None, hi=None):
+    ids = np.asarray(docs.ids)[lo:hi]
+    vals = np.asarray(docs.vals)[lo:hi]
+    nnz = np.asarray(docs.nnz)[lo:hi]
+    return ids, vals, nnz
+
+
+# ---------------------------------------------------------------------------
+# Bucket selection (get_padded_batch_size over sorted_batch_sizes).
+# ---------------------------------------------------------------------------
+
+def test_bucket_selection_smallest_geq(served):
+    _, _, model, _ = served
+    sv = model.servable(batch_sizes=(64, 8, 16))     # any order in
+    assert sv.sorted_batch_sizes == (8, 16, 64)
+    assert sv.max_batch_size == 64
+    for n, want in [(1, 8), (8, 8), (9, 16), (16, 16), (17, 64), (64, 64)]:
+        assert sv.get_padded_batch_size(n) == want
+    with pytest.raises(ValueError, match="largest bucket"):
+        sv.get_padded_batch_size(65)
+    with pytest.raises(ValueError):
+        sv.get_padded_batch_size(0)
+    with pytest.raises(ValueError):
+        ServableClusterModel(model, batch_sizes=())
+
+
+def test_pre_process_pads_with_dead_rows(served):
+    docs, _, model, _ = served
+    sv = model.servable(batch_sizes=(8, 32))
+    batch = sv.pre_process([_rows(docs, 0, 5), _rows(docs, 5, 14)])
+    assert (batch.n_rows, batch.bucket) == (14, 32)
+    assert batch.occupancy == pytest.approx(14 / 32)
+    assert (batch.nnz[14:] == 0).all() and (batch.vals[14:] == 0).all()
+    a, s = sv.post_process(sv.device_compute(batch), batch.n_rows)
+    assert a.shape == s.shape == (14,)
+
+
+def test_pad_width_lock_widens_and_rejects(served):
+    docs, _, model, _ = served
+    p = np.asarray(docs.ids).shape[1]
+    sv = model.servable(pad_width=p)
+    ids, vals, nnz = _rows(docs, 0, 4)
+    narrow = (ids[:, :10], vals[:, :10], np.minimum(nnz, 10))
+    batch = sv.pre_process([narrow])                 # narrower rows widen
+    assert batch.ids.shape[1] == p
+    wide = ServableClusterModel(model, pad_width=4)  # live tuples beyond 4
+    assert nnz.max() > 4
+    with pytest.raises(ValueError, match="pad_width"):
+        wide.pre_process([(ids, vals, nnz)])
+
+
+# ---------------------------------------------------------------------------
+# Server-path classify parity (bit-identical to the direct engine path).
+# ---------------------------------------------------------------------------
+
+def test_server_classify_parity_bit_identical(served):
+    docs, _, model, _ = served
+    a_ref, s_ref = ClusterEngine.from_model(model).classify(docs)
+    with ClusterServer(max_live_batches=2) as srv:
+        srv.load("m", model, batch_sizes=(16, 64, 128))
+        # Whole corpus: 420 rows > max bucket 128 → split into one future's
+        # parts, reassembled in request order.
+        a, s = srv.classify("m", _rows(docs))
+        assert (a == a_ref).all()
+        np.testing.assert_allclose(s, s_ref, rtol=1e-6, atol=1e-6)
+        # Odd-sized slices exercise every bucket.
+        for lo, hi in [(0, 1), (3, 20), (17, 130), (100, 101)]:
+            a, s = srv.classify("m", _rows(docs, lo, hi))
+            assert (a == a_ref[lo:hi]).all()
+
+
+def test_server_concurrent_clients_parity_and_occupancy(served):
+    docs, _, model, _ = served
+    a_ref, _ = ClusterEngine.from_model(model).classify(docs)
+    results = {}
+    with ClusterServer(max_live_batches=3, batch_timeout_s=0.005) as srv:
+        srv.load("m", model)
+
+        def client(i):
+            lo = (i * 31) % 300
+            hi = lo + 1 + (i % 70)
+            results[i] = (lo, hi, srv.classify("m", _rows(docs, lo, hi)))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats("m")
+    assert all((r[2][0] == a_ref[r[0]:r[1]]).all() for r in results.values())
+    assert stats["n_failures"] == 0
+    assert stats["n_requests"] == 16
+    assert stats["peak_live_batches"] <= 3
+    for row in stats["occupancy"].values():
+        assert 0.0 < row["mean_occupancy"] <= 1.0
+
+
+def test_compile_counts_no_steady_state_recompilation(served):
+    docs, _, model, _ = served
+    with ClusterServer() as srv:
+        srv.load("m", model, batch_sizes=(32,))
+        for _ in range(5):
+            srv.classify("m", _rows(docs, 0, 20))
+        counts = srv.stats("m")["compile_counts"]
+    # One trace on first use, then cache hits forever.
+    assert counts == {"32": 1}
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap atomicity and zero-downtime.
+# ---------------------------------------------------------------------------
+
+class _SlowPost(ServableClusterModel):
+    """Servable whose post-processing blocks until released — pins a batch
+    in flight so tests can interleave a swap deterministically."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def post_process(self, out, n_rows):
+        self.entered.set()
+        assert self.release.wait(30), "test never released the slow batch"
+        return super().post_process(out, n_rows)
+
+
+def test_hot_swap_in_flight_completes_on_old_index(served):
+    docs, _, model_a, model_b = served
+    a_old, _ = ClusterEngine.from_model(model_a).classify(docs)
+    a_new, _ = ClusterEngine.from_model(model_b).classify(docs)
+    assert (a_old != a_new).any(), "refit must move some assignment"
+    slow_a = _SlowPost(model_a)
+    with ClusterServer(max_live_batches=2, n_post_workers=2) as srv:
+        srv.load("m", slow_a)
+        fut1 = srv.submit("m", _rows(docs, 0, 50))
+        assert slow_a.entered.wait(30)          # batch 1 is in flight
+        old = srv.swap("m", model_b)            # atomic re-route
+        assert old is slow_a
+        # Zero-downtime: new traffic completes on the NEW index while the
+        # old batch is still pinned in post-processing.
+        a2, _ = srv.submit("m", _rows(docs, 0, 50)).result(timeout=60)
+        assert (a2 == a_new[:50]).all()
+        assert not fut1.done()
+        slow_a.release.set()
+        a1, _ = fut1.result(timeout=60)
+        assert (a1 == a_old[:50]).all()         # pre-swap index, untorn
+        assert srv.stats("m")["n_failures"] == 0
+
+
+def test_hot_swap_same_geometry_zero_recompiles(served):
+    docs, _, model_a, model_b = served
+    import repro.serve.servable as sv_mod
+
+    with ClusterServer() as srv:
+        srv.load("m", model_a, batch_sizes=(64,))
+        srv.classify("m", _rows(docs, 0, 40))   # compile the one bucket
+        before = dict(sv_mod.TRACE_COUNTS)
+        srv.swap("m", model_b, batch_sizes=(64,))
+        srv.classify("m", _rows(docs, 0, 40))
+        after = dict(sv_mod.TRACE_COUNTS)
+    assert after == before, "same-geometry hot-swap must not recompile"
+
+
+def test_swap_during_traffic_no_torn_results(served):
+    """Every response under a mid-stream swap equals full-A or full-B —
+    never a mix (the registry read is one atomic reference)."""
+    docs, _, model_a, model_b = served
+    a_old, _ = ClusterEngine.from_model(model_a).classify(docs)
+    a_new, _ = ClusterEngine.from_model(model_b).classify(docs)
+    failures, torn = [], []
+    with ClusterServer(max_live_batches=2, batch_timeout_s=0.001) as srv:
+        srv.load("m", model_a)
+
+        def client(i):
+            lo = (i * 13) % 350
+            hi = lo + 1 + (i % 60)
+            try:
+                a, _ = srv.classify("m", _rows(docs, lo, hi))
+            except BaseException as e:          # hot-swap must not fail reqs
+                failures.append(e)
+                return
+            if not ((a == a_old[lo:hi]).all() or (a == a_new[lo:hi]).all()):
+                torn.append(i)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(24)]
+        for t in threads[:12]:
+            t.start()
+        srv.swap("m", model_b)
+        for t in threads[12:]:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not failures and not torn
+
+
+# ---------------------------------------------------------------------------
+# Admission control / backpressure.
+# ---------------------------------------------------------------------------
+
+def test_admission_control_backpressure(served):
+    docs, _, model, _ = served
+    # 5-row requests against an 8-row bucket: no two coalesce, so every
+    # request is its own batch and the single live slot throttles them.
+    slow = _SlowPost(model, batch_sizes=(8,))
+    with ClusterServer(max_live_batches=1, queue_depth=1,
+                       batch_timeout_s=0.0, n_post_workers=1) as srv:
+        srv.load("m", slow)
+        futs = [srv.submit("m", _rows(docs, 0, 5))]
+        assert slow.entered.wait(30)            # batch 1 holds the one slot
+        # The batcher can absorb at most one assembled-but-slotless batch
+        # plus one carried request; after that the depth-1 queue stays full
+        # and non-blocking admission must reject.
+        rejected = False
+        for _ in range(20):
+            try:
+                futs.append(srv.submit("m", _rows(docs, 0, 5), block=False))
+            except ServerClosed as e:
+                assert "queue full" in str(e)
+                rejected = True
+                break
+            time.sleep(0.02)
+        assert rejected, "full queue never backpressured a submit"
+        assert srv.stats("m")["live_batches"] == 1
+        slow.release.set()
+        for f in futs:                          # backlog drains completely
+            f.result(timeout=120)
+        stats = srv.stats("m")
+    assert stats["peak_live_batches"] == 1
+    assert stats["n_failures"] == 0
+
+
+class _SlowPre(ServableClusterModel):
+    """Servable whose pre-processing blocks — pins the BATCHING thread so
+    later requests provably sit in the queue when the model unloads."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def pre_process(self, rows):
+        self.entered.set()
+        assert self.release.wait(30), "test never released the slow batch"
+        return super().pre_process(rows)
+
+
+def test_unload_fails_queued_requests_and_close_is_idempotent(served):
+    docs, _, model, _ = served
+    slow = _SlowPre(model)
+    srv = ClusterServer(batch_timeout_s=0.0)
+    try:
+        srv.load("m", slow)
+        batcher = srv._batchers["m"]
+        inflight = srv.submit("m", _rows(docs, 0, 4))
+        assert slow.entered.wait(30)            # batching thread is pinned
+        queued = [srv.submit("m", _rows(docs, 0, 4)) for _ in range(3)]
+        un = threading.Thread(target=srv.unload, args=("m",))
+        un.start()
+        assert batcher._stopped.wait(30)        # unload reached the batcher
+        slow.release.set()                      # let the pinned batch go
+        un.join(60)
+        assert not un.is_alive()
+        inflight.result(timeout=120)            # in-flight batch completed
+        for f in queued:                        # never-batched ones fail
+            with pytest.raises(ServerClosed, match="unloaded"):
+                f.result(timeout=120)
+        with pytest.raises(KeyError, match="no model"):
+            srv.classify("m", _rows(docs, 0, 4))
+    finally:
+        slow.release.set()
+        srv.close()
+    srv.close()                                 # idempotent
+
+
+def test_registry_errors_name_loaded_models(served):
+    _, _, model, _ = served
+    reg = ModelRegistry()
+    sv = model.servable()
+    reg.load("alpha", sv)
+    with pytest.raises(ValueError, match="already loaded"):
+        reg.load("alpha", sv)
+    with pytest.raises(KeyError, match="alpha"):
+        reg.get("beta")
+    with pytest.raises(KeyError):
+        reg.swap("beta", sv)
+    assert reg.unload("alpha") is sv
+    assert reg.names() == []
+
+
+# ---------------------------------------------------------------------------
+# Streaming refit over a DocStore.
+# ---------------------------------------------------------------------------
+
+def test_refit_streams_docstore_parity(served):
+    docs, _, model, _ = served
+    e_res = ClusterEngine.from_model(model, batch_size=200)
+    a_res, r_res = e_res.refit(docs, n_iter=2)
+    e_str = ClusterEngine.from_model(model, batch_size=200)
+    store = DocStore.from_docs(docs, chunk_size=128)    # ragged tail chunk
+    assert store.n_chunks > 1
+    a_str, r_str = e_str.refit(store, n_iter=2)
+    assert (a_res == a_str).all()
+    np.testing.assert_allclose(r_res, r_str, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e_res.index.means_t),
+                               np.asarray(e_str.index.means_t),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_refit_one_chunk_store_bitwise(served):
+    docs, _, model, _ = served
+    e_res = ClusterEngine.from_model(model, batch_size=420)
+    a_res, r_res = e_res.refit(docs)
+    e_str = ClusterEngine.from_model(model, batch_size=420)
+    a_str, r_str = e_str.refit(DocStore.from_docs(docs))
+    assert (a_res == a_str).all()
+    assert (r_res == r_str).all()
+    assert (np.asarray(e_res.index.means_t)
+            == np.asarray(e_str.index.means_t)).all()
+
+
+# ---------------------------------------------------------------------------
+# Lazy LM split: repro.serve must not import repro.models.
+# ---------------------------------------------------------------------------
+
+def test_import_serve_does_not_import_models():
+    code = (
+        "import sys\n"
+        "import repro.serve\n"
+        "assert 'repro.models' not in sys.modules, 'models imported eagerly'\n"
+        "repro.serve.ServeLoop                    # lazy surface still works\n"
+        "assert 'repro.models' in sys.modules\n"
+    )
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
