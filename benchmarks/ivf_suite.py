@@ -1,0 +1,127 @@
+"""Two-level IVF suite (ISSUE 9; DESIGN.md §13): routed vs flat classify at
+large effective K, machine-readable as ``BENCH_ivf.json``.
+
+The routed classify's claim is asymptotic: per object it scores
+K_c + Σ probed cell sizes centroids instead of all K_eff, so it must beat
+the flat scan on BOTH axes — the Mult counters (scored-centroid
+multiply-adds, the paper's currency) and the wall clock — once K_eff is
+large (the ratchet gates both at K_eff >= 4k).  To measure the classify
+asymptotics without paying a K-cluster corpus *fit* per point, each scale
+point samples K documents as stand-in fine centroids and wraps them with
+:func:`repro.cluster.two_level_from_means` (coarse-clustering the means
+themselves into K_c ≈ √K cells) — the routed/flat comparison only needs a
+valid nested index, not a converged one.
+
+Rows per scale point (names carry the *effective* K of the built model):
+
+  ``ivf/K<k>/flat_classify``  — the flat exhaustive scan over all K_eff
+      means (the baseline every routed row names via ``vs``).
+  ``ivf/K<k>/routed_p1``      — n_probe=1: the fast ANN setting.  Carries
+      ``mult_per_doc``, measured ``recall_at1`` vs the flat argmax (never
+      silently dropped — the ratchet fails if absent), ``scored_max`` and
+      its contract bound ``scored_bound`` = K_c + max cell size.
+  ``ivf/K<k>/routed_p4``      — a wider probe (recall vs cost trade).
+  ``ivf/K<k>/routed_exact``   — n_probe=K_c: probes every cell, delegates
+      to the flat path, and must be bit-identical to it (``exact_match``).
+
+All rows run the same backend and execution mode, so the wall-clock
+``speedup`` ratios are honest same-mode comparisons (``comparable: true``).
+``REPRO_BENCH_SMOKE=1`` trims the scale sweep to CI-sized points; the full
+sweep reaches the 100k+ regime.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from benchmarks.common import (bench_row, default_backend, speedup_fields,
+                               time_call_warm)
+from repro.cluster import classify_docs, classify_docs_routed, two_level_from_means
+from repro.data import make_corpus
+from repro.data.synthetic import CorpusSpec
+from repro.sparse import SparseDocs
+
+# Effective-K sweep: the donor corpus supplies K docs as fine centroids
+# plus N_QUERY held-out query docs.  Vocab is kept moderate so the FLAT
+# baseline's dense (D, K) index stays materialisable at the top point —
+# which is exactly the regime statement: the routed path's operands scale
+# with one cell, the flat scan's with K.
+KS_SMOKE = (4096, 16384)
+KS_FULL = (4096, 16384, 131072)
+N_QUERY = 2048
+VOCAB = 2048
+N_TOPICS = 128
+QUERY_BATCH = 512
+
+
+def _slice_docs(docs: SparseDocs, start: int, stop: int) -> SparseDocs:
+    return SparseDocs(ids=docs.ids[start:stop], vals=docs.vals[start:stop],
+                      nnz=docs.nnz[start:stop], dim=docs.dim)
+
+
+def _scale_point(k: int, backend: str, smoke: bool) -> list:
+    docs, _, _, _ = make_corpus(CorpusSpec(
+        n_docs=k + N_QUERY, vocab=VOCAB, nt_mean=64.0, n_topics=N_TOPICS,
+        topic_sharpness=500.0, seed=k))
+    mean_docs = _slice_docs(docs, 0, k)
+    queries = _slice_docs(docs, k, k + N_QUERY)
+    k_c = int(round(math.sqrt(k)))
+    model = two_level_from_means(mean_docs, k_c, n_probe=1, backend=backend,
+                                 algo="mivi", seed=0,
+                                 max_iter=3 if smoke else 6)
+    k_eff = model.index.k
+    cmax = int(np.max(model.cell_sizes))
+    nnz_q = np.asarray(queries.nnz, np.float64)
+
+    (a_flat, s_flat), flat_s, flat_w = time_call_warm(
+        classify_docs, model.index, queries, backend=backend,
+        batch_size=QUERY_BATCH)
+    flat_name = f"ivf/K{k_eff}/flat_classify"
+    rows = [bench_row(
+        flat_name, flat_s * 1e6, backend, warmup_us=flat_w * 1e6,
+        k_eff=k_eff, k_c=k_c, n_query=N_QUERY,
+        mult_per_doc=float(np.mean(nnz_q) * k_eff))]
+
+    for n_probe in (1, 4):
+        if n_probe >= k_c:
+            continue
+        (a_r, s_r), r_s, r_w = time_call_warm(
+            classify_docs_routed, model, queries, n_probe=n_probe,
+            backend=backend, batch_size=QUERY_BATCH)
+        _, _, scored = classify_docs_routed(
+            model, queries, n_probe=n_probe, backend=backend,
+            batch_size=QUERY_BATCH, with_stats=True)
+        rows.append(bench_row(
+            f"ivf/K{k_eff}/routed_p{n_probe}", r_s * 1e6, backend,
+            warmup_us=r_w * 1e6, k_eff=k_eff, k_c=k_c, n_probe=n_probe,
+            n_query=N_QUERY,
+            mult_per_doc=float(np.mean(nnz_q * scored)),
+            recall_at1=float(np.mean(a_r == a_flat)),
+            scored_max=int(scored.max()),
+            scored_bound=k_c + cmax,
+            vs=flat_name,
+            **speedup_fields(flat_s, r_s, comparable=True)))
+
+    (a_e, s_e), e_s, e_w = time_call_warm(
+        classify_docs_routed, model, queries, n_probe=k_c, backend=backend,
+        batch_size=QUERY_BATCH)
+    rows.append(bench_row(
+        f"ivf/K{k_eff}/routed_exact", e_s * 1e6, backend,
+        warmup_us=e_w * 1e6, k_eff=k_eff, k_c=k_c, n_probe=k_c,
+        n_query=N_QUERY, mult_per_doc=float(np.mean(nnz_q) * k_eff),
+        exact_match=bool(np.array_equal(a_e, a_flat)
+                         and np.array_equal(s_e, s_flat)),
+        vs=flat_name,
+        **speedup_fields(flat_s, e_s, comparable=True)))
+    return rows
+
+
+def run():
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    backend = default_backend()
+    rows = []
+    for k in (KS_SMOKE if smoke else KS_FULL):
+        rows.extend(_scale_point(k, backend, smoke))
+    return rows

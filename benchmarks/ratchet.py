@@ -1,9 +1,11 @@
 """Perf ratchet over the machine-readable bench artifacts (the CI bench
-jobs' gate): ``BENCH_kernels.json`` (kernel checks below) and
+jobs' gate): ``BENCH_kernels.json`` (kernel checks below),
 ``BENCH_pruning.json`` (the compounded-pruning invariants of
-:mod:`benchmarks.pruning_suite` — see :func:`check_pruning`).  ``main``
-dispatches on the rows' names, so both files run through the same entry
-point: ``python -m benchmarks.ratchet <file.json>``.
+:mod:`benchmarks.pruning_suite` — see :func:`check_pruning`),
+``BENCH_serving.json`` (:func:`check_serving`) and ``BENCH_ivf.json``
+(the two-level routed-classify invariants — see :func:`check_ivf`).
+``main`` dispatches on the rows' names, so every file runs through the
+same entry point: ``python -m benchmarks.ratchet <file.json>``.
 
 Kernel checks:
 
@@ -249,12 +251,125 @@ def check_serving(rows: list[dict]) -> int:
     return 1 if failures else 0
 
 
+def check_ivf(rows: list[dict]) -> int:
+    """Two-level IVF invariants over ``BENCH_ivf.json``
+    (:mod:`benchmarks.ivf_suite`).
+
+    1. **Mult ratchet** — at every scale point with effective K >= 4096,
+       the ``routed_p1`` row's ``mult_per_doc`` must be strictly below the
+       flat row's: the routed classify scores K_c + Σ probed cell sizes
+       centroids per object, and if that honest count does not beat the
+       exhaustive scan the two-level structure earned nothing.
+    2. **Wall ratchet** — same scale points: ``routed_p1`` wall-clock
+       ``speedup`` vs the flat scan must be >= 1.0 (same backend, same
+       mode — the ``vs`` honesty check below makes that comparison valid).
+    3. **Recall honesty** — every routed row probing fewer than all K_c
+       cells MUST report ``recall_at1`` vs the flat argmax.  Approximate
+       settings are allowed; silently dropping the accuracy number is not.
+    4. **Scored-count contract** — ``scored_max <= scored_bound``
+       (= K_c + max cell size at n_probe=1): the per-object candidate
+       count the Mult accounting is built on, asserted, not assumed.
+    5. **Exactness** — the ``routed_exact`` (n_probe = K_c) row must be
+       bit-identical to the flat scan (``exact_match: true``): probing
+       every cell IS the exhaustive algorithm, not an approximation of it.
+    6. **Speedup honesty** — as in the other suites, every ``speedup``
+       must name a resolvable ``vs`` row with the same backend and
+       execution mode.
+    """
+    failures = []
+    by_name = {r["name"]: r for r in rows}
+    scale_points = sorted({r["name"].split("/")[1] for r in rows
+                           if r["name"].startswith("ivf/K")})
+    if not scale_points:
+        print("::error::BENCH_ivf.json holds no ivf/K* rows")
+        return 1
+
+    for kp in scale_points:
+        flat = by_name.get(f"ivf/{kp}/flat_classify")
+        p1 = by_name.get(f"ivf/{kp}/routed_p1")
+        exact = by_name.get(f"ivf/{kp}/routed_exact")
+        if flat is None:
+            failures.append(f"{kp}: no flat_classify baseline row")
+            continue
+        k_eff = int(flat.get("k_eff", 0))
+        gate = k_eff >= 4096
+
+        if p1 is None:
+            failures.append(f"{kp}: no routed_p1 row")
+        else:
+            if gate and not p1["mult_per_doc"] < flat["mult_per_doc"]:
+                failures.append(
+                    f"{kp}: routed_p1 mult_per_doc {p1['mult_per_doc']:.0f} "
+                    f">= flat {flat['mult_per_doc']:.0f} — routing failed "
+                    f"to prune the scan at K_eff={k_eff}")
+            if gate and not (p1.get("speedup") or 0.0) >= 1.0:
+                failures.append(
+                    f"{kp}: routed_p1 speedup {p1.get('speedup')} < 1.0 — "
+                    f"routed classify lost to the flat scan it replaces at "
+                    f"K_eff={k_eff}")
+            if p1.get("scored_max", 0) > p1.get("scored_bound", 0):
+                failures.append(
+                    f"{kp}: scored_max {p1.get('scored_max')} > bound "
+                    f"K_c + cmax = {p1.get('scored_bound')} — the routed "
+                    f"candidate-count contract is broken")
+
+        for r in rows:
+            if (r["name"].startswith(f"ivf/{kp}/routed_p")
+                    and r.get("n_probe", 0) < r.get("k_c", 0)
+                    and "recall_at1" not in r):
+                failures.append(f"{r['name']}: approximate routed row "
+                                f"without recall_at1 — the accuracy cost "
+                                f"must never be silently dropped")
+
+        if exact is None:
+            failures.append(f"{kp}: no routed_exact (n_probe=K_c) row")
+        elif not exact.get("exact_match", False):
+            failures.append(
+                f"{kp}: routed_exact is not bit-identical to the flat scan "
+                f"— n_probe=K_c must BE the exhaustive algorithm")
+
+    for r in rows:
+        if r.get("speedup") is None and not r.get("comparable"):
+            continue
+        if "speedup" not in r:
+            continue
+        ref = by_name.get(r.get("vs", ""))
+        if ref is None:
+            failures.append(f"{r['name']}: speedup with no resolvable "
+                            f"vs={r.get('vs')!r} row")
+        elif (r.get("mode"), r.get("backend")) != (ref.get("mode"),
+                                                  ref.get("backend")):
+            failures.append(
+                f"{r['name']}: marked comparable across execution modes "
+                f"({r.get('backend')}/{r.get('mode')} vs {ref['name']}'s "
+                f"{ref.get('backend')}/{ref.get('mode')})")
+
+    for kp in scale_points:
+        flat, p1 = by_name.get(f"ivf/{kp}/flat_classify"), \
+            by_name.get(f"ivf/{kp}/routed_p1")
+        if flat and p1:
+            print(f"ivf {kp}: routed_p1 mult {p1['mult_per_doc']:.3e} vs "
+                  f"flat {flat['mult_per_doc']:.3e} "
+                  f"({flat['mult_per_doc'] / p1['mult_per_doc']:.1f}x "
+                  f"fewer), wall speedup {p1.get('speedup')}x, "
+                  f"recall@1 {p1.get('recall_at1')}")
+
+    for msg in failures:
+        print(f"::error title=ivf ratchet::{msg}")
+    if not failures:
+        print(f"ivf ratchet: {len(scale_points)} scale points checked, "
+              f"all invariants hold")
+    return 1 if failures else 0
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
     with open(path) as f:
         rows = json.load(f)
     if any(str(r.get("name", "")).startswith("serving/") for r in rows):
         return check_serving(rows)
+    if any(str(r.get("name", "")).startswith("ivf/") for r in rows):
+        return check_ivf(rows)
     if any(str(r.get("name", "")).startswith("pruning/") for r in rows):
         return check_pruning(rows)
     return check(rows)

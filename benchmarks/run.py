@@ -36,20 +36,25 @@ SUITES = [
     ("kernels", "benchmarks.kernel_suite"),
     ("pruning", "benchmarks.pruning_suite"),
     ("serving", "benchmarks.serving_suite"),
+    ("ivf", "benchmarks.ivf_suite"),
 ]
 
 JSON_SUITES = {"fused": "BENCH_fused_iteration.json",
                "kernels": "BENCH_kernels.json",
                "pruning": "BENCH_pruning.json",
-               "serving": "BENCH_serving.json"}
+               "serving": "BENCH_serving.json",
+               "ivf": "BENCH_ivf.json"}
 
 
 def _as_csv(row) -> str:
     """Printable CSV line for a row — dict rows render their core columns
-    (full metadata lives in the JSON artifact)."""
+    (full metadata lives in the JSON artifact).  ``us_per_call`` is
+    optional: rows that cannot honestly report a wall time omit it."""
     if isinstance(row, str):
         return row
-    line = f"{row['name']},{row['us_per_call']:.2f},{row.get('backend', '')}"
+    us = row.get("us_per_call")
+    line = (f"{row['name']},{'' if us is None else f'{us:.2f}'},"
+            f"{row.get('backend', '')}")
     if "warmup_us" in row:
         line += f",{row['warmup_us']:.2f}"
     return line

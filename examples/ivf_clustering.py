@@ -1,0 +1,99 @@
+"""Two-level IVF clustering: coarse+fine fit → nested artifact → routed
+classify → serving (DESIGN.md §13).
+
+Demonstrates the million-cluster regime machinery end to end:
+
+  1. ``ClusterConfig(coarse_k=K_c)`` routes the fit through the
+     ``two_level`` strategy: a coarse spherical k-means over K_c cells,
+     the corpus partitioned by coarse assignment, and one flat fine fit
+     per cell — yielding a nested :class:`TwoLevelFittedModel`;
+  2. the artifact save/loads through the same checkpoint store as flat
+     models (``load_model`` dispatches on the stored format);
+  3. ``classify_docs_routed`` scores K_c coarse means plus only the probed
+     cells' fine means per object — the ``scored`` counters prove it —
+     with measured recall@1 at n_probe=1 and bit-identical results to the
+     flat scan at n_probe=K_c;
+  4. the SAME artifact serves through :class:`ClusterServer`, responses
+     bit-identical to the direct routed classify.
+
+    PYTHONPATH=src python examples/ivf_clustering.py
+    PYTHONPATH=src python examples/ivf_clustering.py --smoke   # tiny (CI)
+"""
+import argparse
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.cluster import (ClusterConfig, classify_docs, classify_docs_routed,
+                           fit, load_model)
+from repro.data import make_corpus, CorpusSpec
+from repro.serve import ClusterServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic corpus so CI can smoke-run the "
+                         "example end to end in seconds")
+    args = ap.parse_args()
+
+    if args.smoke:
+        spec = CorpusSpec(n_docs=800, vocab=512, nt_mean=20, n_topics=12,
+                          seed=0)
+        k, k_c = 24, 4
+    else:
+        spec = CorpusSpec(n_docs=20_000, vocab=4_096, nt_mean=60,
+                          n_topics=128, seed=0)
+        k, k_c = 512, 16
+
+    # ---- two-level fit ---------------------------------------------------
+    docs, df, perm, topics = make_corpus(spec)
+    model = fit(docs, ClusterConfig(k=k, coarse_k=k_c, n_probe=1,
+                                    algo="esicp", max_iter=10, seed=0),
+                df=df)
+    print(f"[fit]   K_c={model.coarse_k} cells over K_eff={model.index.k} "
+          f"fine clusters, cell sizes {model.cell_sizes.min()}"
+          f"..{model.cell_sizes.max()}, converged={model.converged}")
+
+    # ---- nested artifact round-trip --------------------------------------
+    workdir = tempfile.mkdtemp(prefix="ivf_clustering_")
+    model.save(os.path.join(workdir, "model"))
+    served = load_model(os.path.join(workdir, "model"))
+    assert type(served) is type(model)
+    print(f"[save]  nested artifact round-tripped via {workdir}/model")
+
+    # ---- routed classify: cost, recall, exactness ------------------------
+    a_flat, s_flat = classify_docs(model.index, docs)
+    a1, _, scored = classify_docs_routed(served, docs, n_probe=1,
+                                         with_stats=True)
+    cmax = int(model.cell_sizes.max())
+    assert scored.max() <= model.coarse_k + cmax, "candidate bound broke!"
+    recall = float(np.mean(a1 == a_flat))
+    print(f"[route] n_probe=1 scored {scored.mean():.0f} of "
+          f"{model.index.k} centroids/doc (bound K_c+cmax="
+          f"{model.coarse_k + cmax}), recall@1 {recall:.3f}")
+    a_all, s_all = classify_docs_routed(served, docs, n_probe=model.coarse_k)
+    assert (a_all == a_flat).all() and (s_all == s_flat).all()
+    print(f"[route] n_probe=K_c is bit-identical to the flat scan ✓")
+
+    # ---- serving: routed epoch behind the continuous batcher -------------
+    a_ref, s_ref = classify_docs_routed(served, docs)
+    ids, vals, nnz = (np.asarray(docs.ids), np.asarray(docs.vals),
+                      np.asarray(docs.nnz))
+    with ClusterServer(max_live_batches=4) as server:
+        server.load("ivf", served)
+        a, s = server.classify("ivf", (ids, vals, nnz))
+        assert (a == a_ref).all() and (s == s_ref).all(), \
+            "served routed classify diverged from the direct path!"
+        stats = server.stats("ivf")
+        print(f"[serve] {stats['n_requests']} request(s) "
+              f"({stats['n_rows']} rows) served bit-identical to the "
+              f"direct routed classify ✓")
+
+    shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,12 +26,14 @@ deliberately, never accidentally.
 from __future__ import annotations
 
 from repro.cluster.config import ClusterConfig
-from repro.cluster.classify import classify_docs, transform_docs
-from repro.cluster.model import FittedModel, load_model
+from repro.cluster.classify import (classify_docs, classify_docs_routed,
+                                    transform_docs)
+from repro.cluster.model import FittedModel, TwoLevelFittedModel, load_model
 from repro.cluster.estimator import SphericalKMeans
 from repro.cluster.strategies import (STRATEGIES, MeshStrategy,
                                       SingleHostStrategy, StreamingStrategy,
-                                      resolve_strategy)
+                                      TwoLevelStrategy, resolve_strategy)
+from repro.cluster.two_level import two_level_from_means
 from repro.serve.engine import ClusterEngine
 
 
@@ -49,9 +51,13 @@ __all__ = [
     "SingleHostStrategy",
     "SphericalKMeans",
     "StreamingStrategy",
+    "TwoLevelFittedModel",
+    "TwoLevelStrategy",
     "classify_docs",
+    "classify_docs_routed",
     "fit",
     "load_model",
     "resolve_strategy",
     "transform_docs",
+    "two_level_from_means",
 ]

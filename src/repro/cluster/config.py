@@ -50,6 +50,16 @@ class ClusterConfig:
                 reference backend; the mesh runtime resolves cache-only.
     tune_budget: optional repro.tune.SearchBudget (or int max timed
                 candidates) for 'search' mode.
+    coarse_k:   None (flat fit, the default) or K_c >= 2 — the two-level
+                IVF regime (DESIGN.md §13): a coarse spherical k-means over
+                K_c cells partitions the corpus, then the K fine clusters
+                are fitted per cell, so fit AND classify scale with one
+                cell instead of K.  Requires 2 <= coarse_k < k; runs on the
+                'two_level' strategy (mesh= is not supported there yet).
+    n_probe:    coarse cells the routed classify scores per object
+                (1 <= n_probe <= coarse_k).  n_probe=1 is the fast ANN
+                setting; n_probe=coarse_k probes every cell and is exact —
+                it IS the flat scan.  Ignored for flat fits.
     """
 
     k: int
@@ -68,6 +78,8 @@ class ClusterConfig:
     checkpoint_every: int = 5
     tune: str = "off"
     tune_budget: Any = None
+    coarse_k: int | None = None
+    n_probe: int = 1
 
     def __post_init__(self):
         object.__setattr__(self, "est_iters", tuple(self.est_iters))
@@ -78,6 +90,8 @@ class ClusterConfig:
         input additionally promotes 'single_host' to 'streaming' at
         ``resolve_strategy`` time (the data's residency, not the config,
         decides)."""
+        if self.coarse_k is not None:
+            return "two_level"
         if self.mesh is not None:
             return "mesh"
         return "streaming" if self.algo_mode == "minibatch" else "single_host"
@@ -109,6 +123,30 @@ class ClusterConfig:
         if self.tune not in ("off", "cached", "search"):
             raise ValueError(f"tune must be 'off', 'cached' or 'search', "
                              f"got {self.tune!r}")
+        if self.coarse_k is not None:
+            # The two-level IVF knobs (DESIGN.md §13) — same fail-fast
+            # discipline as the flat knobs above: every front door
+            # (estimator, module-level fit, resolve_strategy) rejects an
+            # unrunnable nesting before any coarse fit starts.
+            if self.coarse_k < 2:
+                raise ValueError(
+                    f"coarse_k must be >= 2 (a one-cell coarse level is the "
+                    f"flat fit; pass coarse_k=None for that), got "
+                    f"{self.coarse_k}")
+            if self.coarse_k >= self.k:
+                raise ValueError(
+                    f"coarse_k must be < k (each coarse cell holds at least "
+                    f"one fine cluster), got coarse_k={self.coarse_k} >= "
+                    f"k={self.k}")
+            if self.mesh is not None:
+                raise ValueError(
+                    "coarse_k (the two-level strategy) cannot be combined "
+                    "with mesh= yet; run the coarse/fine fits single-host "
+                    "or streaming")
+        if not 1 <= self.n_probe <= (self.coarse_k or self.n_probe):
+            raise ValueError(
+                f"n_probe must be in [1, coarse_k={self.coarse_k}], got "
+                f"{self.n_probe}")
         if self.algo_mode == "minibatch" and self.mesh is not None:
             raise ValueError(
                 "algo_mode='minibatch' runs on the streaming strategy; "

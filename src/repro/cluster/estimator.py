@@ -60,6 +60,10 @@ class SphericalKMeans:
             StructuralParams for fixed thresholds, or None -> trivial.
     mesh:   optional jax Mesh — routes the fit through the distributed
             strategy; chunk_size is that runtime's per-shard object chunk.
+    coarse_k / n_probe: the two-level IVF knobs (DESIGN.md §13) — a
+            non-None coarse_k routes the fit through the 'two_level'
+            strategy and ``model_`` becomes a nested TwoLevelFittedModel
+            whose predict routes through the coarse level.
     """
 
     def __init__(self, k: int, *, algo: str = "esicp", params="auto",
@@ -69,7 +73,8 @@ class SphericalKMeans:
                  chunk_size: int = 1024, algo_mode: str = "full",
                  checkpoint_dir: str | None = None,
                  checkpoint_every: int = 5, tune: str = "off",
-                 tune_budget=None):
+                 tune_budget=None, coarse_k: int | None = None,
+                 n_probe: int = 1):
         self.k = k
         self.algo = algo
         self.backend = backend
@@ -86,6 +91,8 @@ class SphericalKMeans:
         self.checkpoint_every = checkpoint_every
         self.tune = tune
         self.tune_budget = tune_budget
+        self.coarse_k = coarse_k
+        self.n_probe = n_probe
 
     # -- config plumbing ---------------------------------------------------
     @property
@@ -100,7 +107,8 @@ class SphericalKMeans:
             seed=self.seed, mesh=self.mesh, algo_mode=self.algo_mode,
             checkpoint_dir=self.checkpoint_dir,
             checkpoint_every=self.checkpoint_every, tune=self.tune,
-            tune_budget=self.tune_budget)
+            tune_budget=self.tune_budget, coarse_k=self.coarse_k,
+            n_probe=self.n_probe)
 
     @classmethod
     def from_config(cls, config: ClusterConfig) -> SphericalKMeans:
@@ -112,7 +120,8 @@ class SphericalKMeans:
                    algo_mode=config.algo_mode,
                    checkpoint_dir=config.checkpoint_dir,
                    checkpoint_every=config.checkpoint_every,
-                   tune=config.tune, tune_budget=config.tune_budget)
+                   tune=config.tune, tune_budget=config.tune_budget,
+                   coarse_k=config.coarse_k, n_probe=config.n_probe)
 
     # -- the estimator surface ---------------------------------------------
     def fit(self, docs, df=None) -> SphericalKMeans:
@@ -125,7 +134,11 @@ class SphericalKMeans:
         result = strategy.fit(docs, cfg, df=df)
         self._fit_result = result
         tuned = getattr(result, "tuned", None)
-        self.model_ = FittedModel(
+        # Strategies that assemble their own artifact (two_level's nested
+        # TwoLevelFittedModel) hand it over via ``result.model``; everyone
+        # else gets the flat FittedModel built here.
+        model = getattr(result, "model", None)
+        self.model_ = model if model is not None else FittedModel(
             index=result.state.index,
             labels=np.asarray(result.assign, np.int32),
             rho_self=np.asarray(result.state.rho_self, np.float32),

@@ -18,11 +18,13 @@ import numpy as np
 
 from repro.checkpoint.store import (load_extra, restore_checkpoint,
                                     save_checkpoint)
-from repro.cluster.classify import classify_docs, transform_docs
+from repro.cluster.classify import (classify_docs, classify_docs_routed,
+                                    transform_docs)
 from repro.core.meanindex import (MeanIndex, StructuralParams,
                                   build_mean_index)
 
 MODEL_FORMAT = "repro.cluster/fitted-model-v1"
+TWO_LEVEL_FORMAT = "repro.cluster/fitted-two-level-v1"
 
 
 @dataclasses.dataclass
@@ -146,6 +148,11 @@ class FittedModel:
     @classmethod
     def load(cls, directory: str, *, step: int | None = None) -> FittedModel:
         extra = load_extra(directory, step=step)
+        if (extra and extra.get("format") == TWO_LEVEL_FORMAT
+                and cls is FittedModel):
+            # Format dispatch: a flat loader pointed at a nested artifact
+            # gets the nested model back (its flat surface is a superset).
+            return TwoLevelFittedModel.load(directory, step=step)
         if not extra or extra.get("format") != MODEL_FORMAT:
             raise ValueError(
                 f"{directory} holds no {MODEL_FORMAT} artifact "
@@ -185,6 +192,169 @@ class FittedModel:
                    tuned=tuned)
 
 
+@dataclasses.dataclass
+class TwoLevelFittedModel(FittedModel):
+    """The nested two-level IVF artifact (DESIGN.md §13).
+
+    Extends the flat artifact — ``index`` holds the CONCATENATED fine means
+    (cell 0's clusters first, then cell 1's, …), so every flat surface
+    (``transform``, flat ``classify_docs``, geometry, serving buckets)
+    works unchanged and ``labels`` live in that global fine space — with
+    the coarse level on top:
+
+    coarse_index: MeanIndex over the K_c coarse cell means.
+    cell_sizes:   (K_c,) int32 — fine clusters per cell; ``cell_starts``
+                  (the offsets of each cell's block in ``index``) derive
+                  as the exclusive cumsum.  Every cell holds >= 1 fine
+                  centroid (empty coarse cells keep their coarse mean), so
+                  a routed argmax always has a live candidate.
+    n_probe:      default probe width for ``predict`` / serving (overridable
+                  per call; n_probe = K_c is exactly the flat scan).
+    cell_meta:    per-cell fit provenance ({n_docs, k, n_iter, converged}).
+    """
+
+    coarse_index: MeanIndex | None = None
+    cell_sizes: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+    n_probe: int = 1
+    cell_meta: list = dataclasses.field(default_factory=list)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def coarse_k(self) -> int:
+        return self.coarse_index.k
+
+    @property
+    def cell_starts(self) -> np.ndarray:
+        """(K_c,) int32 — offset of each cell's block in ``index``."""
+        sizes = np.asarray(self.cell_sizes, np.int64)
+        return np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+
+    def _routed_operands(self):
+        """Device operands of the routed classify, built once per model:
+        (coarse_index, means_ext (D, K_eff+1) with the all-zero sentinel
+        column, starts (K_c,), sizes (K_c,), cmax).  Cached so serving and
+        repeated predicts re-trace nothing and re-upload nothing."""
+        ops = self.__dict__.get("_routed_cache")
+        if ops is None:
+            sizes = jnp.asarray(np.asarray(self.cell_sizes), jnp.int32)
+            starts = jnp.asarray(self.cell_starts, jnp.int32)
+            means_ext = jnp.concatenate(
+                [self.index.means_t,
+                 jnp.zeros((self.dim, 1), jnp.float32)], axis=1)
+            cmax = int(np.max(np.asarray(self.cell_sizes)))
+            ops = (self.coarse_index, means_ext, starts, sizes, cmax)
+            self.__dict__["_routed_cache"] = ops
+        return ops
+
+    # -- inference (coarse-routed) -----------------------------------------
+    def predict(self, docs, *, batch_size: int = 4096,
+                n_probe: int | None = None) -> np.ndarray:
+        """(N,) global fine-cluster ids via the coarse-routed classify —
+        scores K_c + Σ probed cell sizes centroids per object instead of
+        K_eff (exact at n_probe = K_c; ANN below it)."""
+        a, _ = classify_docs_routed(self, docs, n_probe=n_probe,
+                                    batch_size=batch_size)
+        return a
+
+    def score(self, docs, *, batch_size: int = 4096,
+              n_probe: int | None = None) -> float:
+        _, sims = classify_docs_routed(self, docs, n_probe=n_probe,
+                                       batch_size=batch_size)
+        return float(np.sum(sims))
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory: str, *, step: int = 0) -> str:
+        tree = {
+            "labels": np.asarray(self.labels, np.int32),
+            "means_t": np.asarray(self.index.means_t, np.float32),
+            "moving": np.asarray(self.index.moving, bool),
+            "rho_self": np.asarray(self.rho_self, np.float32),
+            "t_th": np.asarray(self.index.params.t_th, np.int32),
+            "v_th": np.asarray(self.index.params.v_th, np.float32),
+            "coarse_means_t": np.asarray(self.coarse_index.means_t,
+                                         np.float32),
+            "coarse_t_th": np.asarray(self.coarse_index.params.t_th,
+                                      np.int32),
+            "coarse_v_th": np.asarray(self.coarse_index.params.v_th,
+                                      np.float32),
+            "cell_sizes": np.asarray(self.cell_sizes, np.int32),
+        }
+        extra = {
+            "format": TWO_LEVEL_FORMAT,
+            "algo": self.algo,
+            "backend": self.backend,
+            "strategy": self.strategy,
+            "k": int(self.k),
+            "dim": int(self.dim),
+            "coarse_k": int(self.coarse_k),
+            "n_probe": int(self.n_probe),
+            "n_docs": int(np.shape(self.labels)[0]),
+            "converged": bool(self.converged),
+            "n_iter": int(self.n_iter),
+            "history": self.history,
+            "cell_meta": self.cell_meta,
+            "cursor": None if self.cursor is None else list(self.cursor),
+            "tuned": self.tuned,
+        }
+        return save_checkpoint(directory, tree, step=step, keep=None,
+                               extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, *,
+             step: int | None = None) -> "TwoLevelFittedModel":
+        extra = load_extra(directory, step=step)
+        if not extra or extra.get("format") != TWO_LEVEL_FORMAT:
+            raise ValueError(
+                f"{directory} holds no {TWO_LEVEL_FORMAT} artifact "
+                f"(found {extra.get('format') if extra else None!r})")
+        n, d, k, k_c = (extra["n_docs"], extra["dim"], extra["k"],
+                        extra["coarse_k"])
+        example = {
+            "labels": np.zeros((n,), np.int32),
+            "means_t": np.zeros((d, k), np.float32),
+            "moving": np.zeros((k,), bool),
+            "rho_self": np.zeros((n,), np.float32),
+            "t_th": np.asarray(0, np.int32),
+            "v_th": np.asarray(0.0, np.float32),
+            "coarse_means_t": np.zeros((d, k_c), np.float32),
+            "coarse_t_th": np.asarray(0, np.int32),
+            "coarse_v_th": np.asarray(0.0, np.float32),
+            "cell_sizes": np.zeros((k_c,), np.int32),
+        }
+        tree, _ = restore_checkpoint(directory, example, step=step)
+        tuned = extra.get("tuned")
+        if tuned is not None and tuned.get("signature"):
+            from repro.tune import TUNED_CACHE, TunedConfig
+
+            TUNED_CACHE.put(tuned["signature"], TunedConfig.from_dict(tuned))
+        params = StructuralParams(t_th=jnp.asarray(tree["t_th"], jnp.int32),
+                                  v_th=jnp.asarray(tree["v_th"], jnp.float32))
+        cparams = StructuralParams(
+            t_th=jnp.asarray(tree["coarse_t_th"], jnp.int32),
+            v_th=jnp.asarray(tree["coarse_v_th"], jnp.float32))
+        return cls(
+            index=build_mean_index(jnp.asarray(tree["means_t"]).T, params,
+                                   moving=jnp.asarray(tree["moving"])),
+            coarse_index=build_mean_index(
+                jnp.asarray(tree["coarse_means_t"]).T, cparams),
+            cell_sizes=np.asarray(tree["cell_sizes"], np.int32),
+            n_probe=int(extra["n_probe"]),
+            cell_meta=list(extra.get("cell_meta") or []),
+            labels=np.asarray(tree["labels"], np.int32),
+            rho_self=np.asarray(tree["rho_self"], np.float32),
+            history=list(extra["history"]),
+            converged=extra["converged"],
+            n_iter=extra["n_iter"],
+            algo=extra["algo"],
+            backend=extra["backend"],
+            strategy=extra["strategy"],
+            cursor=(None if extra.get("cursor") is None
+                    else tuple(extra["cursor"])),
+            tuned=tuned)
+
+
 def load_model(directory: str, *, step: int | None = None) -> FittedModel:
-    """Module-level alias for :meth:`FittedModel.load`."""
+    """Module-level alias for :meth:`FittedModel.load` (format-dispatching:
+    a nested two-level artifact loads as :class:`TwoLevelFittedModel`)."""
     return FittedModel.load(directory, step=step)

@@ -23,6 +23,15 @@ strategy runs the *same* algorithm and the *same* backend accumulators
     all-reduce per assignment.  Selected by ``ClusterConfig(mesh=...)``;
     also accepts a DocStore (chunks stream into the sharded object arrays).
 
+``two_level``
+    The nested IVF fit (cluster/two_level.py, DESIGN.md §13): coarse
+    spherical k-means over ``ClusterConfig.coarse_k`` cells, corpus
+    partitioned by coarse assignment (lazy :class:`SubsetStore` views for
+    DocStores), then per-cell fine fits — each sub-fit re-entering this
+    registry with a flat sub-config, so both levels run on single_host /
+    streaming unchanged.  Selected by ``ClusterConfig(coarse_k=...)``;
+    emits a nested :class:`repro.cluster.model.TwoLevelFittedModel`.
+
 The registry is open: registering a new runtime (e.g. multi-pod pipelined,
 async parameter-server) is one class with a ``fit`` method — no new front
 door.
@@ -127,10 +136,29 @@ class MeshStrategy:
         )
 
 
+class TwoLevelStrategy:
+    """The nested IVF fit (DESIGN.md §13) — coarse cells, then per-cell
+    fine fits, every sub-fit re-entering this registry with a flat
+    sub-config.  Returns a duck-typed result whose ``model`` attribute
+    carries the ready-made nested artifact; the estimator adopts it
+    instead of assembling a flat FittedModel."""
+
+    name = "two_level"
+
+    def fit(self, docs, config: ClusterConfig, df=None):
+        from repro.cluster.two_level import two_level_fit
+
+        if config.coarse_k is None:
+            raise ValueError("TwoLevelStrategy needs ClusterConfig("
+                             "coarse_k=...)")
+        return two_level_fit(docs, config, df=df)
+
+
 STRATEGIES: dict[str, Strategy] = {
     "single_host": SingleHostStrategy(),
     "streaming": StreamingStrategy(),
     "mesh": MeshStrategy(),
+    "two_level": TwoLevelStrategy(),
 }
 
 

@@ -1,0 +1,268 @@
+"""Two-level IVF spherical k-means — the million-cluster fit (DESIGN.md §13).
+
+The paper's pruning machinery assumes K in the thousands; at web scale even
+the mean-inverted index stops fitting and every classify still scores all K
+centroids.  Aoyama & Saito's IVF (arxiv_2002.09094) / SIVF (arxiv_2103.16141)
+lineage fixes the asymptotics with one level of nesting:
+
+  1. **Coarse fit** — ordinary flat spherical k-means over K_c cells,
+     through the UNCHANGED flat strategies (``core/lloyd.lloyd_fit`` for
+     resident corpora, ``streaming_fit`` for DocStores): the coarse level
+     is just a small flat fit.
+  2. **Partition** — split the corpus by coarse assignment.  Resident
+     corpora gather rows; a DocStore routes through
+     :func:`repro.sparse.partition_store`'s lazy :class:`SubsetStore`
+     views, so the 8.7M-doc regime never materialises per-cell corpora.
+  3. **Fine fits** — per non-empty cell, another flat fit (k_i centroids
+     allocated ∝ cell size by largest remainder, every cell >= 1 and
+     <= its population) with the SAME backends / pruning algos / tuner.
+     Empty cells keep their coarse mean as a single fine centroid, so a
+     routed argmax always has a live candidate.  Fine fits receive the
+     *global* df: the df-rank term order and t_th thresholds live in
+     global-df space, and a partition's local df would silently skew them.
+  4. **Nested artifact** — a :class:`TwoLevelFittedModel`: the coarse
+     index on top of the CONCATENATED fine index (cell blocks in order),
+     global labels, and per-cell provenance; classify routes through the
+     coarse level (``cluster/classify.classify_docs_routed``) and scores
+     K_c + Σ probed cell sizes centroids instead of K_eff.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.config import ClusterConfig
+from repro.cluster.model import TwoLevelFittedModel
+from repro.core.meanindex import StructuralParams, build_mean_index
+from repro.core.update import KMeansState, n_ub_groups
+from repro.sparse import SparseDocs
+from repro.sparse.store import DocStore, partition_store
+
+
+def _allocate_fine_k(sizes, k: int) -> np.ndarray:
+    """Fine-cluster budget per coarse cell: (K_c,) int64 with every cell
+    >= 1 (empty cells keep their coarse mean), no cell over its population
+    (``max(n_i, 1)``), Σ = min(k, Σ caps), remainder spread ∝ cell size by
+    largest remainder — deterministic, order-stable on ties."""
+    sizes = np.asarray(sizes, np.int64)
+    cap = np.maximum(sizes, 1)
+    alloc = np.ones(sizes.shape, np.int64)
+    rem = int(min(int(k), int(cap.sum())) - alloc.sum())
+    while rem > 0:
+        room = cap - alloc
+        w = np.where(room > 0, np.maximum(sizes, 1), 0).astype(np.float64)
+        ideal = rem * w / w.sum()
+        add = np.minimum(np.floor(ideal).astype(np.int64), room)
+        if int(add.sum()) == 0:
+            # All floors are zero: hand the last units to the largest
+            # fractional shares that still have room.
+            frac = np.where(room > 0, ideal, -1.0)
+            take = np.argsort(-frac, kind="stable")[:rem]
+            add = np.zeros_like(alloc)
+            add[take[room[take] > 0]] = 1
+        alloc += add
+        rem -= int(add.sum())
+    return alloc
+
+
+def _gather_rows_docs(docs: SparseDocs, rows: np.ndarray) -> SparseDocs:
+    """Resident partition: the given corpus rows as one SparseDocs."""
+    ids = np.asarray(docs.ids)
+    vals = np.asarray(docs.vals)
+    nnz = np.asarray(docs.nnz)
+    return SparseDocs(ids=jnp.asarray(ids[rows]), vals=jnp.asarray(vals[rows]),
+                      nnz=jnp.asarray(nnz[rows]), dim=docs.dim)
+
+
+@dataclasses.dataclass
+class TwoLevelResult:
+    """Duck-typed LloydResult the estimator consumes, plus the ready-made
+    nested artifact (``model``) the estimator adopts instead of building a
+    flat FittedModel."""
+
+    model: TwoLevelFittedModel
+    state: KMeansState
+    assign: np.ndarray
+    history: list
+    params: StructuralParams
+    converged: bool
+    n_iter: int
+    cursor: tuple | None = None
+    tuned: object = None
+
+    @property
+    def objective(self) -> float:
+        return float(np.sum(np.asarray(self.state.rho_self)))
+
+
+def two_level_fit(docs, config: ClusterConfig, df=None) -> TwoLevelResult:
+    """(docs, ClusterConfig(coarse_k=K_c)) -> TwoLevelResult.
+
+    ``docs`` is a resident SparseDocs or an out-of-core DocStore; every
+    sub-fit routes through :func:`repro.cluster.strategies.resolve_strategy`
+    with a FLAT sub-config, so the coarse and fine levels reuse the
+    single-host / streaming runtimes (and their backends, pruning modes and
+    tuner) unchanged.
+    """
+    from repro.core.backends import resolve_backend
+    from repro.cluster.strategies import resolve_strategy
+
+    k_c = config.coarse_k
+    k = config.k
+    is_store = isinstance(docs, DocStore)
+    n = docs.n_docs
+    dim = docs.dim
+    # Resolve the GLOBAL df up front: per-cell fits must estimate their
+    # structural thresholds in global-df space, and letting a sub-fit
+    # default to its partition's local df would silently skew the df-rank
+    # term order (see SubsetStore's docstring).  Gated like streaming_fit's
+    # need_df so a params=None fit never triggers a full corpus scan.
+    need_df = (config.algo_mode == "full" and config.params == "auto"
+               and bool(config.est_iters))
+    if df is None and need_df:
+        df = docs.df
+
+    def run_flat(sub_docs, sub_cfg):
+        strat = resolve_strategy(sub_cfg, sub_docs)
+        return strat.fit(sub_docs, sub_cfg, df=df)
+
+    # 1. Coarse fit: a plain flat fit at k = K_c.
+    coarse_cfg = config.replace(k=k_c, coarse_k=None, n_probe=1)
+    coarse_res = run_flat(docs, coarse_cfg)
+    coarse_index = coarse_res.state.index
+    coarse_labels = np.asarray(coarse_res.assign, np.int64)[:n]
+
+    # 2. Partition by coarse assignment + 3. per-cell fine fits.
+    sizes = np.bincount(coarse_labels, minlength=k_c)
+    fine_k = _allocate_fine_k(sizes, k)
+    starts = np.concatenate([[0], np.cumsum(fine_k)[:-1]])
+    if is_store:
+        views = partition_store(docs, coarse_labels, k_c,
+                                chunk_size=config.chunk_size)
+    else:
+        order = np.argsort(coarse_labels, kind="stable")
+    coarse_means = np.asarray(coarse_index.means_t).T    # (K_c, D)
+
+    labels = np.zeros((n,), np.int64)
+    rho = np.zeros((n,), np.float32)
+    fine_means = []
+    cell_meta = []
+    all_converged = bool(coarse_res.converged)
+    row_start = 0
+    for c in range(k_c):
+        n_c = int(sizes[c])
+        if n_c == 0:
+            # Empty cell: its coarse mean stands in as the one fine
+            # centroid, so routing into it still has a candidate.
+            fine_means.append(coarse_means[c:c + 1])
+            cell_meta.append({"n_docs": 0, "k": 1, "n_iter": 0,
+                              "converged": True})
+            continue
+        if is_store:
+            cell_docs = views[c]
+            rows = np.asarray(cell_docs.rows)
+        else:
+            rows = order[row_start:row_start + n_c]
+            row_start += n_c
+            cell_docs = _gather_rows_docs(docs, rows)
+        k_i = int(fine_k[c])
+        cell_cfg = config.replace(
+            k=k_i, coarse_k=None, n_probe=1, seed=config.seed + c + 1,
+            checkpoint_dir=None)   # cells share no checkpoint namespace
+        res = run_flat(cell_docs, cell_cfg)
+        fine_means.append(np.asarray(res.state.index.means_t).T)
+        labels[rows] = starts[c] + np.asarray(res.assign, np.int64)[:n_c]
+        rho[rows] = np.asarray(res.state.rho_self, np.float32)[:n_c]
+        all_converged &= bool(res.converged)
+        cell_meta.append({"n_docs": n_c, "k": k_i,
+                          "n_iter": int(res.n_iter),
+                          "converged": bool(res.converged)})
+
+    # 4. Nested artifact over the concatenated fine index.  The flat
+    # surface only runs exact-mode classifies, which never read the
+    # structural thresholds — trivial params keep the artifact honest
+    # about that (per-cell fits estimated their own, recorded in history).
+    means_all = np.concatenate(fine_means, axis=0)       # (K_eff, D)
+    k_eff = means_all.shape[0]
+    index = build_mean_index(jnp.asarray(means_all, jnp.float32),
+                             StructuralParams.trivial(dim))
+    cell_sizes = np.asarray([m.shape[0] for m in fine_means], np.int32)
+    model = TwoLevelFittedModel(
+        index=index,
+        coarse_index=coarse_index,
+        cell_sizes=cell_sizes,
+        n_probe=config.n_probe,
+        cell_meta=cell_meta,
+        labels=labels.astype(np.int32),
+        rho_self=rho,
+        history=list(coarse_res.history),
+        converged=all_converged,
+        n_iter=int(coarse_res.n_iter),
+        algo=config.algo,
+        backend=resolve_backend(config.backend).name,
+        strategy="two_level",
+        tuned=None,
+    )
+    state = KMeansState(
+        index=index,
+        assign=jnp.asarray(labels, jnp.int32),
+        rho_self=jnp.asarray(rho),
+        rho_self_prev=jnp.asarray(rho),
+        iteration=jnp.asarray(model.n_iter, jnp.int32),
+        ub=jnp.zeros((n, n_ub_groups(k_eff)), jnp.float32),
+    )
+    return TwoLevelResult(
+        model=model, state=state, assign=model.labels,
+        history=model.history, params=index.params,
+        converged=model.converged, n_iter=model.n_iter)
+
+
+def two_level_from_means(mean_docs: SparseDocs, coarse_k: int, *,
+                         n_probe: int = 1, backend: str = "reference",
+                         algo: str = "mivi", seed: int = 0,
+                         max_iter: int = 10,
+                         batch_size: int = 4096) -> TwoLevelFittedModel:
+    """Wrap K given unit-norm sparse vectors as the FINE means of a nested
+    model, coarse-clustering the means themselves into K_c cells.
+
+    This is the benchmark's (and any warm-start's) entry point to the
+    routed classify at large effective K without paying a K-cluster corpus
+    fit: the vectors (e.g. sampled documents standing in for centroids)
+    become the fine level verbatim — only reordered cell-block-contiguously
+    — and a small flat fit over them builds the coarse level.  Empty coarse
+    cells keep their coarse mean, so K_eff = K + (# empty cells).
+    """
+    from repro.cluster.strategies import resolve_strategy
+    from repro.sparse import to_dense
+
+    k = mean_docs.n_docs
+    dim = mean_docs.dim
+    cfg = ClusterConfig(k=coarse_k, algo=algo, backend=backend, params=None,
+                        seed=seed, max_iter=max_iter, batch_size=batch_size,
+                        n_probe=1).validate()
+    res = resolve_strategy(cfg, mean_docs).fit(mean_docs, cfg, df=None)
+    coarse_index = res.state.index
+    labels = np.asarray(res.assign, np.int64)
+    sizes = np.bincount(labels, minlength=coarse_k)
+    order = np.argsort(labels, kind="stable")
+    dense = np.asarray(to_dense(mean_docs), np.float32)[order]
+    coarse_means = np.asarray(coarse_index.means_t).T
+    blocks, cell_sizes, start = [], [], 0
+    for c in range(coarse_k):
+        n_c = int(sizes[c])
+        if n_c == 0:
+            blocks.append(coarse_means[c:c + 1])
+            cell_sizes.append(1)
+            continue
+        blocks.append(dense[start:start + n_c])
+        cell_sizes.append(n_c)
+        start += n_c
+    means_all = np.concatenate(blocks, axis=0)
+    index = build_mean_index(jnp.asarray(means_all),
+                             StructuralParams.trivial(dim))
+    return TwoLevelFittedModel(
+        index=index, coarse_index=coarse_index,
+        cell_sizes=np.asarray(cell_sizes, np.int32), n_probe=n_probe,
+        cell_meta=[], backend=backend, algo=algo, strategy="two_level")

@@ -188,16 +188,37 @@ class ClusterEngine:
             raise
         return server
 
-    def classify(self, docs):
+    def _two_level_source(self):
+        """The nested artifact when this engine serves one, else None
+        (duck-typed on the coarse index so the engine stays import-light)."""
+        return (self._source if getattr(self._source, "coarse_index", None)
+                is not None else None)
+
+    def classify(self, docs, *, n_probe: int | None = None):
         """docs: SparseDocs | DocStore -> (assign (N,) int32, sims (N,)).
 
         The same fused path as ``SphericalKMeans.predict`` /
         ``FittedModel.predict`` (repro/cluster/classify.py).  An
         out-of-core :class:`repro.sparse.DocStore` streams chunk by chunk
         through the prefetcher — the engine can classify corpora larger
-        than device memory."""
-        from repro.cluster.classify import classify_docs
+        than device memory.
 
+        An engine built from a nested :class:`TwoLevelFittedModel` routes
+        through the coarse level (classify_docs_routed, DESIGN.md §13):
+        per object it scores K_c coarse means plus only the probed cells'
+        fine means — the web-scale ANN path.  ``n_probe`` overrides the
+        model's probe width for this call (n_probe = K_c is exact and IS
+        the flat scan); flat engines reject the override."""
+        from repro.cluster.classify import classify_docs, classify_docs_routed
+
+        two_level = self._two_level_source()
+        if two_level is not None:
+            return classify_docs_routed(two_level, docs, n_probe=n_probe,
+                                        backend=self.backend,
+                                        batch_size=self.batch_size)
+        if n_probe is not None:
+            raise ValueError("n_probe only applies to an engine serving a "
+                             "two-level model")
         return classify_docs(self.index, docs, backend=self.backend,
                              batch_size=self.batch_size)
 
@@ -224,6 +245,15 @@ class ClusterEngine:
         from repro.sparse import pad_rows
         from repro.sparse.store import DocStore
 
+        if self._two_level_source() is not None:
+            # A flat rebuild would move fine means out from under the frozen
+            # coarse quantizer (and the routed operand cache), silently
+            # degrading routing; re-fit through the two_level strategy
+            # instead of corrupting the nesting in place.
+            raise NotImplementedError(
+                "refit is not supported on a two-level model: the flat "
+                "update phase cannot maintain the coarse level; run a fresh "
+                "fit with ClusterConfig(coarse_k=...) and hot-swap it")
         if isinstance(docs, DocStore):
             return self._refit_store(docs, n_iter=n_iter)
         if docs.n_docs == 0:

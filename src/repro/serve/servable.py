@@ -57,6 +57,26 @@ def _serving_classify(backend: str, ids, vals, nnz, dim: int, index, bs: int):
     return _classify_fused(backend, ids, vals, nnz, dim, index, bs)
 
 
+@partial(jax.jit, static_argnames=("backend", "dim", "bs", "cmax", "n_probe"))
+def _serving_classify_routed(backend: str, ids, vals, nnz, dim: int,
+                             coarse_index, means_ext, starts, sizes, bs: int,
+                             cmax: int, n_probe: int):
+    """The coarse-routed twin of :func:`_serving_classify` (two-level
+    models, DESIGN.md §13): same trace-count key (backend, dim, K_eff,
+    bucket), so the per-bucket compile ratchet covers routed serving with
+    no special-casing — a two-level model costs the same one compile per
+    bucket as a flat one.  The routed operands (means_ext, starts, sizes)
+    are traced arguments, so a hot-swap of a same-geometry nested model
+    also costs zero recompiles."""
+    from repro.cluster.classify import _routed_fused
+
+    with _TRACE_LOCK:
+        TRACE_COUNTS[(backend, dim, int(means_ext.shape[1]) - 1, bs)] += 1
+    a, s, _ = _routed_fused(backend, ids, vals, nnz, dim, coarse_index,
+                            means_ext, starts, sizes, bs, cmax, n_probe)
+    return a, s
+
+
 class PreparedBatch:
     """One pre-processed request batch, ready for the device thread."""
 
@@ -110,6 +130,15 @@ class ServableClusterModel:
             from repro.tune import TUNED_CACHE, TunedConfig
 
             TUNED_CACHE.put(tuned["signature"], TunedConfig.from_dict(tuned))
+        # Two-level artifacts serve through the coarse-routed epoch unless
+        # they probe every cell (n_probe = K_c IS the flat scan — run it on
+        # the flat fast path, which is also what keeps it bit-identical to
+        # flat serving on every backend).
+        self._routed_ops = None
+        self.n_probe = int(getattr(model, "n_probe", 0) or 0)
+        if (getattr(model, "coarse_index", None) is not None
+                and self.n_probe < model.coarse_k):
+            self._routed_ops = model._routed_operands()
 
     # -- bucket selection ---------------------------------------------------
     @property
@@ -183,7 +212,15 @@ class ServableClusterModel:
         """Launch the fused classify epoch for one prepared batch.  Returns
         the (assign, sims) DEVICE arrays without a host sync — jax dispatch
         is async, so the device thread moves on to the next batch while this
-        one computes."""
+        one computes.  Two-level models launch the coarse-routed twin
+        instead (same async discipline, same one-compile-per-bucket)."""
+        if self._routed_ops is not None:
+            coarse_index, means_ext, starts, sizes, cmax = self._routed_ops
+            return _serving_classify_routed(
+                self.backend, jnp.asarray(batch.ids),
+                jnp.asarray(batch.vals), jnp.asarray(batch.nnz), self.dim,
+                coarse_index, means_ext, starts, sizes, batch.bucket,
+                cmax, self.n_probe)
         return _serving_classify(self.backend, jnp.asarray(batch.ids),
                                  jnp.asarray(batch.vals),
                                  jnp.asarray(batch.nnz), self.dim,

@@ -24,7 +24,9 @@ from repro.sparse.store import (
     ChunkPrefetcher,
     DocStore,
     DocStoreBuilder,
+    SubsetStore,
     as_store,
+    partition_store,
 )
 
 __all__ = [
@@ -41,5 +43,7 @@ __all__ = [
     "ChunkPrefetcher",
     "DocStore",
     "DocStoreBuilder",
+    "SubsetStore",
     "as_store",
+    "partition_store",
 ]

@@ -196,6 +196,17 @@ class DocStore:
                    chunks=chunks,
                    df=None if df is None else np.asarray(df))
 
+    def subset(self, rows, *, chunk_size: int | None = None) -> "SubsetStore":
+        """A read-only row-subset *view* of this store (DESIGN.md §13).
+
+        The two-level fit partitions an out-of-core corpus by coarse
+        assignment; a :class:`SubsetStore` presents one partition as a
+        first-class DocStore — same uniform-chunk interface, same dead-row
+        tail convention — while reading rows lazily from the parent's
+        chunks, so a per-cell corpus is never materialised densely.
+        """
+        return SubsetStore(self, rows, chunk_size=chunk_size)
+
     @classmethod
     def open(cls, directory: str) -> "DocStore":
         with open(os.path.join(directory, _META)) as f:
@@ -226,6 +237,98 @@ class DocStore:
                        "pad_width": self.pad_width,
                        "n_chunks": self.n_chunks}, f)
         return DocStore.open(directory)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned sub-store views (two-level IVF fits — DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+class SubsetStore(DocStore):
+    """A lazy row-subset view over a parent :class:`DocStore`.
+
+    Holds only the (n_sub,) global row indices; every ``host_chunk`` call
+    gathers its rows from the parent's chunks on demand (grouped so each
+    parent chunk is touched once per sub-chunk, a memmap page-in on disk
+    parents).  The view is a full DocStore: uniform ``(C, P)`` chunks, a
+    dead-row-padded tail (``nnz = 0`` under the repo-wide ``ρ_self = 0``
+    convention), ``gather_rows`` seeding reads, and the prefetcher — so the
+    streaming fit runs on a partition exactly as it runs on the parent,
+    without the 8.7M-doc regime ever materialising a per-cell corpus.
+
+    ``df`` is NOT inherited from the parent: a partition's document
+    frequencies differ from the corpus's.  Reading ``.df`` counts the
+    subset lazily; two-level fits pass the *global* df explicitly instead
+    (the df-rank term order and t_th thresholds live in global-df space).
+    """
+
+    def __init__(self, parent: DocStore, rows, *, chunk_size: int | None = None):
+        rows = np.asarray(rows, np.int64).ravel()
+        if rows.size and not ((rows >= 0) & (rows < parent.n_docs)).all():
+            raise IndexError(
+                f"subset rows out of range [0, {parent.n_docs})")
+        if rows.size == 0:
+            raise ValueError("a SubsetStore needs at least one row")
+        self.parent = parent
+        self.rows = rows
+        self.n_docs = int(rows.size)
+        self.dim = parent.dim
+        self.chunk_size = int(min(chunk_size or parent.chunk_size,
+                                  self.n_docs))
+        self.pad_width = parent.pad_width
+        self._chunks = None
+        self.directory = None
+        self._df = None
+        self.n_chunks = -(-self.n_docs // self.chunk_size)
+
+    def host_chunk(self, ci: int):
+        if not 0 <= ci < self.n_chunks:
+            raise IndexError(f"chunk {ci} out of range [0, {self.n_chunks})")
+        g = self.rows[ci * self.chunk_size:(ci + 1) * self.chunk_size]
+        c, p = self.chunk_size, self.pad_width
+        ids = np.zeros((c, p), np.int32)
+        vals = np.zeros((c, p), np.float32)
+        nnz = np.zeros((c,), np.int32)
+        # Group the gather by parent chunk so each parent chunk is read
+        # once; the trailing [len(g), c) rows stay dead (tail padding).
+        order = np.argsort(g // self.parent.chunk_size, kind="stable")
+        prev, chunk = -1, None
+        for pos in order:
+            pc, pr = divmod(int(g[pos]), self.parent.chunk_size)
+            if pc != prev:
+                chunk, prev = self.parent.host_chunk(pc), pc
+            ids[pos], vals[pos], nnz[pos] = (chunk[0][pr], chunk[1][pr],
+                                             chunk[2][pr])
+        return ids, vals, nnz
+
+    def save(self, directory: str) -> DocStore:
+        raise NotImplementedError(
+            "a SubsetStore is a transient fit-time view; save the parent "
+            "store (or subset.to_docs() for small partitions) instead")
+
+
+def partition_store(store: DocStore, labels, n_cells: int, *,
+                    chunk_size: int | None = None) -> list:
+    """Partition a store by per-row cell labels → one view per cell.
+
+    labels: (n_docs,) int — cell id per corpus row (e.g. the coarse
+    assignment).  Returns a list of ``n_cells`` entries: a
+    :class:`SubsetStore` view (rows in corpus order) for non-empty cells,
+    ``None`` for empty ones — a two-level fit gives those a single fine
+    centroid (the coarse mean) rather than fitting nothing.
+    """
+    labels = np.asarray(labels)
+    if labels.shape != (store.n_docs,):
+        raise ValueError(f"labels must be ({store.n_docs},), got "
+                         f"{labels.shape}")
+    order = np.argsort(labels, kind="stable")     # corpus order within cells
+    counts = np.bincount(labels, minlength=n_cells)
+    views, start = [], 0
+    for c in range(n_cells):
+        stop = start + int(counts[c])
+        views.append(None if stop == start else
+                     store.subset(order[start:stop], chunk_size=chunk_size))
+        start = stop
+    return views
 
 
 # ---------------------------------------------------------------------------

@@ -19,17 +19,22 @@ EXPECTED_ALL = [
     "SingleHostStrategy",
     "SphericalKMeans",
     "StreamingStrategy",
+    "TwoLevelFittedModel",
+    "TwoLevelStrategy",
     "classify_docs",
+    "classify_docs_routed",
     "fit",
     "load_model",
     "resolve_strategy",
     "transform_docs",
+    "two_level_from_means",
 ]
 
 # The execution-strategy registry (satellite of the out-of-core PR): the
 # streaming runtime is a first-class strategy, and unknown names fail with
-# the full valid list.
-EXPECTED_STRATEGIES = ["mesh", "single_host", "streaming"]
+# the full valid list.  The two-level IVF fit (million-cluster PR) rides
+# the same registry.
+EXPECTED_STRATEGIES = ["mesh", "single_host", "streaming", "two_level"]
 
 EXPECTED_SIGNATURES = {
     "SphericalKMeans.__init__":
@@ -40,7 +45,8 @@ EXPECTED_SIGNATURES = {
         "chunk_size: 'int' = 1024, algo_mode: 'str' = 'full', "
         "checkpoint_dir: 'str | None' = None, "
         "checkpoint_every: 'int' = 5, tune: 'str' = 'off', "
-        "tune_budget=None)",
+        "tune_budget=None, coarse_k: 'int | None' = None, "
+        "n_probe: 'int' = 1)",
     "SphericalKMeans.fit": "(self, docs, df=None) -> 'SphericalKMeans'",
     "SphericalKMeans.predict": "(self, docs) -> 'np.ndarray'",
     "SphericalKMeans.transform": "(self, docs) -> 'np.ndarray'",
@@ -66,7 +72,8 @@ EXPECTED_SIGNATURES = {
         "(cls, model, *, backend: 'str | None' = None, "
         "batch_size: 'int' = 4096) -> 'ClusterEngine'",
     "ClusterEngine.to_model": "(self)",
-    "ClusterEngine.classify": "(self, docs)",
+    "ClusterEngine.classify":
+        "(self, docs, *, n_probe: 'int | None' = None)",
     "ClusterEngine.refit": "(self, docs, *, n_iter: 'int' = 1)",
     "fit": "(docs, config: 'ClusterConfig', *, df=None) -> 'FittedModel'",
     "load_model":
@@ -82,7 +89,7 @@ EXPECTED_SIGNATURES = {
 EXPECTED_CONFIG_FIELDS = [
     "k", "algo", "backend", "params", "batch_size", "chunk_size", "max_iter",
     "est_grid", "est_iters", "seed", "mesh", "algo_mode", "checkpoint_dir",
-    "checkpoint_every", "tune", "tune_budget",
+    "checkpoint_every", "tune", "tune_budget", "coarse_k", "n_probe",
 ]
 
 EXPECTED_MODEL_FIELDS = [
@@ -121,7 +128,7 @@ def test_config_and_model_fields_snapshot():
 
 
 def test_strategy_registry_snapshot_and_error_lists_valid_names():
-    """The registry holds exactly the three runtimes, and resolving an
+    """The registry holds exactly the four runtimes, and resolving an
     unknown strategy names every valid one in the error (deprecation
     hygiene: callers learn the streaming runtime exists)."""
     import pytest

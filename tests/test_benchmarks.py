@@ -134,3 +134,61 @@ def test_check_serving_gates():
         mutate(rows)
         assert check_serving(rows) == 1
     assert check_serving([dict(r) for r in good[:1]]) == 1  # no bucket rows
+
+
+def test_ivf_suite_registered():
+    names = [n for n, _ in SUITES]
+    assert "ivf" in names
+    assert JSON_SUITES["ivf"] == "BENCH_ivf.json"
+
+
+def test_check_ivf_gates():
+    """The IVF ratchet passes a healthy artifact and fails each broken
+    invariant: routed Mult not below flat at gated scale, wall-clock loss,
+    silently dropped recall, candidate-bound breach, non-bit-identical
+    delegation, unresolvable/cross-backend speedups, missing rows."""
+    from benchmarks.ratchet import check_ivf
+
+    good = [
+        {"name": "ivf/K4096/flat_classify", "k_eff": 4096, "k_c": 64,
+         "mult_per_doc": 2.0e5, "backend": "reference"},
+        {"name": "ivf/K4096/routed_p1", "k_eff": 4096, "k_c": 64,
+         "n_probe": 1, "mult_per_doc": 5.0e3, "recall_at1": 0.99,
+         "scored_max": 150, "scored_bound": 160, "backend": "reference",
+         "vs": "ivf/K4096/flat_classify", "speedup": 5.0,
+         "comparable": True},
+        {"name": "ivf/K4096/routed_exact", "k_eff": 4096, "k_c": 64,
+         "n_probe": 64, "mult_per_doc": 2.0e5, "exact_match": True,
+         "backend": "reference", "vs": "ivf/K4096/flat_classify",
+         "speedup": 1.0, "comparable": True},
+    ]
+    assert check_ivf([dict(r) for r in good]) == 0
+
+    breakages = [
+        lambda r: r[1].update(mult_per_doc=3.0e5),        # lost the Mult race
+        lambda r: r[1].update(speedup=0.5),               # lost the wall race
+        lambda r: r[1].pop("recall_at1"),                 # dropped accuracy
+        lambda r: r[1].update(scored_max=170),            # bound breached
+        lambda r: r[2].update(exact_match=False),         # delegation not exact
+        lambda r: r[1].update(vs="ivf/K4096/nope"),       # dangling vs
+        lambda r: r[1].update(backend="pallas"),          # cross-backend ratio
+        lambda r: r.pop(2),                               # no exact row
+        lambda r: r.pop(1),                               # no routed_p1 row
+    ]
+    for mutate in breakages:
+        rows = [dict(r) for r in good]
+        mutate(rows)
+        assert check_ivf(rows) == 1
+
+    # below the 4096 gate the Mult/wall ratchets do not apply (the routed
+    # path is allowed to lose at toy scale), but honesty gates still do
+    small = [dict(r) for r in good]
+    for r in small:
+        r["name"] = r["name"].replace("K4096", "K1024")
+        r["k_eff"] = 1024
+        if "vs" in r:
+            r["vs"] = "ivf/K1024/flat_classify"
+    small[1].update(mult_per_doc=3.0e5, speedup=0.5)
+    assert check_ivf(small) == 0
+    small[1].pop("recall_at1")
+    assert check_ivf(small) == 1

@@ -1,0 +1,287 @@
+"""Two-level IVF fit + coarse-routed classify (DESIGN.md §13).
+
+Acceptance criteria under test (million-cluster PR):
+
+  * ``ClusterConfig(coarse_k=K_c)`` routes through the ``two_level``
+    strategy and yields a nested :class:`TwoLevelFittedModel` whose fine
+    index concatenates per-cell blocks (Σ cell_sizes = K_eff, every cell
+    >= 1) with global labels;
+  * the routed classify at ``n_probe=1`` scores at most K_c + max-cell-size
+    centroids per object — asserted via the ``scored`` Mult counters, not
+    assumed;
+  * ``n_probe = K_c`` is bit-identical to the flat scan over ``model.index``
+    on BOTH backends (it delegates to the flat path);
+  * on the general (gather-TAAT) path, every winning similarity is bitwise
+    equal to the flat scan's — the routed epoch runs the same float32
+    additions in the same order, so approximation lives only in the
+    candidate set, never in the arithmetic;
+  * the nested artifact save/loads through the checkpoint store (format
+    dispatch in ``FittedModel.load``) and serves through ClusterServer with
+    results bit-identical to the direct routed classify;
+  * every front door (ClusterConfig, SphericalKMeans, module ``fit``)
+    rejects malformed two-level knobs with actionable errors.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterEngine, FittedModel,
+                           SphericalKMeans, TwoLevelFittedModel, classify_docs,
+                           classify_docs_routed, fit, load_model,
+                           resolve_strategy, two_level_from_means)
+from repro.cluster.two_level import _allocate_fine_k
+from repro.data import CorpusSpec, make_corpus
+from repro.sparse import DocStore
+
+K, K_C = 24, 4
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(n_docs=600, vocab=512, nt_mean=20,
+                                  n_topics=12, seed=0))
+
+
+@pytest.fixture(scope="module")
+def two_level(corpus):
+    docs, df, perm, topics = corpus
+    model = fit(docs, ClusterConfig(k=K, coarse_k=K_C, n_probe=1, max_iter=12,
+                                    batch_size=200, seed=1), df=df)
+    return docs, df, model
+
+
+# ---------------------------------------------------------------------------
+# Fit: nested artifact shape and label invariants.
+# ---------------------------------------------------------------------------
+
+def test_two_level_fit_builds_nested_model(two_level):
+    docs, df, model = two_level
+    assert isinstance(model, TwoLevelFittedModel)
+    assert model.strategy == "two_level"
+    assert model.coarse_k == K_C
+    assert model.coarse_index.k == K_C
+    # fine blocks: one per cell, every cell holds >= 1 centroid, and the
+    # concatenated index is exactly the sum of the blocks
+    assert model.cell_sizes.shape == (K_C,)
+    assert (model.cell_sizes >= 1).all()
+    assert int(model.cell_sizes.sum()) == model.index.k
+    assert len(model.cell_meta) == K_C
+    assert sum(m["n_docs"] for m in model.cell_meta) == docs.n_docs
+    # labels live in the GLOBAL fine space and each row's label falls in
+    # its own cell's block [start, start + size)
+    labels = model.labels
+    assert labels.shape == (docs.n_docs,)
+    assert labels.min() >= 0 and labels.max() < model.index.k
+    starts = model.cell_starts
+    a_coarse, _ = classify_docs(model.coarse_index, docs,
+                                backend=model.backend)
+    cell_of_label = np.searchsorted(starts, labels, side="right") - 1
+    assert (cell_of_label == a_coarse).all()
+
+
+def test_allocate_fine_k_invariants():
+    sizes = np.asarray([0, 1, 7, 100, 3])
+    alloc = _allocate_fine_k(sizes, 50)
+    assert (alloc >= 1).all()                       # empty cells keep 1
+    assert (alloc <= np.maximum(sizes, 1)).all()    # never over population
+    assert int(alloc.sum()) == min(50, int(np.maximum(sizes, 1).sum()))
+    # deterministic
+    assert (alloc == _allocate_fine_k(sizes, 50)).all()
+    # k below the cell count still gives every cell its floor of 1
+    tiny = _allocate_fine_k(np.asarray([5, 5, 5]), 2)
+    assert (tiny == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Routed classify: exactness, bitwise identity, Mult counters.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_n_probe_all_is_bitwise_flat(two_level, backend):
+    """n_probe = K_c probes every cell — it IS the flat scan (delegation),
+    so assign AND sims are bitwise equal on every backend."""
+    docs, df, model = two_level
+    a_flat, s_flat = classify_docs(model.index, docs, backend=backend,
+                                   batch_size=200)
+    a, s = classify_docs_routed(model, docs, n_probe=K_C, backend=backend,
+                                batch_size=200)
+    assert (a == a_flat).all()
+    assert (s == s_flat).all()
+
+
+def test_routed_winning_sims_are_bitwise_flat(two_level):
+    """General path (n_probe < K_c): whenever the routed argmax agrees with
+    the flat one, the winning similarity is BITWISE equal — the gather-TAAT
+    epoch adds the same float32 terms in the same order as the flat scan."""
+    docs, df, model = two_level
+    a_flat, s_flat = classify_docs(model.index, docs, backend="reference",
+                                   batch_size=200)
+    a, s = classify_docs_routed(model, docs, n_probe=1, backend="reference",
+                                batch_size=200)
+    hit = a == a_flat
+    assert hit.mean() > 0.9                        # sharp-topic corpus
+    assert (s[hit] == s_flat[hit]).all()
+    # misses can only score LOWER than the true winner (candidate set
+    # misses the argmax, never mis-scores it)
+    assert (s[~hit] <= s_flat[~hit]).all()
+
+
+def test_scored_counter_respects_candidate_bound(two_level):
+    """The Mult accounting hook: scored[i] = K_c + Σ probed cell sizes,
+    bounded by K_c + max cell size at n_probe=1 — far below K_eff."""
+    docs, df, model = two_level
+    _, _, scored = classify_docs_routed(model, docs, n_probe=1,
+                                        backend="reference", batch_size=200,
+                                        with_stats=True)
+    cmax = int(model.cell_sizes.max())
+    assert scored.max() <= K_C + cmax
+    assert scored.min() >= K_C + int(model.cell_sizes.min())
+    # delegation reports the honest exhaustive count
+    _, _, sc_all = classify_docs_routed(model, docs, n_probe=K_C,
+                                        backend="reference", batch_size=200,
+                                        with_stats=True)
+    assert (sc_all == model.index.k).all()
+
+
+def test_predict_uses_model_default_n_probe(two_level):
+    docs, df, model = two_level
+    a_routed, _ = classify_docs_routed(model, docs, n_probe=1, batch_size=200)
+    assert (model.predict(docs, batch_size=200) == a_routed).all()
+    assert np.isfinite(model.score(docs, batch_size=200))
+
+
+def test_n_probe_validation(two_level):
+    docs, df, model = two_level
+    for bad in (0, K_C + 1, -3):
+        with pytest.raises(ValueError, match="n_probe"):
+            classify_docs_routed(model, docs, n_probe=bad)
+
+
+# ---------------------------------------------------------------------------
+# DocStore: two-level fit and routed classify over chunks.
+# ---------------------------------------------------------------------------
+
+def test_two_level_fit_over_store_matches_resident(two_level):
+    """A non-chunk-aligned DocStore fit routes coarse+fine levels through
+    the streaming runtime and lands on the resident clustering; the routed
+    classify over the store equals the resident routed classify."""
+    docs, df, model = two_level
+    store = DocStore.from_docs(docs, chunk_size=144)     # 600 % 144 != 0
+    km = SphericalKMeans(k=K, coarse_k=K_C, max_iter=12, batch_size=200,
+                         seed=1).fit(store, df=df)
+    smodel = km.model_
+    assert isinstance(smodel, TwoLevelFittedModel)
+    assert (smodel.labels == model.labels).all()
+    a_res, s_res = classify_docs_routed(smodel, docs, batch_size=200)
+    a_st, s_st = classify_docs_routed(smodel, store, batch_size=200)
+    assert (a_st == a_res).all()
+    assert (s_st == s_res).all()
+
+
+# ---------------------------------------------------------------------------
+# Artifact: save/load round-trip through the checkpoint store.
+# ---------------------------------------------------------------------------
+
+def test_save_load_round_trip(two_level, tmp_path):
+    docs, df, model = two_level
+    path = str(tmp_path / "nested")
+    model.save(path)
+    loaded = load_model(path)                      # format dispatch
+    assert type(loaded) is TwoLevelFittedModel
+    assert loaded.coarse_k == K_C and loaded.n_probe == model.n_probe
+    assert (loaded.cell_sizes == model.cell_sizes).all()
+    assert loaded.cell_meta == model.cell_meta
+    np.testing.assert_array_equal(
+        np.asarray(loaded.index.means_t), np.asarray(model.index.means_t))
+    np.testing.assert_array_equal(
+        np.asarray(loaded.coarse_index.means_t),
+        np.asarray(model.coarse_index.means_t))
+    a0, s0 = classify_docs_routed(model, docs, batch_size=200)
+    a1, s1 = classify_docs_routed(loaded, docs, batch_size=200)
+    assert (a0 == a1).all() and (s0 == s1).all()
+    # FittedModel.load dispatches too (cls is FittedModel)
+    assert type(FittedModel.load(path)) is TwoLevelFittedModel
+
+
+# ---------------------------------------------------------------------------
+# Engine + serving plane.
+# ---------------------------------------------------------------------------
+
+def test_engine_routes_and_guards_refit(two_level):
+    docs, df, model = two_level
+    engine = ClusterEngine.from_model(model)
+    a_ref, s_ref = classify_docs_routed(model, docs, batch_size=4096)
+    a, s = engine.classify(docs)
+    assert (a == a_ref).all() and (s == s_ref).all()
+    # per-call n_probe override; K_c == flat
+    a_flat, s_flat = classify_docs(model.index, docs)
+    a2, s2 = engine.classify(docs, n_probe=K_C)
+    assert (a2 == a_flat).all() and (s2 == s_flat).all()
+    with pytest.raises(NotImplementedError, match="coarse"):
+        engine.refit(docs)
+    # flat engines reject the two-level-only knob instead of ignoring it
+    flat = fit(docs, ClusterConfig(k=8, max_iter=4, batch_size=200, seed=1),
+               df=df)
+    with pytest.raises(ValueError, match="n_probe"):
+        ClusterEngine.from_model(flat).classify(docs, n_probe=2)
+
+
+def test_served_routed_classify_is_bit_identical(two_level):
+    from repro.serve import ClusterServer
+
+    docs, df, model = two_level
+    a_ref, s_ref = classify_docs_routed(model, docs, batch_size=4096)
+    rows = (np.asarray(docs.ids), np.asarray(docs.vals), np.asarray(docs.nnz))
+    with ClusterServer(max_live_batches=2) as srv:
+        srv.load("ivf", model, batch_sizes=(64, 256))
+        a, s = srv.classify("ivf", rows)
+    assert (a == a_ref).all()
+    assert (s == s_ref).all()
+
+
+# ---------------------------------------------------------------------------
+# two_level_from_means (the benchmark/warm-start entry point).
+# ---------------------------------------------------------------------------
+
+def test_from_means_wraps_vectors_as_fine_level(corpus):
+    docs, df, perm, topics = corpus
+    model = two_level_from_means(docs, 6, n_probe=1, max_iter=5)
+    assert isinstance(model, TwoLevelFittedModel)
+    assert model.coarse_k == 6
+    assert model.index.k >= docs.n_docs            # + one per empty cell
+    assert int(model.cell_sizes.sum()) == model.index.k
+    # every supplied vector IS a fine centroid: self-classification at
+    # n_probe=K_c finds a unit-similarity winner
+    _, s = classify_docs_routed(model, docs, n_probe=6)
+    np.testing.assert_allclose(s, 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Validation at every front door.
+# ---------------------------------------------------------------------------
+
+def test_config_validates_two_level_knobs():
+    with pytest.raises(ValueError, match="coarse_k must be >= 2"):
+        ClusterConfig(k=8, coarse_k=1).validate()
+    with pytest.raises(ValueError, match="coarse_k must be < k"):
+        ClusterConfig(k=8, coarse_k=8).validate()
+    with pytest.raises(ValueError, match="n_probe"):
+        ClusterConfig(k=8, coarse_k=4, n_probe=0).validate()
+    with pytest.raises(ValueError, match="n_probe"):
+        ClusterConfig(k=8, coarse_k=4, n_probe=5).validate()
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="mesh"):
+        ClusterConfig(k=8, coarse_k=4, mesh=mesh).validate()
+    assert ClusterConfig(k=8, coarse_k=4).strategy == "two_level"
+    assert ClusterConfig(k=8).strategy == "single_host"
+
+
+def test_estimator_and_module_front_doors_validate(corpus):
+    docs, df, perm, topics = corpus
+    with pytest.raises(ValueError, match="coarse_k"):
+        SphericalKMeans(k=8, coarse_k=1).fit(docs, df=df)
+    with pytest.raises(ValueError, match="n_probe"):
+        fit(docs, ClusterConfig(k=8, coarse_k=4, n_probe=9), df=df)
+    with pytest.raises(ValueError, match="coarse_k"):
+        resolve_strategy(ClusterConfig(k=8, coarse_k=4, n_probe=1)
+                         ).fit(docs, ClusterConfig(k=8))

@@ -394,6 +394,129 @@ def test_mesh_fit_over_store_matches_mesh_fit_over_docs():
 
 
 # ---------------------------------------------------------------------------
+# SubsetStore / partition_store (two-level IVF data plane, DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+from repro.sparse.store import SubsetStore, partition_store  # noqa: E402
+
+# The subset/partition invariants are property tests: hypothesis explores
+# the (chunking × row-set) space when installed; otherwise a seeded
+# deterministic sweep over the same space keeps the invariants enforced
+# (the container may not ship hypothesis, and silently skipping the whole
+# data-plane contract would be worse than a fixed sample).
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+def _subset_cases(n_cases=25):
+    rng = np.random.default_rng(0)
+    for _ in range(n_cases):
+        yield (int(rng.choice([64, 100, 128, 149, 400])),
+               None if rng.random() < 0.3 else int(rng.integers(1, 91)),
+               rng.integers(0, 400, size=int(rng.integers(1, 61))).tolist())
+
+
+def _check_subset_gather_parity(tiny_corpus, parent_chunk, sub_chunk, rows):
+    """A SubsetStore view over ANY (duplicated, unordered, non-chunk-
+    aligned) row set reproduces fancy indexing into the resident corpus,
+    chunk by uniform chunk, with the dead-row tail fully inert."""
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=parent_chunk)
+    rows = np.asarray(rows)
+    sub = store.subset(rows, chunk_size=sub_chunk)
+    assert sub.n_docs == len(rows)
+    assert sub.n_chunks == -(-sub.n_docs // sub.chunk_size)
+
+    ids_ref = np.asarray(docs.ids)[rows]
+    vals_ref = np.asarray(docs.vals)[rows]
+    nnz_ref = np.asarray(docs.nnz)[rows]
+    out = sub.to_docs()
+    np.testing.assert_array_equal(np.asarray(out.ids), ids_ref)
+    np.testing.assert_array_equal(np.asarray(out.vals), vals_ref)
+    np.testing.assert_array_equal(np.asarray(out.nnz), nnz_ref)
+
+    # uniform chunk shapes; the final chunk's tail rows are DEAD (nnz = 0
+    # with zeroed tuples — the ρ_self = 0 inert-row convention)
+    c = sub.chunk_size
+    ids_l, vals_l, nnz_l = sub.host_chunk(sub.n_chunks - 1)
+    assert ids_l.shape == (c, store.pad_width)
+    tail = sub.n_docs - (sub.n_chunks - 1) * c
+    assert (nnz_l[tail:] == 0).all()
+    assert (ids_l[tail:] == 0).all() and (vals_l[tail:] == 0).all()
+
+
+def _check_partition_covers_once(tiny_corpus, n_cells, seed):
+    """partition_store: every corpus row lands in exactly one cell view,
+    views keep corpus order, empty cells come back as None."""
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=149)      # non-aligned
+    labels = np.random.default_rng(seed).integers(0, n_cells,
+                                                  size=store.n_docs)
+    views = partition_store(store, labels, n_cells)
+    assert len(views) == n_cells
+    seen = []
+    for c, v in enumerate(views):
+        if (labels == c).sum() == 0:
+            assert v is None
+            continue
+        assert isinstance(v, SubsetStore)
+        assert (labels[v.rows] == c).all()
+        assert (np.diff(v.rows) > 0).all()                # corpus order
+        seen.append(v.rows)
+    np.testing.assert_array_equal(np.sort(np.concatenate(seen)),
+                                  np.arange(store.n_docs))
+
+
+if HAS_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(parent_chunk=st.sampled_from([64, 100, 128, 149, 400]),
+           sub_chunk=st.one_of(st.none(), st.integers(1, 90)),
+           rows=st.lists(st.integers(0, 399), min_size=1, max_size=60))
+    def test_subset_store_gather_parity(tiny_corpus, parent_chunk, sub_chunk,
+                                        rows):
+        _check_subset_gather_parity(tiny_corpus, parent_chunk, sub_chunk,
+                                    rows)
+
+    @settings(deadline=None, max_examples=25)
+    @given(n_cells=st.integers(1, 9), seed=st.integers(0, 2**16))
+    def test_partition_store_covers_rows_exactly_once(tiny_corpus, n_cells,
+                                                      seed):
+        _check_partition_covers_once(tiny_corpus, n_cells, seed)
+else:
+    @pytest.mark.parametrize("case", list(_subset_cases()))
+    def test_subset_store_gather_parity(tiny_corpus, case):
+        _check_subset_gather_parity(tiny_corpus, *case)
+
+    @pytest.mark.parametrize("n_cells,seed",
+                             [(c, s) for c in (1, 2, 5, 9)
+                              for s in (0, 7, 4242)])
+    def test_partition_store_covers_rows_exactly_once(tiny_corpus, n_cells,
+                                                      seed):
+        _check_partition_covers_once(tiny_corpus, n_cells, seed)
+
+
+def test_subset_store_validation_and_df(tiny_corpus):
+    docs, df, perm, topics = tiny_corpus
+    store = DocStore.from_docs(docs, chunk_size=128)
+    with pytest.raises(IndexError, match="out of range"):
+        store.subset([0, 400])
+    with pytest.raises(ValueError, match="at least one row"):
+        store.subset([])
+    sub = store.subset([3, 1, 250])
+    with pytest.raises(NotImplementedError, match="transient"):
+        sub.save("/tmp/nope")
+    # df is NOT inherited from the parent: it counts the subset lazily
+    # (two-level fits pass the global df explicitly instead)
+    np.testing.assert_array_equal(
+        np.asarray(sub.df), np.asarray(df_counts(sub.to_docs())))
+    # the prefetcher runs over a view like over any store
+    assert [ci for ci, _ in ChunkPrefetcher(sub)] == [0]
+
+
+# ---------------------------------------------------------------------------
 # Config / strategy routing.
 # ---------------------------------------------------------------------------
 
