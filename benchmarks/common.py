@@ -6,10 +6,11 @@ validate the paper's *relative* claims (speedups, CPR curves, filter
 exactness), not absolute wall-times.
 
 Backend selection: every suite builds its clusterers through
-:func:`make_kmeans`, so one env var flips the whole harness onto the Pallas
-kernel path ('auto' resolves per-platform; see core/backends.py):
+:func:`make_kmeans`, so one env var flips the whole harness onto a kernel
+engine — 'pallas', 'xla_blocked', or 'auto' (resolves per-platform; see
+core/backends.py):
 
-    REPRO_BACKEND=pallas PYTHONPATH=src python -m benchmarks.run --only table4
+    REPRO_BACKEND=xla_blocked PYTHONPATH=src python -m benchmarks.run --only table4
 """
 from __future__ import annotations
 
@@ -107,9 +108,10 @@ def exec_meta(backend: str = "") -> dict:
     platform = jax.default_backend()
     interpret = backend == "pallas" and platform != "tpu"
     # mode names the timed execution path explicitly: 'xla' (reference jnp
-    # ops), 'compiled' (lowered Pallas kernels), 'interpret' (the Pallas
-    # interpreter).  Suites that probe the live mode (kernel_suite) override
-    # it per row; this default matches the kernels/ops.py dispatch rule.
+    # ops AND the always-compiled xla_blocked engine), 'compiled' (lowered
+    # Pallas kernels), 'interpret' (the Pallas interpreter).  Suites that
+    # probe the live mode (kernel_suite) override it per row; this default
+    # matches the kernels/ops.py dispatch rule.
     mode = ("xla" if backend != "pallas"
             else ("interpret" if interpret else "compiled"))
     return {"platform": platform, "interpret": interpret, "mode": mode}

@@ -47,7 +47,10 @@ def run():
         state, assign=assign, rho_self=state.rho_self[:_N_SUB],
         rho_self_prev=state.rho_self_prev[:_N_SUB], ub=state.ub[:_N_SUB])
 
-    for backend in ("reference", "pallas"):
+    # Always compare all three registered engines, plus whatever
+    # REPRO_BACKEND names — deduped so the env default doesn't double a row.
+    for backend in dict.fromkeys(
+            ("reference", "pallas", "xla_blocked", default_backend())):
         def one_update(b=backend):
             out = update_step(sub, assign, prev, state_sub,
                               state.index.params, k=job.k, backend=b)

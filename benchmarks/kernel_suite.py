@@ -1,29 +1,48 @@
-"""Kernel microbenchmark suite: each Pallas clustering kernel vs its
-pure-jnp reference op at matched shapes, tuned vs default vs reference
-(ISSUE 5 satellite; compiled-mode + autotuner rows from ISSUE 6).
+"""Kernel microbenchmark suite: each clustering kernel vs its pure-jnp
+reference op at matched shapes, across BOTH engines — Pallas and the
+compiled XLA-blocked twins — tuned vs default vs reference (ISSUE 5
+satellite; compiled-mode + autotuner rows from ISSUE 6; xla_blocked rows
+and the enforced CPU ratchet from ISSUE 10).
 
 For every kernel — ``sparse_sim``, ``esicp_gather``, ``segment_update``,
-``rho_gather`` — four rows:
+``rho_gather`` — seven rows:
 
-    kernel_suite/<name>_reference        the jnp oracle (kernels/ref.py)
-    kernel_suite/<name>_pallas           the wrapper, inline occupancy
-    kernel_suite/<name>_pallas_planned   the wrapper fed a prepared
-                                         KernelPlan (cached head slabs +
-                                         precomputed occupancy)
-    kernel_suite/<name>_pallas_tuned     the wrapper under the autotuner's
-                                         winning TunedConfig + matching plan
+    kernel_suite/<name>_reference           the jnp oracle (kernels/ref.py)
+    kernel_suite/<name>_pallas              the wrapper, inline occupancy
+    kernel_suite/<name>_pallas_planned      the wrapper fed a prepared
+                                            KernelPlan (cached head slabs +
+                                            precomputed occupancy)
+    kernel_suite/<name>_pallas_tuned        the wrapper under the pallas
+                                            autotuner winner + matching plan
+    kernel_suite/<name>_xla_blocked         kernels/xla_blocked.py, plan-less
+                                            gather formulation (the engine
+                                            default: head-less)
+    kernel_suite/<name>_xla_blocked_planned the XLA twin fed the default-
+                                            geometry plan (head slabs ride a
+                                            dense GEMM)
+    kernel_suite/<name>_xla_blocked_tuned   the XLA twin under its own
+                                            engine's autotuner winner
 
-plus one ``kernel_suite/autotuner`` meta-row recording what the
-roofline-pruned search did (candidates, pruned fraction, winner).
+plus ``kernel_suite/autotuner`` / ``kernel_suite/autotuner_xla`` meta-rows
+recording what each engine's roofline-pruned search did, and
+``kernel_suite/plan_build_*`` rows timing KernelPlan construction
+*separately* from the steady-state kernel calls it feeds (plan build is
+host-side, once-per-fit work — folding it into a per-call timing would
+misprice both).
 
 Execution-mode honesty: the suite *attempts* compiled (non-interpret)
 Pallas first and falls back to interpret mode only when the platform
-refuses to lower it (CPU backends).  Every pallas row carries the live
+refuses to lower it (CPU backends); ``REPRO_KERNEL_MODE=interpret|compiled``
+overrides the probe (DESIGN.md §7).  Every pallas row carries the live
 ``interpret``/``mode`` flags, and cross-mode ratios are suppressed:
 ``speedup`` (vs the compiled-XLA reference) is null with
-``comparable: false`` whenever the kernels ran interpreted.  The
-``speedup_vs_default`` field on tuned rows compares two same-mode pallas
-timings and is therefore always valid.
+``comparable: false`` whenever the Pallas kernels ran interpreted.  The
+``xla_blocked`` rows always compile — same mode as the reference on every
+platform — so they are ``comparable: true`` everywhere, which is what lets
+benchmarks/ratchet.py enforce the compiled speedup gate on the stock CPU
+runner.  The ``speedup_vs_default`` field on tuned rows compares two
+same-engine, same-mode timings and is therefore always valid (the XLA
+engine's default is the plan-less gather row).
 
 Shapes follow the reduced-PubMed regime (Zipf-skewed synthetic corpus →
 realistic occupancy); ``REPRO_BENCH_SMOKE=1`` shrinks the shapes AND the
@@ -38,10 +57,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_row, speedup_fields, time_call_warm
+from benchmarks.common import (bench_row, speedup_fields, time_call,
+                               time_call_warm)
 from repro.kernels import ops, ref
+from repro.kernels import xla_blocked as xb
 from repro.kernels.plan import prepare_plan
-from repro.tune import DEFAULT_TUNED
 from repro.tune.search import SearchBudget, search_tuned_config
 
 
@@ -78,13 +98,23 @@ def _timed(fn, repeat):
 
 
 def _probe_compiled(ids, vals, means_t) -> bool:
-    """Attempt one compiled (non-interpret) kernel launch.
+    """Resolve whether the Pallas rows time compiled kernels.
 
-    True → the platform lowers Pallas natively (TPU) and the whole suite
-    times compiled kernels; False → only the interpreter is available and
-    every pallas row says so (``mode: interpret``, ``comparable: false``)
-    instead of dressing interpreter dispatch up as kernel time.
+    ``REPRO_KERNEL_MODE`` short-circuits the probe — ``compiled`` forces
+    non-interpret launches (the honest setting on TPU-class runners where
+    probing wastes a compile), ``interpret`` forces the interpreter (useful
+    for exercising the fallback path on any platform).  On ``auto`` (the
+    default) the suite *attempts* one compiled launch: True → the platform
+    lowers Pallas natively (TPU) and the whole suite times compiled
+    kernels; False → only the interpreter is available and every pallas
+    row says so (``mode: interpret``, ``comparable: false``) instead of
+    dressing interpreter dispatch up as kernel time.
     """
+    mode = os.environ.get("REPRO_KERNEL_MODE", "auto").strip().lower()
+    if mode == "compiled":
+        return True
+    if mode == "interpret":
+        return False
     try:
         jax.block_until_ready(
             ops.sparse_sim(ids[:8], vals[:8], means_t, interpret=False))
@@ -105,47 +135,74 @@ def run():
     interpret = not compiled
     mode = "compiled" if compiled else "interpret"
 
-    # Roofline-pruned autotune at the suite's own regime (budget shrinks
-    # under REPRO_BENCH_SMOKE with the shapes).
+    # Roofline-pruned autotune at the suite's own regime, once per engine
+    # (budget shrinks under REPRO_BENCH_SMOKE with the shapes).  The engines
+    # search disjoint candidate spaces and cache regimes (tune/config.py).
     budget = SearchBudget.default()
     t0 = time.perf_counter()
     tuned, stats = search_tuned_config(ids, vals, dim=d, k=k, budget=budget)
     search_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    xtuned, xstats = search_tuned_config(ids, vals, dim=d, k=k,
+                                         budget=budget, engine="xla_blocked")
+    xsearch_s = time.perf_counter() - t0
 
-    plan = prepare_plan(ids, vals, dim=d)                 # default geometry
-    tplan = prepare_plan(ids, vals, dim=d, tuned=tuned)   # winner geometry
+    # Plan construction is host-side, once-per-fit work; time it in its own
+    # rows so it never pollutes (nor hides inside) the per-call kernel rows.
+    plan, plan_s = time_call(
+        lambda: prepare_plan(ids, vals, dim=d), repeat=repeat)
+    tplan, tplan_s = time_call(
+        lambda: prepare_plan(ids, vals, dim=d, tuned=tuned), repeat=repeat)
+    xtplan, xtplan_s = time_call(
+        lambda: prepare_plan(ids, vals, dim=d, tuned=xtuned), repeat=repeat)
 
-    def variants(ref_fn, pal):
+    def variants(ref_fn, pal, xla):
         return (
-            ("reference", ref_fn, None),
-            ("pallas", lambda: pal(plan=None, tuned=None), False),
-            ("pallas_planned", lambda: pal(plan=plan, tuned=None), False),
-            ("pallas_tuned", lambda: pal(plan=tplan, tuned=tuned), True),
+            ("reference", "reference", ref_fn, None),
+            ("pallas", "pallas",
+             lambda: pal(plan=None, tuned=None), False),
+            ("pallas_planned", "pallas",
+             lambda: pal(plan=plan, tuned=None), False),
+            ("pallas_tuned", "pallas",
+             lambda: pal(plan=tplan, tuned=tuned), True),
+            ("xla_blocked", "xla_blocked",
+             lambda: xla(plan=None, tuned=None), False),
+            ("xla_blocked_planned", "xla_blocked",
+             lambda: xla(plan=plan, tuned=None), False),
+            ("xla_blocked_tuned", "xla_blocked",
+             lambda: xla(plan=xtplan, tuned=xtuned), True),
         )
 
     cases = {
         "sparse_sim": variants(
             lambda: ref.sparse_sim(ids, vals, means_t),
             lambda **kw: ops.sparse_sim(ids, vals, means_t,
-                                        interpret=interpret, **kw)),
+                                        interpret=interpret, **kw),
+            lambda **kw: xb.sparse_sim(ids, vals, means_t, **kw)),
         "esicp_gather": variants(
             lambda: ref.esicp_gather(ids, vals, means_t, t_th, v_th),
             lambda **kw: ops.esicp_gather(ids, vals, means_t, t_th, v_th,
-                                          interpret=interpret, **kw)),
+                                          interpret=interpret, **kw),
+            lambda **kw: xb.esicp_gather(ids, vals, means_t, t_th, v_th,
+                                         **kw)),
         "segment_update": variants(
             lambda: ref.segment_update(assign, ids, vals, k, d),
             lambda **kw: ops.segment_update(assign, ids, vals, k=k, d=d,
-                                            interpret=interpret, **kw)),
+                                            interpret=interpret, **kw),
+            lambda **kw: xb.segment_update(assign, ids, vals, k=k, d=d,
+                                           **kw)),
         "rho_gather": variants(
             lambda: ref.rho_gather(assign, ids, vals, means_t),
             lambda **kw: ops.rho_gather(assign, ids, vals, means_t,
-                                        interpret=interpret, **kw)),
+                                        interpret=interpret, **kw),
+            lambda **kw: xb.rho_gather(assign, ids, vals, means_t, **kw)),
     }
 
     rows = []
     for name, var in cases.items():
-        ref_best = default_best = None
-        for suffix, fn, is_tuned in var:
+        ref_best = None
+        default_best = {}                    # engine -> its default's best
+        for suffix, backend, fn, is_tuned in var:
             if suffix == "reference":
                 _, ref_best, warm = _timed(jax.jit(fn), repeat)
                 rows.append(bench_row(f"kernel_suite/{name}_reference",
@@ -153,24 +210,47 @@ def run():
                                       warmup_us=warm * 1e6, **shape_meta))
                 continue
             _, best, warm = _timed(fn, repeat)
+            is_xla = backend == "xla_blocked"
             extra = dict(shape_meta)
-            extra.update(interpret=interpret, mode=mode, tuned=is_tuned)
-            # Cross-engine speedup (vs the compiled-XLA reference) is only a
-            # kernel measurement when the kernels actually compiled.
-            extra.update(speedup_fields(ref_best, best, comparable=compiled))
-            if suffix == "pallas_planned":
-                default_best = best
-            if is_tuned and default_best is not None:
-                # Same engine, same mode, tuned vs default geometry — valid
-                # on every platform, including interpret-only ones.
-                extra["speedup_vs_default"] = round(default_best / best, 4)
+            # xla_blocked always compiles — same execution mode as the
+            # reference on every platform, so the cross-engine ratio is a
+            # kernel measurement everywhere; pallas rows are only
+            # comparable when the kernels actually compiled.
+            extra.update(interpret=False if is_xla else interpret,
+                         mode="xla" if is_xla else mode, tuned=is_tuned)
+            extra.update(speedup_fields(ref_best, best,
+                                        comparable=is_xla or compiled))
+            if suffix in ("pallas_planned", "xla_blocked"):
+                # Each engine's tuned row is judged against that engine's
+                # default configuration: planned default geometry for
+                # pallas, the plan-less gather for xla_blocked.
+                default_best[backend] = best
+            if is_tuned and backend in default_best:
+                # Same engine, same mode, tuned vs default — valid on every
+                # platform, including interpret-only ones.
+                extra["speedup_vs_default"] = round(
+                    default_best[backend] / best, 4)
             rows.append(bench_row(f"kernel_suite/{name}_{suffix}",
-                                  best * 1e6, "pallas", warmup_us=warm * 1e6,
-                                  **extra))
+                                  best * 1e6, backend,
+                                  warmup_us=warm * 1e6, **extra))
+
+    for pname, pbackend, secs in (
+            ("plan_build_default", "pallas", plan_s),
+            ("plan_build_tuned", "pallas", tplan_s),
+            ("plan_build_xla_tuned", "xla_blocked", xtplan_s)):
+        rows.append(bench_row(
+            f"kernel_suite/{pname}", secs * 1e6, pbackend,
+            interpret=False, mode="host", comparable=False, speedup=None,
+            **shape_meta))
 
     rows.append(bench_row(
         "kernel_suite/autotuner", search_s * 1e6, "pallas",
         interpret=interpret, mode=mode, tuned=True,
         comparable=False, speedup=None,
         winner=tuned.to_dict(), **stats.to_dict(), **shape_meta))
+    rows.append(bench_row(
+        "kernel_suite/autotuner_xla", xsearch_s * 1e6, "xla_blocked",
+        interpret=False, mode="xla", tuned=True,
+        comparable=False, speedup=None,
+        winner=xtuned.to_dict(), **xstats.to_dict(), **shape_meta))
     return rows

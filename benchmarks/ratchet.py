@@ -9,20 +9,30 @@ same entry point: ``python -m benchmarks.ratchet <file.json>``.
 
 Kernel checks:
 
-1. **Compiled-mode ratchet** — on platforms where the Pallas kernels
-   compile (rows with ``comparable: true``), every kernel's best
-   pallas-variant ``speedup`` vs the XLA reference must be >= 1.0: a
-   compiled kernel that loses to the oracle it replaced is a regression,
-   and the whole point of the engine.  On interpret-only platforms (CPU
-   runners) the check is *skipped with a visible annotation* — an
-   interpreter timing says nothing about kernel performance, and
-   fabricating a ratchet from it would be worse than no ratchet.
+1. **XLA-blocked compiled ratchet — enforced everywhere.**  The
+   ``xla_blocked`` engine (kernels/xla_blocked.py) always compiles, so its
+   rows are ``comparable: true`` on every platform — including the stock
+   CPU CI runner.  For each of the four kernels the suite MUST emit
+   comparable xla_blocked rows, and the best such ``speedup`` vs the jnp
+   reference must be >= 1.0: a compiled engine that loses to the oracle it
+   replaced is a regression.  Missing rows are a failure, not a skip —
+   this is the gate ISSUE 10 turns on.
 
-2. **Honesty invariants** — always enforced, every platform: interpret-mode
-   pallas rows must carry ``comparable: false`` and a null ``speedup``
+2. **Pallas compiled-mode ratchet** — on platforms where the Pallas
+   kernels compile (pallas rows with ``comparable: true``), every kernel's
+   best pallas-variant ``speedup`` vs the XLA reference must be >= 1.0.
+   On interpret-only platforms (CPU runners) this engine's check is
+   *skipped with a visible annotation* — an interpreter timing says
+   nothing about kernel performance, and fabricating a ratchet from it
+   would be worse than no ratchet.  (The xla_blocked gate above still
+   runs; CPU is no longer ratchet-free.)
+
+3. **Honesty invariants** — always enforced, every platform: interpret-mode
+   rows must carry ``comparable: false`` and a null ``speedup``
    (cross-engine ratios are suppressed, never fabricated), and the
    ``speedup_vs_default`` tuned-vs-default ratio (same engine, same mode —
-   valid everywhere) must be present on every tuned row.
+   valid everywhere) must be present on every ``*_tuned`` row of either
+   engine.
 
 Exit 0 = pass/skip, 1 = ratchet or honesty failure.  The ``::notice``/
 ``::error`` lines render as GitHub Actions annotations.
@@ -43,23 +53,26 @@ def _kernel_of(name: str) -> str | None:
 
 
 def check(rows: list[dict]) -> int:
-    pallas = [r for r in rows
-              if r.get("backend") == "pallas" and _kernel_of(r["name"])]
+    engines = [r for r in rows
+               if r.get("backend") in ("pallas", "xla_blocked")
+               and _kernel_of(r["name"])]
+    pallas = [r for r in engines if r["backend"] == "pallas"]
+    xla = [r for r in engines if r["backend"] == "xla_blocked"]
     if not pallas:
         print("::error::BENCH_kernels.json holds no pallas kernel rows")
         return 1
 
     failures = []
 
-    # -- honesty invariants (every platform) -------------------------------
-    for r in pallas:
+    # -- honesty invariants (every platform, both engines) -----------------
+    for r in engines:
         if r.get("interpret") and (r.get("comparable") or
                                    r.get("speedup") is not None):
             failures.append(
                 f"{r['name']}: interpret-mode row claims a cross-engine "
                 f"speedup (comparable={r.get('comparable')}, "
                 f"speedup={r.get('speedup')})")
-    tuned_rows = [r for r in pallas if r["name"].endswith("_pallas_tuned")]
+    tuned_rows = [r for r in engines if r["name"].endswith("_tuned")]
     for r in tuned_rows:
         if "speedup_vs_default" not in r:
             failures.append(f"{r['name']}: tuned row missing the same-mode "
@@ -72,23 +85,42 @@ def check(rows: list[dict]) -> int:
             print(f"{r['name']}: tuned vs default {sv:.4f}x "
                   f"({r.get('mode', '?')} mode)")
 
-    # -- compiled-mode ratchet ---------------------------------------------
+    # -- xla_blocked compiled ratchet (enforced on EVERY platform) ---------
+    xla_comparable = [r for r in xla if r.get("comparable")]
+    for k in KERNELS:
+        krows = [r for r in xla_comparable if _kernel_of(r["name"]) == k]
+        if not krows:
+            failures.append(
+                f"{k}: no comparable xla_blocked rows — the compiled-engine "
+                f"ratchet has nothing to gate on (the suite must emit them "
+                f"on every platform)")
+            continue
+        best = max((r.get("speedup") or 0.0) for r in krows)
+        print(f"{k}: best xla_blocked speedup vs reference {best:.4f}x")
+        if best < 1.0:
+            failures.append(f"{k}: xla_blocked speedup {best:.4f} < 1.0 — "
+                            f"the compiled engine lost to the jnp reference "
+                            f"it replaces")
+
+    # -- pallas compiled-mode ratchet (TPU; skip-with-notice elsewhere) ----
     comparable = [r for r in pallas if r.get("comparable")]
     if not comparable:
         plat = pallas[0].get("platform", "?")
-        print(f"::notice title=kernel ratchet skipped::compiled Pallas is "
+        print(f"::notice title=pallas ratchet skipped::compiled Pallas is "
               f"unavailable on platform={plat!r} (interpret-only); the "
-              f"speedup-vs-reference ratchet needs compiled kernels and "
-              f"was not evaluated")
+              f"pallas speedup-vs-reference ratchet needs compiled kernels "
+              f"and was not evaluated (the xla_blocked ratchet above still "
+              f"gates this platform)")
     else:
         for k in KERNELS:
             best = max((r.get("speedup") or 0.0) for r in comparable
                        if _kernel_of(r["name"]) == k)
-            print(f"{k}: best compiled speedup vs reference {best:.4f}x")
+            print(f"{k}: best compiled pallas speedup vs reference "
+                  f"{best:.4f}x")
             if best < 1.0:
-                failures.append(f"{k}: compiled-mode speedup {best:.4f} < "
-                                f"1.0 — the kernel lost to the XLA "
-                                f"reference it replaces")
+                failures.append(f"{k}: compiled-mode pallas speedup "
+                                f"{best:.4f} < 1.0 — the kernel lost to the "
+                                f"XLA reference it replaces")
 
     for msg in failures:
         print(f"::error title=kernel ratchet::{msg}")

@@ -27,8 +27,10 @@ class ClusterConfig:
     algo_mode:  'full' (exact Lloyd, the paper's setting) | 'minibatch'
                 (Sculley-style streaming updates over DocStore chunks —
                 always runs on the 'streaming' strategy).
-    backend:    'reference' | 'pallas' | 'auto' — accumulator engine for
-                assignment AND update (core/backends.py).
+    backend:    'reference' | 'pallas' | 'xla_blocked' | 'auto' —
+                accumulator engine for assignment AND update
+                (core/backends.py; 'auto' = the compiled engine for the
+                platform: pallas on TPU, xla_blocked elsewhere).
     params:     'auto' (EstParams at ``est_iters``, the paper's default),
                 a StructuralParams for fixed thresholds, or None (trivial).
     batch_size: single-host fused-epoch batch (rows per scan tile).

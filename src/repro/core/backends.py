@@ -35,11 +35,22 @@ that builds the value slab, so ``diag=True`` costs no extra kernel launch.
 Means and ρ_self agree to float32 reduction-order tolerance (the MXU
 accumulates in a different order than the sequential scatter).
 
-Selection: pass ``backend="reference" | "pallas" | "auto"`` anywhere a
-``backend=`` argument is threaded (``SphericalKMeans``, ``assignment_step``,
-``update_step``, ``distributed.kmeans``, ``serve.ClusterEngine``,
-``benchmarks.common``).  ``auto`` resolves to ``pallas`` on TPU and
-``reference`` elsewhere.
+``xla_blocked``
+    The same skew-aware plan expressed as pure jit-compiled XLA programs
+    (:mod:`repro.kernels.xla_blocked`): Zipf tail as gather + posting-sum
+    (work ∝ postings — the limiting case of occupancy skipping), optional
+    high-df head region as one cached dense slab GEMM per call, and all
+    four algo-mode accumulators fused into a single pass each — including
+    TA (per-object threshold, natively compiled here) and CS (one
+    ``cs_gather`` where Pallas needs three launches).  This is the engine
+    that actually *compiles* off-TPU, so it is what ``auto`` picks on
+    CPU/GPU and what the CI compiled ratchet enforces.
+
+Selection: pass ``backend="reference" | "pallas" | "xla_blocked" | "auto"``
+anywhere a ``backend=`` argument is threaded (``SphericalKMeans``,
+``assignment_step``, ``update_step``, ``distributed.kmeans``,
+``serve.ClusterEngine``, ``benchmarks.common``).  ``auto`` resolves to
+``pallas`` on TPU and ``xla_blocked`` elsewhere.
 """
 from __future__ import annotations
 
@@ -510,25 +521,137 @@ class PallasBackend:
 
 
 # ---------------------------------------------------------------------------
+# XLA-blocked backend: the compiled skew-aware engine for non-TPU hardware.
+# ---------------------------------------------------------------------------
+
+class XlaBlockedBackend:
+    """Pure-XLA kernel twins (:mod:`repro.kernels.xla_blocked`).
+
+    Same plan vocabulary as the Pallas backend — ``prepare`` returns a
+    :class:`repro.kernels.plan.KernelPlan` and every accumulator accepts it
+    back — but the engine consumes only the head-slab cache (the gather
+    formulation makes ``occ`` redundant: empty cells are never touched).
+    The engine *default* is head-less (``head_bytes=0``): on CPU the slab
+    GEMM costs B·H·K FLOPs against the gather's B·p_head·K, so caching head
+    blocks is an autotuner decision (``tune != "off"`` with an
+    ``engine="xla_blocked"`` winner), not a reflex.
+
+    Every algo mode is a single fused launch here: exact/esicp via the
+    shared-threshold ops, TA natively (the per-object threshold rides the
+    gather, no reference-scan delegation), CS via the one-pass
+    ``cs_gather`` (sims + rho1 + sq + counts together).
+    """
+
+    name = "xla_blocked"
+
+    def prepare(self, docs, *, tile_rows=None, with_counts=True, k=None,
+                tune="off", tune_budget=None):
+        from repro.kernels.plan import prepare_plan
+
+        tuned = None
+        if tune != "off":
+            from repro.tune import ensure_tuned
+
+            tuned = ensure_tuned(docs, k=k, mode=tune, budget=tune_budget,
+                                 engine=self.name)
+        # Same masked-vals convention as the Pallas prepare (one cached slab
+        # serves both phases); head_bytes=0 unless a tuned config says
+        # otherwise, see the class docstring.
+        vals = jnp.where(docs.row_mask(), docs.vals, 0.0)
+        head_bytes = tuned.head_bytes if tuned is not None else 0
+        return prepare_plan(docs.ids, vals, dim=docs.dim,
+                            tile_rows=tile_rows, with_counts=with_counts,
+                            head_bytes=head_bytes, tuned=tuned)
+
+    def accumulate(self, docs, index, xstate, *, mode, v_ta=None, diag=True,
+                   unroll=False, p_block=1, plan=None, with_counts=False):
+        # unroll / p_block are reference-scan tiling knobs; the XLA ops
+        # chunk the posting axis themselves, so both are accepted + ignored.
+        from repro.kernels import xla_blocked as xb
+
+        assert not with_counts or diag, "with_counts requires diag=True"
+        means_t = index.means_t
+        t_th = index.params.t_th
+        v_th = index.params.v_th
+        col_ok = col_ok_mask(index, xstate)
+
+        out = {}
+        if not diag:
+            out["mult"] = jnp.zeros((), jnp.float32)
+        if mode == "exact":
+            res = xb.sparse_sim(docs.ids, docs.vals, means_t, diag=diag,
+                                plan=plan)
+            if diag:
+                out["sims"], counts = res
+                out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+                if with_counts:
+                    out["counts"] = counts
+            else:
+                out["sims"] = res
+        elif mode == "cs":
+            res = xb.cs_gather(docs.ids, docs.vals, means_t, t_th, diag=diag)
+            if diag:
+                out["sims"], out["rho1"], out["sq"], counts = res
+                out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+            else:
+                out["sims"], out["rho1"], out["sq"] = res
+        elif mode in ("esicp", "ta"):
+            res = xb.esicp_gather(docs.ids, docs.vals, means_t, t_th, v_th,
+                                  v_ta=v_ta if mode == "ta" else None,
+                                  with_sims=True, diag=diag, plan=plan)
+            if diag:
+                out["rho12"], out["y"], out["sims"], counts = res
+                out["mult"] = jnp.sum(jnp.where(col_ok, counts, 0.0))
+                if with_counts:
+                    out["counts"] = counts
+            else:
+                out["rho12"], out["y"], out["sims"] = res
+        else:
+            raise ValueError(mode)
+        return out
+
+    # The filter and sketch phases are already single fused XLA expressions
+    # in the reference backend — reuse them verbatim.
+    es_filter = ReferenceBackend.es_filter
+    sketch_sim = ReferenceBackend.sketch_sim
+
+    def accumulate_means(self, ids, vals, assign, *, k, dim, init=None,
+                         plan=None):
+        from repro.kernels import xla_blocked as xb
+
+        lam = xb.segment_update(assign, ids, vals, k=k, d=dim, plan=plan)
+        return lam if init is None else init + lam
+
+    def self_sims(self, ids, vals, assign, means_t, *, plan=None):
+        from repro.kernels import xla_blocked as xb
+
+        return xb.rho_gather(assign, ids, vals, means_t, plan=plan)
+
+
+# ---------------------------------------------------------------------------
 # Registry / resolution.
 # ---------------------------------------------------------------------------
 
 BACKENDS: dict[str, Backend] = {
     "reference": ReferenceBackend(),
     "pallas": PallasBackend(),
+    "xla_blocked": XlaBlockedBackend(),
 }
 
 
 def resolve_backend(spec) -> Backend:
-    """'reference' | 'pallas' | 'auto' | Backend instance -> Backend.
+    """'reference' | 'pallas' | 'xla_blocked' | 'auto' | Backend -> Backend.
 
-    'auto' picks the kernel path on TPU and the oracle elsewhere (interpret
-    mode is for correctness testing, not speed).
+    'auto' picks the engine that actually compiles on the local hardware:
+    the Pallas kernels on TPU, the XLA-blocked twins everywhere else
+    (interpret-mode Pallas is for correctness testing, not speed, and the
+    reference scan is the oracle, not the fast path).
     """
     if isinstance(spec, Backend) and not isinstance(spec, str):
         return spec
     if spec == "auto":
-        return BACKENDS["pallas" if jax.default_backend() == "tpu" else "reference"]
+        return BACKENDS["pallas" if jax.default_backend() == "tpu"
+                        else "xla_blocked"]
     if spec not in BACKENDS:
         raise ValueError(
             f"unknown backend {spec!r}; one of {sorted(BACKENDS)} or 'auto'")

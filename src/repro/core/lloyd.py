@@ -258,9 +258,10 @@ def lloyd_fit(docs: SparseDocs, *, k: int, algo: str = "esicp",
     """Single-host Lloyd fit: the paper's pipeline as one function.
 
     algo: 'mivi' | 'icp' | 'es' | 'esicp' | 'ta-icp' | 'cs-icp'
-    backend: 'reference' | 'pallas' | 'auto' — accumulator engine for the
-            assignment AND update steps (core/backends.py; 'auto' = pallas
-            on TPU).
+    backend: 'reference' | 'pallas' | 'xla_blocked' | 'auto' — accumulator
+            engine for the assignment AND update steps (core/backends.py;
+            'auto' = pallas on TPU, the compiled xla_blocked twins
+            elsewhere).
     params: 'auto' (EstParams at iterations 1–2, the paper's default),
             StructuralParams for fixed thresholds, or None -> trivial.
     tune: 'off' | 'cached' | 'search' — kernel-engine autotuning

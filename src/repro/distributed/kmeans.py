@@ -14,8 +14,10 @@ One fused step = assignment + update:
      never O(B·K).  This is the only assignment-phase collective;
   3. update: local cluster sums for owned centroids produced by the pluggable
      backend accumulator (core/backends.py: reference scatter | pallas
-     ``segment_update``), psum over object axes (compiles to reduce-scatter +
-     all-gather), L2 normalise;
+     ``segment_update`` | xla_blocked scatter-add — any registered backend
+     threads through unchanged; prepared-plan operands are built for the
+     pallas engine only, the others run the exact plan-less path), psum over
+     object axes (compiles to reduce-scatter + all-gather), L2 normalise;
   4. ρ_self refresh via the backend's own-centroid gather where the centroid
      shard lives, psum over "model";
   5. exact invariant-centroid (ICP) flags from membership deltas.

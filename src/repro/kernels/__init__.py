@@ -12,7 +12,12 @@ where the kernels are:
 
 Every kernel is written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
 MXU-shaped matmuls) and validated on CPU in interpret mode against the pure
-jnp oracles in ``ref.py``.
+jnp oracles in ``ref.py``.  ``xla_blocked.py`` holds the compiled XLA twins
+of the clustering ops — the same KernelPlan-driven skew-aware execution
+plan (head-slab GEMM + gather-formulated Zipf tail + fused diagnostics) as
+jit-compiled XLA programs for platforms where Pallas only interprets; the
+``xla_blocked`` backend (core/backends.py) and the ``auto`` off-TPU
+resolution run on them.
 """
 from repro.kernels.ops import (
     sparse_sim,

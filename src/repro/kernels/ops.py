@@ -55,6 +55,32 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def default_interpret() -> bool:
+    """Resolve the interpret-mode default for a kernel launch.
+
+    ``REPRO_KERNEL_MODE`` overrides the platform policy (DESIGN.md §7):
+      auto (or unset) — compiled on TPU, interpret elsewhere;
+      interpret       — force interpret mode (semantics debugging on TPU);
+      compiled        — force compiled Pallas (off-TPU this fails at lower
+                        time unless the platform grew a Pallas lowering —
+                        the honest way to *probe* for one).
+
+    Caveat: the env var is read when a wrapper TRACES, and the jit cache
+    keys on the resolved static value — flipping the env mid-process only
+    affects shapes that have not been traced yet.  Set it before the first
+    kernel call (the bench suite reads it at startup for this reason).
+    """
+    mode = __import__("os").environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode == "interpret":
+        return True
+    if mode == "compiled":
+        return False
+    if mode not in ("", "auto"):
+        raise ValueError(
+            f"REPRO_KERNEL_MODE must be auto|interpret|compiled, got {mode!r}")
+    return not _on_tpu()
+
+
 def _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk):
     """(TunedConfig, b_blk, k_blk, d_blk) for a call — explicit kwargs win,
     then ``tuned``, then the plan's embedded config, then defaults."""
@@ -168,7 +194,7 @@ def sparse_sim(ids, vals, means_t, *, plan=None, tuned=None,
     ``diag=True`` additionally returns the (B, K) visited-pair counts
     (live slots × nonzero mean entries) from the same launch.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b, k = ids.shape[0], means_t.shape[1]
     d = means_t.shape[0]
@@ -198,7 +224,7 @@ def esicp_gather(ids, vals, means_t, t_th, v_th, *, plan=None, tuned=None,
     ``with_sims`` and by the exact-region visited-pair counts when ``diag``
     — all accumulated off one densified slab per (B, D) block.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b, k = ids.shape[0], means_t.shape[1]
     d = means_t.shape[0]
@@ -222,7 +248,7 @@ def sketch_sim(sk_docs, sketch_t, *, plan=None, tuned=None, b_blk=None,
     retained dot product bitwise equal to the unpadded reference matmul
     (kernels/ref.py sketch_sim), which the backend parity matrix relies on.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     cfg, b_blk, k_blk, _ = _resolve_cfg(tuned, plan, b_blk, k_blk, None)
     b, s = sk_docs.shape
     k = sketch_t.shape[1]
@@ -236,7 +262,7 @@ def sketch_sim(sk_docs, sketch_t, *, plan=None, tuned=None, b_blk=None,
 def esicp_filter(rho12, y, rho_max, col_ok, v_th, *, b_blk=128, k_blk=256,
                  interpret: bool | None = None):
     """(survivor mask int8 (B,K), |Z_i| counts (B,))."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     b, k = rho12.shape
     pr = _pad_to(_pad_to(rho12, k_blk, 1), b_blk, 0)
     py = _pad_to(_pad_to(y, k_blk, 1), b_blk, 0)
@@ -254,7 +280,7 @@ def segment_update(assign, ids, vals, *, k: int, d: int, plan=None,
                    k_sup: int | None = None,
                    interpret: bool | None = None):
     """(K, D) cluster sums λ. Padding objects get assign = k (out of range)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     # Padded rows get assign = k: when k is block-aligned that index falls
     # past the last superblock's iota range, otherwise into a padding
@@ -283,7 +309,7 @@ def rho_gather(assign, ids, vals, means_t, *, plan=None, tuned=None,
 
     Padding objects get assign = k (out of range) and read back ρ = 0.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     cfg, b_blk, k_blk, d_blk = _resolve_cfg(tuned, plan, b_blk, k_blk, d_blk)
     b = ids.shape[0]
     k = means_t.shape[1]
@@ -303,7 +329,7 @@ def rho_gather(assign, ids, vals, means_t, *, plan=None, tuned=None,
 def flash_attention(q, k, v, *, window: int = -1, sq_blk=128, sk_blk=128,
                     interpret: bool | None = None):
     """Banded-causal flash attention; heads folded into the batch dim."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     bh, sq, hd = q.shape
     sk = k.shape[1]
     pq = _pad_to(q, sq_blk, 1)

@@ -17,10 +17,12 @@ free and cheap to load.
 from __future__ import annotations
 
 from repro.tune.cache import TUNED_CACHE, corpus_signature
-from repro.tune.config import DEFAULT_TUNED, TunedConfig
+from repro.tune.config import (DEFAULT_TUNED, DEFAULT_XLA_TUNED, ENGINES,
+                               TunedConfig, default_tuned)
 
 __all__ = [
-    "TunedConfig", "DEFAULT_TUNED", "TUNED_CACHE", "corpus_signature",
+    "TunedConfig", "DEFAULT_TUNED", "DEFAULT_XLA_TUNED", "ENGINES",
+    "default_tuned", "TUNED_CACHE", "corpus_signature",
     "SearchBudget", "SearchStats", "search_tuned_config", "ensure_tuned",
     "candidate_space",
 ]

@@ -45,11 +45,16 @@ def occupancy_fraction(ids, vals, *, dim: int, b_blk: int = 128,
 
 
 def corpus_signature(ids, vals, *, dim: int, k: int,
-                     platform: str | None = None) -> str:
-    """Cache key: platform / bucketed-B / P / D / K / bucketed occupancy.
+                     platform: str | None = None,
+                     engine: str = "pallas") -> str:
+    """Cache key: platform / bucketed-B / P / D / K / bucketed occupancy /
+    engine.
 
     Occupancy is measured at the *default* geometry and bucketed to 0.05 so
-    minor corpus perturbations (reshuffles, small appends) still hit."""
+    minor corpus perturbations (reshuffles, small appends) still hit.  The
+    engine suffix keeps the regimes disjoint per kernel engine: a config
+    tuned under interpret-mode Pallas must never be handed to an XLA-blocked
+    fit at the same corpus signature (ISSUE 10 satellite)."""
     if platform is None:
         import jax
 
@@ -58,7 +63,7 @@ def corpus_signature(ids, vals, *, dim: int, k: int,
     occ = occupancy_fraction(ids, vals, dim=dim)
     occ_bucket = round(round(occ / 0.05) * 0.05, 2)
     return (f"{platform}/b{_pow2_bucket(b)}/p{_pow2_bucket(p)}/"
-            f"d{dim}/k{k}/occ{occ_bucket:.2f}")
+            f"d{dim}/k{k}/occ{occ_bucket:.2f}/{engine}")
 
 
 class TunedConfigCache:

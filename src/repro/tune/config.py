@@ -24,6 +24,13 @@ from repro.kernels.plan import DEFAULT_B_BLK, DEFAULT_D_BLK, DEFAULT_HEAD_BYTES
 DEFAULT_K_BLK = 128
 DEFAULT_K_SUP_CAP = 1024
 
+#: Kernel engines a config can be tuned for.  The knob vector is shared,
+#: but the knobs *mean* different things per engine (ISSUE 10): the Pallas
+#: grid launches with the full geometry, while the XLA-blocked engine has
+#: no grid — only ``d_blk`` (head-block granularity) and ``head_bytes``
+#: (the head-slab GEMM budget, default **0** there) change its programs.
+ENGINES = ("pallas", "xla_blocked")
+
 
 @dataclasses.dataclass(frozen=True)
 class TunedConfig:
@@ -38,6 +45,10 @@ class TunedConfig:
         picks the widest ``k_blk`` multiple under it that divides padded K.
     head_bytes: per-chunk byte budget for the cached high-df head slabs
         (0 disables the head cache entirely).
+    engine:     which kernel engine the config was tuned for — one of
+        :data:`ENGINES`.  A Pallas winner must never drive an XLA-blocked
+        fit (or vice versa): the cost structures differ, so the cache key
+        and the candidate space are both engine-qualified.
     source:     provenance — 'default' | 'search' | 'cache' | 'manual'.
     signature:  the corpus/shape signature the config was tuned for
         (tune/cache.py); '' for untuned configs.
@@ -48,10 +59,14 @@ class TunedConfig:
     k_blk: int = DEFAULT_K_BLK
     k_sup_cap: int = DEFAULT_K_SUP_CAP
     head_bytes: int = DEFAULT_HEAD_BYTES
+    engine: str = "pallas"
     source: str = "default"
     signature: str = ""
 
     def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {self.engine!r}")
         if self.b_blk < 8 or self.b_blk % 8:
             raise ValueError(f"b_blk must be a positive multiple of 8, "
                              f"got {self.b_blk}")
@@ -81,18 +96,32 @@ class TunedConfig:
 
     def geometry_key(self, *, b: int, p: int, d: int, k: int) -> tuple:
         """The *effective* launch parameters this config produces at a
-        shape — two configs with the same key launch identical grids, so
-        the search deduplicates on it before costing/timing."""
+        shape — two configs with the same key launch identical programs, so
+        the search deduplicates on it before costing/timing.  The XLA
+        engine has no launch grid: only the head split (d_blk, n_head)
+        changes its programs, so the grid knobs collapse out of its key and
+        the candidate space dedups to a handful of head-budget points."""
         from repro.kernels.ops import _pick_k_sup
         from repro.kernels.plan import pick_n_head
 
         bp = b + (-b) % self.b_blk
         kp = k + (-k) % self.k_blk
         dp = d + (-d) % self.d_blk
-        ks = _pick_k_sup(kp, self.k_blk, None, cap=self.k_sup_cap)
         n_head = pick_n_head(bp, d, d_blk=self.d_blk,
                              head_bytes=self.head_bytes)
-        return (self.b_blk, self.d_blk, kp, ks, dp, n_head)
+        if self.engine == "xla_blocked":
+            return (self.engine, self.d_blk, dp, n_head)
+        ks = _pick_k_sup(kp, self.k_blk, None, cap=self.k_sup_cap)
+        return (self.engine, self.b_blk, self.d_blk, kp, ks, dp, n_head)
 
 
 DEFAULT_TUNED = TunedConfig()
+
+#: The XLA-blocked engine's untuned behaviour: head cache off (gather-only;
+#: see kernels/xla_blocked.py — the slab GEMM must *earn* its FLOPs).
+DEFAULT_XLA_TUNED = TunedConfig(engine="xla_blocked", head_bytes=0)
+
+
+def default_tuned(engine: str = "pallas") -> TunedConfig:
+    """The engine's hard-coded (search-incumbent) configuration."""
+    return DEFAULT_XLA_TUNED if engine == "xla_blocked" else DEFAULT_TUNED

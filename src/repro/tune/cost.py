@@ -80,8 +80,12 @@ def fits_vmem(cfg: TunedConfig, shape: KernelShape, *,
     """Can the resident blocks of one grid step co-exist in VMEM?
 
     slab (+count twin) + means block + two (B, K_sup) accumulators +
-    the ids/vals tile + one cached head block.
+    the ids/vals tile + one cached head block.  The XLA-blocked engine has
+    no VMEM-resident grid step — XLA tiles its own programs — so every
+    config is feasible there.
     """
+    if cfg.engine == "xla_blocked":
+        return True
     g = launch_geometry(cfg, shape)
     slab = cfg.b_blk * cfg.d_blk * 4 * 2          # value + count twin
     means = cfg.d_blk * g["ks"] * 4
@@ -101,6 +105,8 @@ def kernel_flops_bytes(kernel: str, cfg: TunedConfig, shape: KernelShape,
     """
     if kernel not in KERNELS:
         raise ValueError(f"unknown kernel {kernel!r}; one of {KERNELS}")
+    if cfg.engine == "xla_blocked":
+        return _xla_flops_bytes(kernel, cfg, shape)
     g = launch_geometry(cfg, shape)
     bb, db = cfg.b_blk, cfg.d_blk
     grid_steps = g["nb"] * g["nk"] * g["nd"]
@@ -132,6 +138,51 @@ def kernel_flops_bytes(kernel: str, cfg: TunedConfig, shape: KernelShape,
     flops = densify_flops + mxu_flops
     nbytes = tuple_bytes + means_bytes + head_bytes_rw + out_bytes
     return flops, nbytes, float(grid_steps)
+
+
+def _xla_flops_bytes(kernel: str, cfg: TunedConfig,
+                     shape: KernelShape) -> tuple[float, float, float]:
+    """(flops, bytes, steps) for the gather-formulation XLA engine.
+
+    Work is proportional to *postings*, not the (B, D) grid: each of the
+    ``bp·pp`` postings gathers a K-row and folds it (occupancy skipping in
+    its limiting form).  A head budget moves the head-share of postings out
+    of the gather and into one ``bp × (n_head·d_blk) × kp`` GEMM per call —
+    dense FLOPs the matmul units must amortise, which is exactly the
+    trade-off the measured pass decides.  ``steps = 0``: the engine always
+    compiles, so no interpreter dispatch term applies.
+    """
+    from repro.kernels.plan import pick_n_head
+
+    bp = float(shape.b)
+    kp = float(shape.k)
+    pp = float(_ceil_to(shape.p, 8))
+    nd = max(1, -(-shape.d // cfg.d_blk))
+    n_head = min(nd, pick_n_head(shape.b, shape.d, d_blk=cfg.d_blk,
+                                 head_bytes=cfg.head_bytes))
+    head_share = n_head / nd
+    h = float(n_head * cfg.d_blk)
+
+    if kernel == "segment_update":
+        # Scatter-add: one read-modify-write lane per posting.
+        flops = bp * pp
+        nbytes = bp * pp * 8.0 + shape.k * shape.d * 4.0
+        return flops, nbytes, 0.0
+    if kernel == "rho_gather":
+        flops = 2.0 * bp * pp
+        nbytes = bp * pp * 8.0 + bp * pp * 4.0 + bp * 4.0
+        return flops, nbytes, 0.0
+
+    acc_factor = {"sparse_sim": 1.0, "esicp_gather": 2.5}[kernel]
+    tail_pp = pp * max(0.0, 1.0 - head_share)
+    gather_flops = 2.0 * bp * tail_pp * kp * acc_factor
+    gemm_flops = 2.0 * bp * h * kp * acc_factor
+    gather_bytes = bp * tail_pp * (8.0 + kp * 4.0)     # tuples + K-rows
+    head_bytes_r = bp * h * 4.0 * (2.0 if kernel == "esicp_gather" else 1.0)
+    means_bytes = float(shape.d) * kp * 4.0
+    out_bytes = bp * kp * 4.0 * acc_factor
+    return (gather_flops + gemm_flops,
+            gather_bytes + head_bytes_r + means_bytes + out_bytes, 0.0)
 
 
 def lower_bound_seconds(cfg: TunedConfig, shape: KernelShape,

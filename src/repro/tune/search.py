@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.tune.cache import (TUNED_CACHE, corpus_signature,
                               occupancy_fraction)
-from repro.tune.config import DEFAULT_TUNED, TunedConfig
+from repro.tune.config import DEFAULT_TUNED, TunedConfig, default_tuned
 from repro.tune.cost import (INTERPRET_STEP_OVERHEAD, KERNELS, KernelShape,
                              fits_vmem, lower_bound_seconds)
 
@@ -97,15 +97,19 @@ class SearchStats:
                 "best_measured_s": round(self.best_measured_s, 6)}
 
 
-def candidate_space(shape: KernelShape) -> list[TunedConfig]:
+def candidate_space(shape: KernelShape,
+                    engine: str = "pallas") -> list[TunedConfig]:
     """Enumerate the knob grid, deduplicated by effective launch geometry.
 
-    The hard-coded default config is always candidates[0] — it is the
-    incumbent every other candidate must beat analytically before it earns
-    wall-clock time."""
-    cands = [DEFAULT_TUNED]
-    seen = {DEFAULT_TUNED.geometry_key(b=shape.b, p=shape.p, d=shape.d,
-                                       k=shape.k)}
+    The engine's hard-coded default config is always candidates[0] — it is
+    the incumbent every other candidate must beat analytically before it
+    earns wall-clock time.  The XLA-blocked engine's geometry key collapses
+    the grid knobs (it has no launch grid), so its space dedups to the
+    head-split points (d_blk × head budget) automatically."""
+    incumbent = default_tuned(engine)
+    cands = [incumbent]
+    seen = {incumbent.geometry_key(b=shape.b, p=shape.p, d=shape.d,
+                                   k=shape.k)}
     for bb in _B_BLKS:
         for db in _D_BLKS:
             for kb in _K_BLKS:
@@ -115,7 +119,7 @@ def candidate_space(shape: KernelShape) -> list[TunedConfig]:
                     for hb in _HEAD_BYTES:
                         cfg = TunedConfig(b_blk=bb, d_blk=db, k_blk=kb,
                                           k_sup_cap=cap, head_bytes=hb,
-                                          source="search")
+                                          engine=engine, source="search")
                         key = cfg.geometry_key(b=shape.b, p=shape.p,
                                                d=shape.d, k=shape.k)
                         if key in seen:
@@ -147,12 +151,17 @@ def _probe_workload(ids, vals, *, dim: int, k: int, rows: int, seed: int):
 def _measure_config(cfg: TunedConfig, probe, *, dim: int, k: int,
                     repeat: int) -> float:
     """Summed best-of-``repeat`` seconds over the four kernels under ``cfg``
-    with a matching prepared plan — the quantity production fits pay."""
+    with a matching prepared plan — the quantity production fits pay.
+    Dispatches on ``cfg.engine``: Pallas wrappers or their XLA twins."""
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels import ops
     from repro.kernels.plan import prepare_plan
+
+    if cfg.engine == "xla_blocked":
+        from repro.kernels import xla_blocked as ops
+    else:
+        from repro.kernels import ops
 
     ids, vals, means_t, assign = probe
     plan = prepare_plan(ids, vals, dim=dim, b_blk=cfg.b_blk,
@@ -188,12 +197,15 @@ def search_tuned_config(ids, vals, *, dim: int, k: int,
                         seed: int = 0, measure=None, hw=None,
                         step_overhead_s: float | None = None,
                         prune_slack: float = PRUNE_SLACK,
+                        engine: str = "pallas",
                         ) -> tuple[TunedConfig, SearchStats]:
     """Find the kernel-engine config that wins at this corpus regime.
 
     ``measure`` (candidate -> seconds) defaults to wall-clock timing of the
     four kernels on a probe workload; tests inject a counting or analytic
-    stub to assert pruning fractions and determinism.
+    stub to assert pruning fractions and determinism.  ``engine`` selects
+    the knob space, cost model and measured ops — each engine is searched
+    (and cached) independently.
     """
     if budget is None:
         budget = SearchBudget.default()
@@ -201,15 +213,18 @@ def search_tuned_config(ids, vals, *, dim: int, k: int,
         budget = dataclasses.replace(SearchBudget.default(),
                                      max_timed=budget)
     if step_overhead_s is None:
-        import jax
+        if engine == "xla_blocked":
+            step_overhead_s = 0.0        # always compiled, no dispatch term
+        else:
+            import jax
 
-        step_overhead_s = (0.0 if jax.default_backend() == "tpu"
-                           else INTERPRET_STEP_OVERHEAD)
+            step_overhead_s = (0.0 if jax.default_backend() == "tpu"
+                               else INTERPRET_STEP_OVERHEAD)
 
     b = int(np.asarray(ids).shape[0])
     shape = KernelShape(b=min(b, budget.probe_rows),
                         p=int(np.asarray(ids).shape[1]), d=dim, k=k)
-    cands = candidate_space(shape)
+    cands = candidate_space(shape, engine)
     stats = SearchStats(n_candidates=len(cands))
 
     # --- analytic pass: feasibility + roofline lower bounds ---------------
@@ -259,23 +274,25 @@ def search_tuned_config(ids, vals, *, dim: int, k: int,
 
 def ensure_tuned(docs, *, k: int | None, mode: str = "cached",
                  budget: SearchBudget | int | None = None,
-                 seed: int = 0) -> TunedConfig | None:
+                 seed: int = 0, engine: str = "pallas") -> TunedConfig | None:
     """Resolve the tuned config for a corpus through the process cache.
 
     mode 'cached' — return the cached winner for this corpus signature, or
     None (caller falls back to defaults).  mode 'search' — on a cache miss,
     run the pruned search under ``budget`` and cache the winner.  Returns
-    None when ``k`` is unknown (nothing to tune against).
+    None when ``k`` is unknown (nothing to tune against).  The signature is
+    engine-qualified: each backend resolves (and caches) its own winner.
     """
     if mode not in ("cached", "search"):
         raise ValueError(f"tune mode must be 'cached' or 'search', "
                          f"got {mode!r}")
     if k is None:
         return None
-    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=k)
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=k,
+                           engine=engine)
     hit = TUNED_CACHE.get(sig)
     if hit is not None or mode == "cached":
         return hit
     winner, _ = search_tuned_config(docs.ids, docs.vals, dim=docs.dim, k=k,
-                                    budget=budget, seed=seed)
+                                    budget=budget, seed=seed, engine=engine)
     return TUNED_CACHE.put(sig, winner)

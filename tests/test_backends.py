@@ -30,7 +30,8 @@ from repro.core import lloyd
 from repro.kernels import ref as kref
 
 
-BACKEND_NAMES = sorted(BACKENDS)          # ["pallas", "reference"]
+BACKEND_NAMES = sorted(BACKENDS)    # ["pallas", "reference", "xla_blocked"]
+ACCEL_NAMES = [b for b in BACKEND_NAMES if b != "reference"]
 
 
 @pytest.fixture(scope="module")
@@ -47,20 +48,25 @@ def mid_state(small_corpus):
 
 @pytest.mark.parametrize("algo", sorted(ALGORITHMS))
 def test_backend_parity_matrix(mid_state, algo):
-    """reference × pallas produce identical assignments (and diagnostics)."""
+    """Every accelerated backend (pallas, xla_blocked) produces identical
+    assignments (and diagnostics) to the reference scan."""
     docs, index, state = mid_state
     outs = {}
     for backend in BACKEND_NAMES:
         outs[backend] = assignment_step(algo, docs, index, state.assign,
                                         state.rho_self, state.xstate,
                                         backend=backend)
-    ref, pal = outs["reference"], outs["pallas"]
-    assert (np.asarray(ref.assign) == np.asarray(pal.assign)).all()
-    assert (np.asarray(ref.n_candidates) == np.asarray(pal.n_candidates)).all()
-    # Mult counts integers, so the kernels' binarised matmuls are exact.
-    assert float(ref.mult) == float(pal.mult)
-    np.testing.assert_allclose(np.asarray(ref.rho), np.asarray(pal.rho),
-                               rtol=1e-5, atol=1e-5)
+    ref = outs["reference"]
+    for name in ACCEL_NAMES:
+        acc = outs[name]
+        assert (np.asarray(ref.assign) == np.asarray(acc.assign)).all(), name
+        assert (np.asarray(ref.n_candidates)
+                == np.asarray(acc.n_candidates)).all(), name
+        # Mult counts integers, so the kernels' binarised matmuls are exact.
+        assert float(ref.mult) == float(acc.mult), name
+        np.testing.assert_allclose(np.asarray(ref.rho), np.asarray(acc.rho),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"backend={name}")
 
 
 @pytest.mark.parametrize("algo", sorted(ALGORITHMS))
@@ -81,19 +87,26 @@ def test_update_phase_parity_matrix(mid_state, algo):
         nxt = assignment_step(algo, docs, new.index, new.assign,
                               new.rho_self, new.xstate, backend=backend)
         outs[backend] = (new, nxt)
-    ref_s, pal_s = outs["reference"][0], outs["pallas"][0]
-    assert (np.asarray(ref_s.assign) == np.asarray(pal_s.assign)).all()
-    assert (np.asarray(ref_s.index.moving)
-            == np.asarray(pal_s.index.moving)).all()
-    assert (np.asarray(ref_s.index.mf) == np.asarray(pal_s.index.mf)).all()
-    np.testing.assert_allclose(np.asarray(ref_s.index.means_t),
-                               np.asarray(pal_s.index.means_t),
-                               rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(ref_s.rho_self),
-                               np.asarray(pal_s.rho_self),
-                               rtol=1e-6, atol=1e-6)
-    ref_n, pal_n = outs["reference"][1], outs["pallas"][1]
-    assert (np.asarray(ref_n.assign) == np.asarray(pal_n.assign)).all()
+    ref_s = outs["reference"][0]
+    ref_n = outs["reference"][1]
+    for name in ACCEL_NAMES:
+        acc_s, acc_n = outs[name]
+        assert (np.asarray(ref_s.assign) == np.asarray(acc_s.assign)).all(), \
+            name
+        assert (np.asarray(ref_s.index.moving)
+                == np.asarray(acc_s.index.moving)).all(), name
+        assert (np.asarray(ref_s.index.mf)
+                == np.asarray(acc_s.index.mf)).all(), name
+        np.testing.assert_allclose(np.asarray(ref_s.index.means_t),
+                                   np.asarray(acc_s.index.means_t),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"backend={name}")
+        np.testing.assert_allclose(np.asarray(ref_s.rho_self),
+                                   np.asarray(acc_s.rho_self),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"backend={name}")
+        assert (np.asarray(ref_n.assign) == np.asarray(acc_n.assign)).all(), \
+            name
 
 
 def test_pallas_diag_is_fused_no_extra_launch(mid_state, monkeypatch):
@@ -151,6 +164,114 @@ def test_pallas_prepare_plan_keeps_exactness(mid_state):
             if key in base:
                 np.testing.assert_array_equal(np.asarray(base[key]),
                                               np.asarray(planned[key]))
+
+
+def test_xla_diag_is_fused_no_extra_launch(mid_state, monkeypatch):
+    """The xla_blocked engine keeps (and extends) the fused-diagnostic
+    contract: ``diag=True`` adds no extra op call, and the CS mode — three
+    ``sparse_sim`` launches on the Pallas backend — is ONE ``cs_gather``."""
+    from repro.kernels import xla_blocked as xb
+
+    docs, index, state = mid_state
+    calls = []
+    for name in ("sparse_sim", "esicp_gather", "cs_gather",
+                 "segment_update", "rho_gather"):
+        real = getattr(xb, name)
+
+        def wrapped(*a, _real=real, _name=name, **kw):
+            calls.append(_name)
+            return _real(*a, **kw)
+
+        monkeypatch.setattr(xb, name, wrapped)
+
+    bk = BACKENDS["xla_blocked"]
+    out = bk.accumulate(docs, index, state.xstate, mode="esicp", diag=True)
+    assert calls == ["esicp_gather"]
+    assert {"sims", "rho12", "y", "mult"} <= set(out)
+
+    calls.clear()
+    out = bk.accumulate(docs, index, state.xstate, mode="exact", diag=True)
+    assert calls == ["sparse_sim"]
+    assert {"sims", "mult"} <= set(out)
+
+    calls.clear()
+    out = bk.accumulate(docs, index, state.xstate, mode="cs", diag=True)
+    assert calls == ["cs_gather"]
+    assert {"sims", "rho1", "sq", "mult"} <= set(out)
+
+    calls.clear()
+    v_ta = state.rho_self * jnp.asarray(0.5, jnp.float32)
+    out = bk.accumulate(docs, index, state.xstate, mode="ta", v_ta=v_ta,
+                        diag=True)
+    assert calls == ["esicp_gather"]          # TA compiles natively here
+    assert {"sims", "rho12", "y", "mult"} <= set(out)
+
+    calls.clear()
+    nodiag = bk.accumulate(docs, index, state.xstate, mode="exact",
+                           diag=False)
+    assert calls == ["sparse_sim"]          # same launch count without diag
+    assert float(nodiag["mult"]) == 0.0
+
+
+def test_xla_prepare_plan_keeps_exactness(mid_state):
+    """xla_blocked plans: the engine-default prepare (head-less — plans are
+    a tuner opt-in for this engine) is bit-identical with and without the
+    plan; an explicit head-slab plan keeps integer accumulators exact and
+    float sums to reduction-order tolerance (the head split reorders the
+    additions of the similarity sums, by design)."""
+    from repro.kernels.plan import KernelPlan, prepare_plan
+
+    docs, index, state = mid_state
+    bk = BACKENDS["xla_blocked"]
+    plan = bk.prepare(docs)
+    assert isinstance(plan, KernelPlan) and plan.n_head == 0
+    for mode in ("exact", "esicp", "cs"):
+        base = bk.accumulate(docs, index, state.xstate, mode=mode, diag=True)
+        planned = bk.accumulate(docs, index, state.xstate, mode=mode,
+                                diag=True, plan=plan)
+        for key in sorted(base):
+            np.testing.assert_array_equal(np.asarray(base[key]),
+                                          np.asarray(planned[key]),
+                                          err_msg=f"{mode}/{key}")
+
+    hplan = prepare_plan(docs.ids, docs.vals, dim=docs.dim,
+                         head_bytes=1 << 30, with_counts=True)
+    assert hplan.n_head > 0
+    for mode in ("exact", "esicp"):
+        base = bk.accumulate(docs, index, state.xstate, mode=mode, diag=True)
+        headed = bk.accumulate(docs, index, state.xstate, mode=mode,
+                               diag=True, plan=hplan)
+        assert float(base["mult"]) == float(headed["mult"]), mode
+        for key in ("sims", "rho12", "y"):
+            if key in base:
+                np.testing.assert_allclose(np.asarray(base[key]),
+                                           np.asarray(headed[key]),
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{mode}/{key}")
+
+
+def test_streaming_resume_xla_blocked_parity(small_corpus, tmp_path):
+    """Streaming fit + mid-run checkpoint resume under the xla_blocked
+    backend lands on the same clustering as the reference backend."""
+    from repro.core.lloyd import streaming_fit
+    from repro.sparse import DocStore
+
+    docs, df, perm, topics = small_corpus
+    store = DocStore.from_docs(docs, chunk_size=375)       # 4 chunks
+    ref = streaming_fit(store, k=8, algo="esicp", max_iter=12,
+                        batch_size=375, seed=1, df=df)
+    ckpt = str(tmp_path / "ckpt")
+    part = streaming_fit(store, k=8, algo="esicp", max_iter=3,
+                         batch_size=375, seed=1, df=df,
+                         backend="xla_blocked", checkpoint_dir=ckpt,
+                         checkpoint_every=1)
+    assert not part.converged
+    resumed = streaming_fit(store, k=8, algo="esicp", max_iter=12,
+                            batch_size=375, seed=1, df=df,
+                            backend="xla_blocked", checkpoint_dir=ckpt,
+                            resume=True)
+    assert (np.asarray(resumed.assign) == np.asarray(ref.assign)).all()
+    assert resumed.n_iter == ref.n_iter
 
 
 def _update_case(rng, b, p, d, k, assign):
@@ -339,9 +460,15 @@ def test_fused_fit_matches_per_iteration_loop(small_corpus):
 
 
 def test_resolve_backend():
+    import jax
+
     assert resolve_backend("reference").name == "reference"
     assert resolve_backend("pallas").name == "pallas"
-    assert resolve_backend("auto").name in ("reference", "pallas")
+    assert resolve_backend("xla_blocked").name == "xla_blocked"
+    # 'auto' = compiled engine for the platform: pallas only where it
+    # lowers natively (TPU), the XLA-blocked twins everywhere else.
+    expect = "pallas" if jax.default_backend() == "tpu" else "xla_blocked"
+    assert resolve_backend("auto").name == expect
     assert resolve_backend(BACKENDS["pallas"]).name == "pallas"
     with pytest.raises(ValueError):
         resolve_backend("no-such-backend")
@@ -396,7 +523,7 @@ def test_cluster_engine_refit_rebuilds_index(small_corpus, backend):
 
 
 def test_distributed_backend_pallas_smoke():
-    """shard_map step with the kernel backend matches the reference backend."""
+    """shard_map step with each kernel backend matches the reference one."""
     from repro.data import make_corpus, CorpusSpec
     from repro.launch.mesh import make_test_mesh
     from repro.distributed import mesh_fit
@@ -407,7 +534,8 @@ def test_distributed_backend_pallas_smoke():
     mesh = make_test_mesh((2, 2), ("data", "model"))
     ref, _, _, _ = mesh_fit(docs, 8, mesh, algo="esicp", max_iter=4,
                             obj_chunk=64, seed=1, df=df)
-    pal, _, _, _ = mesh_fit(docs, 8, mesh, algo="esicp", max_iter=4,
-                            obj_chunk=64, seed=1, df=df, backend="pallas")
-    assert (np.asarray(ref.assign)[:docs.n_docs]
-            == np.asarray(pal.assign)[:docs.n_docs]).all()
+    for backend in ACCEL_NAMES:
+        acc, _, _, _ = mesh_fit(docs, 8, mesh, algo="esicp", max_iter=4,
+                                obj_chunk=64, seed=1, df=df, backend=backend)
+        assert (np.asarray(ref.assign)[:docs.n_docs]
+                == np.asarray(acc.assign)[:docs.n_docs]).all(), backend

@@ -1,12 +1,16 @@
 """Hypothesis sweep of NON-block-aligned shapes through every clustering
-wrapper in kernels/ops.py (ISSUE 5 satellite).
+wrapper in kernels/ops.py (ISSUE 5 satellite) AND their compiled
+kernels/xla_blocked.py twins (ISSUE 10 satellite).
 
 The wrappers promise: pad to block multiples, launch, slice back — for ANY
 logical (B, K, D, P), including P that is not an 8-multiple (the kernels'
 one hard alignment) and B/K/D that straddle block boundaries, with or
 without a prepared plan, with or without the fused diagnostics.  This file
 pins that padding/slicing contract against the pure-jnp oracles so a grid
-or BlockSpec change can never silently narrow it.
+or BlockSpec change can never silently narrow it.  The xla_blocked twins
+ride the same ragged cases (their internal padding is the P-chunk split +
+the head-plan D padding) and accept the Pallas geometry kwargs as inert
+compatibility arguments — asserted here by passing them.
 """
 import numpy as np
 import pytest
@@ -18,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import (sparse_sim, esicp_gather, esicp_filter,
                            segment_update, rho_gather, ref)
+from repro.kernels import xla_blocked as xb
 from repro.kernels.plan import prepare_plan
 
 hypothesis.settings.register_profile(
@@ -122,6 +127,115 @@ def test_segment_update_any_shape(case):
 def test_rho_gather_any_shape(case):
     ids, vals, means_t, assign, t_th, v_th, plan = case
     rho = rho_gather(assign, ids, vals, means_t, plan=plan, **BLK)
+    exp = ref.rho_gather(assign, ids, vals, means_t)
+    np.testing.assert_allclose(np.asarray(rho), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.asarray(rho)[np.asarray(assign) == means_t.shape[1]]
+            == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# xla_blocked twins: same ragged cases, same oracles, compiled XLA engine.
+# The ragged plans carry head slabs (head_bytes=1<<30) but no count twins,
+# so diag calls exercise the layout-mismatch fallback too.
+# ---------------------------------------------------------------------------
+
+@given(ragged_case())
+def test_xla_sparse_sim_any_shape(case):
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    sims, counts = xb.sparse_sim(ids, vals, means_t, plan=plan, diag=True,
+                                 **BLK)
+    assert sims.shape == (ids.shape[0], means_t.shape[1])
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-4, atol=1e-4)
+    live01 = (np.asarray(vals) != 0).astype(np.float32)
+    expc = ref.sparse_sim(ids, jnp.asarray(live01),
+                          (means_t > 0).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(expc),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(ragged_case())
+def test_xla_esicp_gather_any_shape(case):
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    r12, y, sims = xb.esicp_gather(ids, vals, means_t, t_th, v_th, plan=plan,
+                                   with_sims=True, **BLK)
+    e12, ey = ref.esicp_gather(ids, vals, means_t, t_th, v_th)
+    np.testing.assert_allclose(np.asarray(r12), np.asarray(e12),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ey),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(ragged_case())
+def test_xla_esicp_gather_per_object_threshold(case):
+    """The TA form (v_ta per object) — natively compiled in this engine;
+    the head path must stay disengaged (asserted via exactness alone)."""
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    rng = np.random.default_rng(7)
+    v_ta = rng.random(ids.shape[0]).astype(np.float32)
+    r12, y = xb.esicp_gather(ids, vals, means_t, t_th, v_th,
+                             v_ta=jnp.asarray(v_ta), plan=plan, **BLK)
+    idn, vn, mt = np.asarray(ids), np.asarray(vals), np.asarray(means_t)
+    rows = mt[idn]                                    # (B, P, K)
+    tail = (idn >= t_th)[..., None]
+    hi = rows >= v_ta[:, None, None]
+    exact = np.where(tail, hi, True)
+    e12 = np.sum(np.where(exact, vn[..., None] * rows, 0.0), axis=1)
+    ey = np.sum(np.where(tail & ~hi, vn[..., None], 0.0), axis=1)
+    np.testing.assert_allclose(np.asarray(r12), e12, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), ey, rtol=1e-4, atol=1e-4)
+
+
+@given(ragged_case())
+def test_xla_cs_gather_any_shape(case):
+    """The fused CS op vs slot-semantics oracles: rho1 drops tail-slot
+    contributions, sq sums means² over every slot with id >= t_th — live
+    or dead (the reference scan's dead-slot quirk, which the op's internal
+    chunk padding must NOT add to)."""
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    sims, rho1, sq, counts = xb.cs_gather(ids, vals, means_t, t_th,
+                                          plan=plan, diag=True)
+    np.testing.assert_allclose(np.asarray(sims),
+                               np.asarray(ref.sparse_sim(ids, vals, means_t)),
+                               rtol=1e-4, atol=1e-4)
+    head_vals = jnp.where(ids >= t_th, 0.0, vals)
+    np.testing.assert_allclose(
+        np.asarray(rho1),
+        np.asarray(ref.sparse_sim(ids, head_vals, means_t)),
+        rtol=1e-4, atol=1e-4)
+    tail01 = (np.asarray(ids) >= t_th).astype(np.float32)  # per SLOT, not live
+    np.testing.assert_allclose(
+        np.asarray(sq),
+        np.asarray(ref.sparse_sim(ids, jnp.asarray(tail01), means_t ** 2)),
+        rtol=1e-4, atol=1e-4)
+    live01 = (np.asarray(vals) != 0).astype(np.float32)
+    expc = ref.sparse_sim(ids, jnp.asarray(live01),
+                          (means_t > 0).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(expc),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(ragged_case())
+def test_xla_segment_update_any_shape(case):
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    k, d = means_t.shape[1], means_t.shape[0]
+    lam = xb.segment_update(assign, ids, vals, k=k, d=d, plan=plan, **BLK)
+    assert lam.shape == (k, d)
+    np.testing.assert_allclose(
+        np.asarray(lam), np.asarray(ref.segment_update(assign, ids, vals,
+                                                       k, d)),
+        rtol=1e-4, atol=1e-4)
+
+
+@given(ragged_case())
+def test_xla_rho_gather_any_shape(case):
+    ids, vals, means_t, assign, t_th, v_th, plan = case
+    rho = xb.rho_gather(assign, ids, vals, means_t, plan=plan, **BLK)
     exp = ref.rho_gather(assign, ids, vals, means_t)
     np.testing.assert_allclose(np.asarray(rho), np.asarray(exp),
                                rtol=1e-4, atol=1e-4)

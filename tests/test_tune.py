@@ -259,3 +259,103 @@ def test_fitted_model_roundtrips_tuned_config(tmp_path):
     again = SphericalKMeans(8, algo="esicp", backend="pallas", max_iter=3,
                             batch_size=192, tune="cached").fit(docs)
     np.testing.assert_array_equal(loaded.labels, again.labels_)
+
+
+# ---------------------------------------------------------------------------
+# The engine axis (ISSUE 10): per-engine knob spaces, cache regimes and
+# search dispatch — a Pallas winner must never poison an XLA-blocked fit.
+# ---------------------------------------------------------------------------
+
+def test_tuned_config_engine_validates_and_roundtrips():
+    from repro.tune import DEFAULT_XLA_TUNED, ENGINES, default_tuned
+
+    with pytest.raises(ValueError):
+        TunedConfig(engine="cuda")
+    assert DEFAULT_TUNED.engine == "pallas"
+    assert DEFAULT_XLA_TUNED.engine == "xla_blocked"
+    assert DEFAULT_XLA_TUNED.head_bytes == 0      # head is a tuner opt-in
+    for engine in ENGINES:
+        cfg = default_tuned(engine)
+        assert cfg.engine == engine
+        assert TunedConfig.from_dict(cfg.to_dict()) == cfg
+    # Pre-engine artifacts (no 'engine' key) load as the Pallas default.
+    legacy = DEFAULT_TUNED.to_dict()
+    legacy.pop("engine", None)
+    assert TunedConfig.from_dict(legacy).engine == "pallas"
+
+
+def test_engine_qualified_signature_isolates_cache_regimes():
+    docs = _zipf_docs()
+    sig_p = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8)
+    sig_x = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8,
+                             engine="xla_blocked")
+    assert sig_p.endswith("/pallas")
+    assert sig_x.endswith("/xla_blocked")
+    assert sig_p != sig_x
+    TUNED_CACHE.put(sig_p, TunedConfig(b_blk=64, source="search"))
+    assert TUNED_CACHE.get(sig_x) is None
+
+
+def test_candidate_space_xla_collapses_grid_knobs():
+    """The XLA engine has no launch grid: its geometry key drops the
+    B/K-block knobs, so the deduplicated space is the head-split points —
+    far smaller than the Pallas grid, every candidate engine-tagged."""
+    shape = KernelShape(b=256, p=16, d=1024, k=16)
+    pal = candidate_space(shape)
+    xla = candidate_space(shape, engine="xla_blocked")
+    assert all(c.engine == "pallas" for c in pal)
+    assert all(c.engine == "xla_blocked" for c in xla)
+    assert xla[0] == TunedConfig(engine="xla_blocked", head_bytes=0)
+    assert len(xla) < len(pal)
+
+
+def test_ensure_tuned_engine_axis():
+    from repro.tune.search import ensure_tuned
+
+    docs = _zipf_docs()
+    sig_p = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8)
+    seeded = TUNED_CACHE.put(sig_p, TunedConfig(b_blk=64, source="search"))
+    # The pallas regime hits; the xla regime stays a cold miss.
+    assert ensure_tuned(docs, k=8, mode="cached") == seeded
+    assert ensure_tuned(docs, k=8, mode="cached",
+                        engine="xla_blocked") is None
+    # A searched xla winner is engine-tagged and cached under its own key.
+    budget = SearchBudget(max_timed=2, repeat=1, probe_rows=128)
+    win = ensure_tuned(docs, k=8, mode="search", budget=budget,
+                       engine="xla_blocked")
+    assert win.engine == "xla_blocked"
+    assert win.signature.endswith("/xla_blocked")
+    assert ensure_tuned(docs, k=8, mode="cached") == seeded   # undisturbed
+
+
+def test_xla_search_times_xla_ops():
+    """search_tuned_config(engine='xla_blocked') measures the XLA twins and
+    returns an engine-tagged winner deterministically."""
+    docs = _zipf_docs()
+    budget = SearchBudget(max_timed=2, repeat=1, probe_rows=128)
+    win, stats = search_tuned_config(docs.ids, docs.vals, dim=docs.dim,
+                                     k=16, budget=budget,
+                                     engine="xla_blocked")
+    assert win.engine == "xla_blocked"
+    assert stats.n_timed <= budget.max_timed
+    assert stats.n_pruned == stats.n_candidates - stats.n_timed
+    assert stats.best_measured_s > 0.0
+
+
+def test_xla_prepare_plan_headless_by_default():
+    """XlaBlockedBackend.prepare: engine default is a head-less plan (the
+    head-slab GEMM must be earned through the measured search), while a
+    cached engine winner with a head budget flows into the plan."""
+    from repro.core.backends import BACKENDS
+
+    docs = _zipf_docs()
+    plain = BACKENDS["xla_blocked"].prepare(docs)
+    assert plain.n_head == 0 and plain.tuned is None
+    sig = corpus_signature(docs.ids, docs.vals, dim=docs.dim, k=8,
+                           engine="xla_blocked")
+    seeded = TUNED_CACHE.put(
+        sig, TunedConfig(engine="xla_blocked", head_bytes=1 << 30,
+                         source="search"))
+    plan = BACKENDS["xla_blocked"].prepare(docs, k=8, tune="cached")
+    assert plan.tuned == seeded
+    assert plan.n_head > 0
